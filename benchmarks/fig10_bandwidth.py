@@ -1,0 +1,60 @@
+"""Paper Fig. 10: sensitivity to cross-cluster bandwidth (3-10 Gbps).
+
+HAPT's step time should stay ~flat until c approaches t_max (paper: knee at
+~3 Gbps), while the no-overlap baseline degrades ~1/bandwidth."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    CASE_MODEL, GLOBAL_BATCH, N_MICROBATCHES, SEQ_LEN, cached, emit_csv,
+    hetero_cluster, plan_hapt,
+)
+from repro.configs import get_config
+from repro.core.baselines import plan_coarse, plan_coarse_sync
+
+ARCH = "gpt-30b"
+DIMS = (2, 8, 2, 8)
+BWS = [3, 4, 5, 7, 10]
+
+
+def run():
+    rows = []
+    for bw in BWS:
+        cluster = hetero_cluster(*DIMS, cross_gbps=bw)
+
+        def bench(bw=bw, cluster=cluster):
+            h = plan_hapt(cluster, ARCH)
+            cs = plan_coarse_sync(cluster, get_config(ARCH), seq_len=SEQ_LEN,
+                                  global_batch=GLOBAL_BATCH,
+                                  n_microbatches=N_MICROBATCHES,
+                                  min_submesh_devices=2)
+            ce = plan_coarse(cluster, get_config(ARCH), seq_len=SEQ_LEN,
+                             global_batch=GLOBAL_BATCH,
+                             n_microbatches=N_MICROBATCHES,
+                             min_submesh_devices=2)
+            return {"hapt": h.est_step_time, "sync": cs.est_step_time,
+                    "eager": ce.est_step_time,
+                    "hapt_counts": h.warmup_counts}
+
+        r = cached(f"fig10_bw{bw}", bench)
+        for sysname in ("hapt", "eager", "sync"):
+            rows.append({"label": f"bw{bw}gbps/{sysname}",
+                         "step_time_s": r[sysname],
+                         "derived": f"counts={r['hapt_counts']}"
+                         if sysname == "hapt" else ""})
+    # degradation ratios 10 -> 3 Gbps
+    r10 = cached("fig10_bw10", lambda: None)
+    r3 = cached("fig10_bw3", lambda: None)
+    rows.append({
+        "label": "degradation_10to3gbps", "step_time_s": 0.0,
+        "derived": f"hapt={r3['hapt'] / r10['hapt']:.2f}x;"
+                   f"sync={r3['sync'] / r10['sync']:.2f}x (paper: hapt ~flat,"
+                   " sync ~1/bw)"})
+    return rows
+
+
+def main():
+    emit_csv(run())
+
+
+if __name__ == "__main__":
+    main()

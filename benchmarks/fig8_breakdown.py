@@ -1,0 +1,84 @@
+"""Paper Fig. 8: stage-wise breakdown (compute / blocking comm / idle) and
+the eta load-balance metric + boundary-stage overlap ratio, per system,
+on the hc4 configuration (paper uses Fig. 7h's)."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    CASE_MODEL, GLOBAL_BATCH, N_MICROBATCHES, SEQ_LEN, cached, emit_csv,
+    hetero_cluster, plan_hapt,
+)
+from repro.configs import get_config
+from repro.core.baselines import (
+    plan_blind_eager, plan_coarse_sync, plan_uniform,
+)
+from repro.core.h1f1b import h1f1b_counts
+from repro.core.pipesim import eta_load_balance, simulate
+
+CASE = "hc3_2x8A+2x8V"
+DIMS = (2, 8, 2, 8)
+ARCH = CASE_MODEL[CASE]
+
+
+def _sim(strat, cluster, no_overlap=False):
+    res = simulate([s.t_f for s in strat.stages],
+                   [s.t_b for s in strat.stages],
+                   strat.c_links, strat.n_microbatches, strat.warmup_counts,
+                   no_overlap=no_overlap)
+    eta = eta_load_balance(
+        res.stage_compute,
+        [s.n_devices * cluster.subclusters[s.cluster_idx].device.peak_flops
+         for s in strat.stages])
+    return res, eta
+
+
+def run():
+    cluster = hetero_cluster(*DIMS)
+    rows = []
+
+    def bench():
+        out = []
+        systems = {}
+        systems["hapt"] = (plan_hapt(cluster, ARCH), False)
+        try:
+            systems["uniform-1f1b"] = (
+                plan_uniform(cluster, get_config(ARCH), seq_len=SEQ_LEN,
+                             global_batch=GLOBAL_BATCH,
+                             n_microbatches=N_MICROBATCHES), False)
+        except ValueError:
+            pass
+        systems["blind-eager (Alpa-like)"] = (
+            plan_blind_eager(cluster, get_config(ARCH), seq_len=SEQ_LEN,
+                             global_batch=GLOBAL_BATCH,
+                             n_microbatches=N_MICROBATCHES,
+                             min_submesh_devices=2), False)
+        systems["coarse-sync"] = (
+            plan_coarse_sync(cluster, get_config(ARCH), seq_len=SEQ_LEN,
+                             global_batch=GLOBAL_BATCH,
+                             n_microbatches=N_MICROBATCHES,
+                             min_submesh_devices=2), True)
+        for name, (strat, no_ov) in systems.items():
+            res, eta = _sim(strat, cluster, no_overlap=no_ov)
+            for i in range(len(strat.stages)):
+                out.append({
+                    "label": f"{name}/stage{i}",
+                    "step_time_s": res.makespan,
+                    "derived": f"compute={res.stage_compute[i]:.2f}s;"
+                               f"blocking_comm={res.stage_comm_blocking[i]:.2f}s;"
+                               f"idle={res.stage_idle[i]:.2f}s",
+                })
+            out.append({
+                "label": f"{name}/summary", "step_time_s": res.makespan,
+                "derived": f"eta={eta * 100:.1f}%;"
+                           f"overlap={res.overlap_ratio * 100:.1f}%",
+            })
+        return {"rows": out}
+
+    return cached("fig8_breakdown", bench)["rows"]
+
+
+def main():
+    emit_csv(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from the dry-run /
+hillclimb JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report          # prints the sections
+  PYTHONPATH=src python -m benchmarks.report --write  # splices EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import CHIPS, HBM_BW, LINK_BW, PEAK, analyze, model_flops  # noqa: E402
+from repro.configs import get_config, list_archs                                    # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MARK = "## §Dry-run"
+
+
+def _load(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_section() -> str:
+    lines = [
+        "## §Dry-run — multi-pod lower + compile (deliverable e)",
+        "",
+        "Every applicable (architecture × shape × mesh) cell is "
+        "`jit(...).lower().compile()`d against the production meshes; "
+        "`memory_analysis()` proves per-device fit (v5e = 16 GiB; pipeline "
+        "train cells carry f32 activations due to an XLA *CPU* compiler "
+        "workaround — on TPU they are bf16, halving the activation part).",
+        "",
+        "| arch | shape | single-pod (16,16) | multi-pod (2,16,16) | "
+        "peak GiB/dev (single / multi) |",
+        "|---|---|---|---|---|",
+    ]
+    n_ok = n_total = 0
+    for arch in list_archs(assigned_only=True):
+        for shape in get_config(arch).shapes():
+            row = [arch, shape.name]
+            mems = []
+            for mk in ("single", "multi"):
+                n_total += 1
+                rec = _load(os.path.join(
+                    ROOT, "results", "dryrun", f"{arch}_{shape.name}_{mk}.json"))
+                if rec and rec.get("ok"):
+                    n_ok += 1
+                    row.append("OK")
+                    mems.append(f"{rec['memory']['peak_per_device'] / 2**30:.1f}")
+                else:
+                    row.append("FAIL" if rec else "—")
+                    mems.append("—")
+            lines.append("| " + " | ".join(row) + " | " + " / ".join(mems) + " |")
+    lines += ["", f"**{n_ok}/{n_total} cells compiled.** Skipped long_500k "
+              "cells (pure full-attention archs) are recorded in DESIGN.md "
+              "§Arch-applicability; they do not appear above."]
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    lines = [
+        "## §Roofline (deliverable g) — single-pod (16,16), per step",
+        "",
+        "Terms: `t_comp = HLO_FLOPs/(chip·197TF)`, `t_mem = HLO_bytes/"
+        "(chip·819GB/s)`, `t_coll = collective_bytes/(chip·50GB/s)`; all "
+        "per-device from the compiled, fully-unrolled analysis pass (loop "
+        "trip counts folded in — XLA cost analysis alone undercounts loops). "
+        "`useful` = MODEL_FLOPS/(HLO_FLOPs·chips) with MODEL_FLOPS = 6·N_act·D "
+        "(train) / 2·N_act·D (inference). `MFU bound` = useful peak fraction "
+        "attainable under the dominant term. NOTE: XLA CPU 'bytes accessed' "
+        "counts every HLO op's operands (no TPU-style fusion), so `t_mem` is "
+        "a loose upper bound; `t_coll` and `t_comp` are layout-faithful.",
+        "",
+        "| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+        "useful | MFU bound | mem GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_archs(assigned_only=True):
+        for shape in get_config(arch).shapes():
+            rec = _load(os.path.join(
+                ROOT, "results", "dryrun", f"{arch}_{shape.name}_single.json"))
+            if not rec or not rec.get("ok") or "flops_per_device" not in rec:
+                lines.append(f"| {arch} | {shape.name} | — | — | — | — | — | — | — |")
+                continue
+            a = analyze(rec)
+            lines.append(
+                f"| {arch} | {shape.name} | {a['t_compute_s']*1e3:.0f} "
+                f"| {a['t_memory_s']*1e3:.0f} | {a['t_collective_s']*1e3:.0f} "
+                f"| {a['dominant']} | {a['useful_flops_ratio']:.2f} "
+                f"| {a['mfu_bound']:.3f} | {a['peak_mem_gib']:.1f}"
+                f"{'' if a['fits_16g'] else ' (!)'} |")
+    return "\n".join(lines)
+
+
+def perf_rows(tag: str, paths: List[str]) -> List[str]:
+    out = []
+    for p in paths:
+        rec = _load(p)
+        if not rec or not rec.get("ok"):
+            continue
+        a = analyze(rec)
+        out.append(
+            f"| {tag} | {a['t_compute_s']*1e3:.0f} | {a['t_memory_s']*1e3:.0f} "
+            f"| {a['t_collective_s']*1e3:.0f} | {a['dominant']} "
+            f"| {a['mfu_bound']:.3f} | {a['peak_mem_gib']:.1f} |")
+    return out
+
+
+def main() -> None:
+    sections = dryrun_section() + "\n\n" + roofline_section()
+    if "--write" in sys.argv:
+        path = os.path.join(ROOT, "EXPERIMENTS.md")
+        with open(path) as f:
+            text = f.read()
+        head = text.split(MARK)[0]
+        perf = ""
+        if "## §Perf" in text:
+            perf = "## §Perf" + text.split("## §Perf", 1)[1]
+        with open(path, "w") as f:
+            f.write(head + sections + "\n\n" + perf)
+        print("EXPERIMENTS.md updated")
+    else:
+        print(sections)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
+
+Terms (seconds, per step, from per-device compiled analyses):
+  t_compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16, v5e)
+  t_memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  t_collective = collective_bytes_per_device / link_bw      (~50 GB/s ICI)
+
+Also reports MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active
+params, the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips), and the
+roofline fraction = t_compute / max(terms) (attainable MFU bound under the
+dominant resource)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import RESULTS_DIR, emit_csv
+from repro.configs import get_config, get_shape
+
+PEAK = 197e12        # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9       # bytes/s
+LINK_BW = 50e9       # bytes/s per ICI link
+CHIPS = {"single": 256, "multi": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_cells(out_dir: Optional[str] = None) -> List[Dict]:
+    out_dir = out_dir or os.path.join(RESULTS_DIR, "dryrun")
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok") or "flops_per_device" not in rec:
+        return None
+    chips = CHIPS[rec["mesh"]]
+    t_comp = rec["flops_per_device"] / PEAK
+    t_mem = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(rec["flops_per_device"] * chips, 1.0)
+    frac = t_comp / max(max(terms.values()), 1e-30)
+    # attainable MFU: useful fraction of peak while bound by dominant term
+    mfu_bound = (mf / chips / PEAK) / max(terms.values())
+    return {
+        "label": f'{rec["arch"]}/{rec["shape"]}/{rec["mesh"]}',
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "mfu_bound": mfu_bound,
+        "peak_mem_gib": rec["memory"]["peak_per_device"] / 2 ** 30,
+        "fits_16g": rec["memory"]["peak_per_device"] <= 16 * 2 ** 30,
+        "step_time_s": max(terms.values()),
+    }
+
+
+def run() -> List[Dict]:
+    rows = []
+    for rec in load_cells():
+        if rec.get("mesh") != "single":
+            continue  # roofline scope is single-pod (multi = compile proof)
+        a = analyze(rec)
+        if a is None:
+            status = ("compile-only" if rec.get("ok")
+                      else f"FAIL:{rec.get('error', '?')[:60]}")
+            rows.append({"label": f'{rec["arch"]}/{rec["shape"]}/{rec["mesh"]}',
+                         "step_time_s": 0.0, "derived": status})
+            continue
+        a["derived"] = (f"dom={a['dominant']};mfu_bound={a['mfu_bound']:.2f};"
+                        f"useful={a['useful_flops_ratio']:.2f};"
+                        f"mem={a['peak_mem_gib']:.1f}GiB"
+                        f"{'' if a['fits_16g'] else '(OVER)'}")
+        rows.append(a)
+    return rows
+
+
+def table() -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    lines = ["| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) |"
+             " dominant | useful | MFU bound | mem GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in run():
+        if "dominant" not in r:
+            lines.append(f"| {r['label']} | | | | | | FAIL | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s'] * 1e3:.1f} | {r['t_memory_s'] * 1e3:.1f} "
+            f"| {r['t_collective_s'] * 1e3:.1f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.2f} "
+            f"| {r['peak_mem_gib']:.1f}{'' if r['fits_16g'] else ' (!)'} |")
+    return "\n".join(lines)
+
+
+def main():
+    emit_csv(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper §6.6: planning overhead with/without HAPT's optimizations.
+
+Measures wall-clock of profiling and DP search at fine granularity:
+  - zero-redundant aliasing ON vs OFF (unique-evaluation counts);
+  - bidirectional t_max pruning + batched parallel eval ON vs naive
+    (evaluate every candidate serially).
+Paper: optimizations cut planning from >100 h to ~23 min at #L=146."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached, emit_csv, hetero_cluster
+from repro.configs import get_config
+from repro.core.dp_search import SearchConfig, _DPContext, _dp_eval, search
+from repro.core.layering import build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.profiler import ZeroRedundantProfiler
+
+ARCH = "gpt-30b"
+DIMS = (2, 8, 2, 8)
+GRAN = 96
+
+
+def run():
+    cluster = hetero_cluster(*DIMS)
+    ops = build_op_sequence(get_config(ARCH), seq_len=1024)
+    layers = build_layers(ops, GRAN)
+    mb_tokens = 8192
+
+    def bench():
+        out = {}
+        t0 = time.time()
+        prof = ZeroRedundantProfiler(cluster, layers, mb_tokens,
+                                     min_submesh_devices=2)
+        tables = prof.profile()
+        out["profile_s"] = time.time() - t0
+        out["stats"] = {
+            "candidates": tables.stats.n_candidates,
+            "unique": tables.stats.n_unique_profiled,
+            "aliased": tables.stats.n_aliased,
+            "dedup_ratio": tables.stats.dedup_ratio,
+        }
+
+        # optimized search (pruning + parallel batches)
+        scfg = SearchConfig(n_microbatches=128, n_workers=6)
+        t0 = time.time()
+        strat = search(cluster, tables, mb_tokens, scfg)
+        out["search_optimized_s"] = time.time() - t0
+        out["n_tmax_evaluated"] = strat.planner_meta["n_tmax_evaluated"]
+
+        # naive search: every candidate t_max, serial (capped sample for
+        # tractability; extrapolated)
+        ctx = _DPContext(cluster, tables, scfg)
+        vals = np.unique(ctx.t_tab[tables.feasible].round(6))
+        sample = vals[:: max(1, len(vals) // 24)][:24]
+        t0 = time.time()
+        for t in sample:
+            _dp_eval(ctx, float(t))
+        per_eval = (time.time() - t0) / len(sample)
+        out["search_naive_extrapolated_s"] = per_eval * len(vals)
+        out["n_tmax_naive"] = int(len(vals))
+        return out
+
+    r = cached("search_overhead", bench)
+    rows = [
+        {"label": "profiling", "step_time_s": r["profile_s"],
+         "derived": f"dedup={r['stats']['dedup_ratio'] * 100:.0f}%;"
+                    f"unique={r['stats']['unique']}/"
+                    f"{r['stats']['candidates']}"},
+        {"label": "search_optimized", "step_time_s": r["search_optimized_s"],
+         "derived": f"tmax_evaluated={r['n_tmax_evaluated']}"},
+        {"label": "search_naive", "step_time_s":
+         r["search_naive_extrapolated_s"],
+         "derived": f"tmax_candidates={r['n_tmax_naive']} (extrapolated)"},
+        {"label": "search_speedup", "step_time_s": 0.0,
+         "derived": f"{r['search_naive_extrapolated_s'] / max(r['search_optimized_s'], 1e-9):.0f}x"
+                    " (paper: >100h -> 133s)"},
+    ]
+    return rows
+
+
+def main():
+    emit_csv(run())
+
+
+if __name__ == "__main__":
+    main()

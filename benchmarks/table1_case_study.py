@@ -1,0 +1,96 @@
+"""Paper Table 1 + Fig. 3: the §2.2.2 case study.
+
+GPT on DeviceMesh_A100(2,2) + DeviceMesh_V100(1,2), 5 Gbps cross-link.
+Coarse (#L=8) vs fine (#L~128) inter-op planning; classic vs Eager vs H-1F1B
+scheduling.  The paper reports ~40% throughput gain from fine granularity
+(assuming full overlap) and bubble-free steady phase under the tailored
+schedule (Fig. 3d)."""
+from __future__ import annotations
+
+from benchmarks.common import cached, emit_csv, strategy_row
+from repro.configs import get_config
+from repro.core import paper_case_study_cluster
+from repro.core.h1f1b import classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts
+from repro.core.pipesim import ascii_timeline, simulate
+from repro.core.planner import HAPTPlanner, PlannerConfig
+
+ARCH = "gpt-2b"   # the 6-GPU case-study cluster bounds the model scale
+B = 128
+
+
+def _plan(granularity: int):
+    # the paper's case study restricts candidate meshes to (1,2) submeshes
+    # (Table 1) -> exactly 3 stages: mesh_V100(1,2) + 2x mesh_A100(1,2)
+    cluster = paper_case_study_cluster(cross_gbps=5.0)
+    pcfg = PlannerConfig(granularity=granularity, n_microbatches=B,
+                         min_submesh_devices=2, max_submesh_devices=2)
+    pcfg.search.n_workers = 4
+    return HAPTPlanner(cluster, pcfg).plan(
+        get_config(ARCH), seq_len=1024, global_batch=B)
+
+
+def run():
+    rows = []
+    strats = {}
+    for gran, label in [(8, "coarse_L8"), (128, "fine_L128")]:
+        def fn(g=gran, lab=label):
+            s = _plan(g)
+            return {**strategy_row(lab, s),
+                    "stages": [(st.layer_start, st.layer_end, st.cluster_idx)
+                               for st in s.stages],
+                    "c_links": s.c_links,
+                    "t_stage": [st.t for st in s.stages],
+                    "t_f": [st.t_f for st in s.stages],
+                    "t_b": [st.t_b for st in s.stages]}
+        r = cached(f"table1_{label}", fn)
+        strats[label] = r
+        rows.append(r)
+
+    # Table 1's imbalance metric: longest/shortest stage cost ratio
+    for r in rows:
+        ts = r["t_stage"]
+        r["imbalance"] = max(ts) / min(ts)
+        r["derived"] = f"imbalance={r['imbalance']:.2f};eta={r['eta']:.3f}"
+
+    speedup = rows[0]["step_time_s"] / rows[1]["step_time_s"]
+    rows.append({"label": "fine_vs_coarse_speedup", "step_time_s": 0.0,
+                 "derived": f"{(speedup - 1) * 100:.1f}% (paper: ~40.1%)"})
+
+    # Validate the PAPER'S OWN Table-1 arithmetic through our simulator:
+    # coarse stage costs {1.65t, t, t} vs fine {1.13t, 1.10t, 1.10t}, B=128,
+    # full overlap -> paper reports 40.1% throughput improvement.
+    def paper_numbers():
+        t = 1.0
+        fill = lambda ts: simulate([x * 0.33 for x in ts],
+                                   [x * 0.67 for x in ts],
+                                   [0.0, 0.0], B, [3, 2, 1]).makespan
+        t_coarse = fill([1.65 * t, t, t])
+        t_fine = fill([1.13 * t, 1.10 * t, 1.10 * t])
+        return {"coarse": t_coarse, "fine": t_fine,
+                "improvement_pct": (t_coarse / t_fine - 1) * 100}
+    pn = cached("table1_paper_arithmetic", paper_numbers)
+    rows.append({"label": "paper_table1_replay", "step_time_s": 0.0,
+                 "derived": f"improvement={pn['improvement_pct']:.1f}%"
+                            " (paper claims 40.1% from its Table 1 costs)"})
+
+    # Fig 3(c)/(d): schedulers on the fine-grained plan
+    fine = strats["fine_L128"]
+    tf, tb, c = fine["t_f"], fine["t_b"], fine["c_links"]
+    S = len(tf)
+    for label, counts in [
+            ("fig3_classic_1f1b", classic_1f1b_counts(S, B)),
+            ("fig3_eager_1f1b", eager_1f1b_counts(S, B)),
+            ("fig3_h1f1b", h1f1b_counts([a + b for a, b in zip(tf, tb)], c, B))]:
+        res = simulate(tf, tb, c, B, counts)
+        rows.append({"label": label, "step_time_s": res.makespan,
+                     "derived": f"overlap={res.overlap_ratio:.2f};"
+                                f"counts={counts}"})
+    return rows
+
+
+def main():
+    emit_csv(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Heterogeneous-cluster planning tour: the paper's clusters AND the
+TPU multi-pod / mixed-generation targets; shows how the plan shifts with
+cross-link bandwidth and how replanning handles a degraded pod (straggler /
+elastic-scaling story).
+
+  PYTHONPATH=src python examples/plan_hetero_cluster.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core import HAPTPlanner, PlannerConfig
+from repro.core.cluster import heterogeneous_tpu_cluster, paper_eval_cluster
+
+
+def plan(cluster, arch="gpt-15b", granularity=64, B=64, min_sub=2):
+    pcfg = PlannerConfig(granularity=granularity, n_microbatches=B,
+                         min_submesh_devices=min_sub)
+    pcfg.search.n_workers = 4
+    return HAPTPlanner(cluster, pcfg).plan(
+        get_config(arch), seq_len=1024, global_batch=B)
+
+
+def show(tag, strat):
+    print(f"\n=== {tag} ===")
+    print(strat.describe())
+
+
+# 1. the paper's A100+V100 evaluation cluster at two cross-link speeds
+for gbps in (10.0, 3.0):
+    cluster = paper_eval_cluster(1, 1, 8, cross_gbps=gbps)
+    s = plan(cluster)
+    show(f"A100+V100, cross={gbps:.0f} Gbps", s)
+    print(f"  -> warm-up counts adapt to the link: {s.warmup_counts}")
+
+# 2. mixed-generation TPU fleet (v5e pod + v4 pod over DCN) — the paper's
+#    idea transplanted to TPU hardware profiles
+tpu = heterogeneous_tpu_cluster(dcn_gbps=200.0)
+s = plan(tpu, arch="gpt-39b", granularity=64, B=128, min_sub=16)
+show("TPU v5e-256 + v4-128 over DCN", s)
+
+# 3. straggler adaptation: pod 1 degrades to 70% efficiency -> replan
+slow_dev = dataclasses.replace(tpu.subclusters[1].device,
+                               peak_flops=tpu.subclusters[1].device.peak_flops
+                               * 0.7, name="TPUv4-degraded")
+degraded = dataclasses.replace(
+    tpu, subclusters=(tpu.subclusters[0],
+                      dataclasses.replace(tpu.subclusters[1],
+                                          device=slow_dev)))
+s2 = plan(degraded, arch="gpt-39b", granularity=64, B=128, min_sub=16)
+show("same fleet, v4 pod degraded to 70% (replan)", s2)
+moved = [(a.layer_end - a.layer_start, b.layer_end - b.layer_start)
+         for a, b in zip(s.stages, s2.stages)]
+print(f"  -> layers per stage before/after degradation: {moved}")

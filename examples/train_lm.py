@@ -1,0 +1,75 @@
+"""End-to-end training driver: data pipeline -> model -> AdamW -> fault-
+tolerant trainer with checkpoints.  Defaults train a ~10M-param gemma-family
+model for 200 steps on CPU in a few minutes (loss visibly decreases); crank
+--width/--layers/--steps on real hardware (e.g. --arch minitron-8b --full).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --resume-demo
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (real hardware); default reduced")
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/hapt_train_ckpt")
+    ap.add_argument("--resume-demo", action="store_true",
+                    help="continue from the last checkpoint (fault-tolerance "
+                         "demo: run once, interrupt, run again)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = dataclasses.replace(
+            cfg.reduced(), n_layers=args.layers, d_model=args.width,
+            head_dim=max(32, args.width // 8),
+            n_heads=8, n_kv_heads=1 if cfg.n_kv_heads == 1 else 4,
+            d_ff=4 * args.width, vocab_size=8192)
+
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=20,
+                              total_steps=args.steps)
+    train_step, model, opt_init = make_train_step(cfg, opt_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train_lm] {cfg.arch_id}: {n / 1e6:.1f}M params, "
+          f"batch {args.batch}x{args.seq}, {args.steps} steps")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, kind="markov")
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(50, args.steps // 4), log_every=10),
+        data_cfg, jax.jit(train_step),
+        {"params": params, "opt_state": opt_init(params)})
+    out = trainer.run()
+    h = out["history"]
+    if h:
+        print(f"[train_lm] loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}, "
+              f"acc {h[-1]['accuracy'] * 100:.1f}% "
+              f"(markov data is ~90% predictable)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""HAPT: heterogeneity-aware automated parallel training, in JAX for multi-pod TPU."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,20 @@
+from repro.core.cluster import (
+    DeviceProfile, HeteroCluster, SubCluster,
+    heterogeneous_tpu_cluster, homogeneous_cluster,
+    paper_case_study_cluster, paper_eval_cluster, tpu_multipod_cluster,
+)
+from repro.core.h1f1b import (
+    classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts, h1f1b_deltas,
+)
+from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.core.pipesim import ascii_timeline, eta_load_balance, simulate
+from repro.core.strategy import ParallelStrategy, StageAssignment
+
+__all__ = [
+    "DeviceProfile", "HeteroCluster", "SubCluster", "HAPTPlanner",
+    "PlannerConfig", "ParallelStrategy", "StageAssignment",
+    "simulate", "ascii_timeline", "eta_load_balance",
+    "h1f1b_counts", "h1f1b_deltas", "classic_1f1b_counts",
+    "eager_1f1b_counts", "paper_case_study_cluster", "paper_eval_cluster",
+    "homogeneous_cluster", "tpu_multipod_cluster", "heterogeneous_tpu_cluster",
+]

@@ -1,0 +1,151 @@
+"""Heterogeneous cluster description.
+
+The paper's abstraction: a heterogeneous cluster = several *homogeneous
+sub-clusters* (``DeviceMesh(N, M)`` each), fast links inside a sub-cluster,
+slow links across.  TPU mapping: sub-cluster = pod; fast link = ICI; slow
+link = DCN.  All bandwidths in bytes/s, compute in FLOP/s, memory in bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+GBPS = 1e9 / 8          # 1 Gbps in bytes/s
+GB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    peak_flops: float            # per device, half precision
+    mem_bytes: float
+    hbm_bw: float                # bytes/s
+    base_mfu: float = 0.5        # achievable model-flop utilization at TP=1
+
+
+# Published specs (paper Table 2 + TPU targets)
+A100_40G = DeviceProfile("A100-40G", 312e12, 40 * GB, 1555e9, base_mfu=0.50)
+V100_32G = DeviceProfile("V100-32G", 125e12, 32 * GB, 900e9, base_mfu=0.45)
+TPU_V5E = DeviceProfile("TPUv5e", 197e12, 16 * GB, 819e9, base_mfu=0.55)
+TPU_V4 = DeviceProfile("TPUv4", 275e12, 32 * GB, 1228e9, base_mfu=0.55)
+
+
+@dataclass(frozen=True)
+class SubCluster:
+    """One homogeneous DeviceMesh(N, M): N nodes x M devices."""
+    name: str
+    n_nodes: int
+    devices_per_node: int
+    device: DeviceProfile
+    intra_node_bw: float          # NVLink / intra-host ICI (bytes/s, per dir)
+    inter_node_bw: float          # RDMA / pod fabric (bytes/s)
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_nodes * self.devices_per_node
+
+    @property
+    def peak_flops(self) -> float:
+        return self.n_devices * self.device.peak_flops
+
+    def submeshes(self) -> List[Tuple[int, int]]:
+        """Alpa's submesh shapes: (1,1),(1,2),...,(1,M), (2,M),...,(N,M)."""
+        out = []
+        m = 1
+        while m <= self.devices_per_node:
+            out.append((1, m))
+            m *= 2
+        if self.devices_per_node not in [s[1] for s in out]:
+            out.append((1, self.devices_per_node))
+        for n in range(2, self.n_nodes + 1):
+            out.append((n, self.devices_per_node))
+        return out
+
+
+@dataclass(frozen=True)
+class HeteroCluster:
+    subclusters: Tuple[SubCluster, ...]
+    cross_bw: float               # slow cross-cluster link (bytes/s)
+    cross_latency: float = 1e-3   # per-transfer latency (s)
+
+    @property
+    def n_devices(self) -> int:
+        return sum(s.n_devices for s in self.subclusters)
+
+    @property
+    def peak_flops(self) -> float:
+        return sum(s.peak_flops for s in self.subclusters)
+
+    def link_bw(self, src: int, dst: int) -> float:
+        """Bandwidth between stages on subclusters ``src`` and ``dst``."""
+        if src == dst:
+            return self.subclusters[src].inter_node_bw
+        return self.cross_bw
+
+    def describe(self) -> str:
+        parts = [
+            f"{s.name}: {s.n_nodes}x{s.devices_per_node} {s.device.name} "
+            f"({s.peak_flops/1e12:.0f} TF)" for s in self.subclusters]
+        return " + ".join(parts) + f" | cross {self.cross_bw*8/1e9:.0f} Gbps"
+
+
+# ---------------------------------------------------------------------------
+# Canonical clusters
+# ---------------------------------------------------------------------------
+
+
+def paper_case_study_cluster(cross_gbps: float = 5.0) -> HeteroCluster:
+    """§2.2.2: DeviceMesh_A100(2,2) + DeviceMesh_V100(1,2), 5 Gbps cross."""
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("meshA100", 2, 2, A100_40G, 300e9, 200 * GBPS),
+            SubCluster("meshV100", 1, 2, V100_32G, 150e9, 200 * GBPS),
+        ),
+        cross_bw=cross_gbps * GBPS)
+
+
+def paper_eval_cluster(n_a100_nodes: int = 4, n_v100_nodes: int = 4,
+                       gpus_per_node: int = 8,
+                       cross_gbps: float = 5.0) -> HeteroCluster:
+    """§6: up to 4 nodes x 8 A100 + 4 nodes x 8 V100 (ShanHe)."""
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A100", n_a100_nodes, gpus_per_node, A100_40G,
+                       300e9, 200 * GBPS),
+            SubCluster("V100", n_v100_nodes, gpus_per_node, V100_32G,
+                       150e9, 200 * GBPS),
+        ),
+        cross_bw=cross_gbps * GBPS)
+
+
+def homogeneous_cluster(n_nodes: int = 8, gpus_per_node: int = 8,
+                        device: DeviceProfile = A100_40G) -> HeteroCluster:
+    """§6.2 baseline: fully-connected homogeneous cluster (200 Gbps RDMA)."""
+    return HeteroCluster(
+        subclusters=(SubCluster("homo", n_nodes, gpus_per_node, device,
+                                300e9, 200 * GBPS),),
+        cross_bw=200 * GBPS)
+
+
+def tpu_multipod_cluster(n_pods: int = 2, pod_side: Tuple[int, int] = (16, 16),
+                         device: DeviceProfile = TPU_V5E,
+                         dcn_gbps: float = 100.0) -> HeteroCluster:
+    """The production target: v5e pods joined by DCN. One sub-cluster per
+    pod; intra-pod "node" = one ICI-connected row (model axis)."""
+    n, m = pod_side
+    subs = tuple(
+        SubCluster(f"pod{i}", n, m, device, 4 * 50e9, 3 * 50e9)
+        for i in range(n_pods))
+    return HeteroCluster(subclusters=subs, cross_bw=dcn_gbps * GBPS)
+
+
+def heterogeneous_tpu_cluster(dcn_gbps: float = 100.0) -> HeteroCluster:
+    """A mixed-generation TPU fleet (v5e pod + v4 pod) — the TPU analogue of
+    the paper's A100+V100 setting."""
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("v5e-pod", 16, 16, TPU_V5E, 4 * 50e9, 3 * 50e9),
+            SubCluster("v4-pod", 8, 16, TPU_V4, 4 * 50e9, 3 * 50e9),
+        ),
+        cross_bw=dcn_gbps * GBPS)

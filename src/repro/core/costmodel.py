@@ -1,0 +1,123 @@
+"""Analytic stage-on-submesh cost model (the CPU-only substitute for HAPT's
+on-hardware profiler; structure documented in DESIGN.md §2).
+
+For a candidate stage (contiguous layer range) on a submesh (n nodes x m
+devices) of one homogeneous sub-cluster, a small intra-op planner tries the
+canonical (tp, dp) factorizations (TP confined to a node, Megatron-style
+all-reduces; DP across the rest) and returns the cheapest feasible
+:class:`StageCost`.  On real hardware, ``measure_fn`` replaces the analytic
+estimate per candidate without touching the surrounding planner.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import HeteroCluster, SubCluster
+from repro.core.layering import Layer
+
+
+@dataclass(frozen=True)
+class Submesh:
+    cluster_idx: int
+    n: int
+    m: int
+
+    @property
+    def n_devices(self) -> int:
+        return self.n * self.m
+
+
+@dataclass(frozen=True)
+class StageCost:
+    t_f: float            # forward per-microbatch (s)
+    t_b: float            # backward per-microbatch (s)
+    mem_p: float          # per-device param+optimizer bytes
+    mem_a: float          # per-device activation bytes per in-flight microbatch
+    tp: int
+    dp: int
+    dp_sync: float        # per-step gradient sync (amortized over microbatches)
+
+    @property
+    def t(self) -> float:
+        return self.t_f + self.t_b
+
+
+@dataclass(frozen=True)
+class CostModelConfig:
+    dtype_bytes: float = 2.0        # bf16 compute
+    opt_mult: float = 7.0           # (bf16 p) + f32 master + adam m,v = 14B/param
+    zero1: bool = True              # shard optimizer states over dp
+    remat: bool = True              # store only layer-boundary activations
+    bwd_flops_mult: float = 2.0
+    tp_eff_decay: float = 0.95      # MFU multiplier per 2x TP
+    dp_eff_decay: float = 0.99
+
+
+def _mfu(sub: SubCluster, tp: int, dp: int, cfgm: CostModelConfig) -> float:
+    eff = sub.device.base_mfu
+    eff *= cfgm.tp_eff_decay ** max(0, math.log2(max(tp, 1)))
+    eff *= cfgm.dp_eff_decay ** max(0, math.log2(max(dp, 1)))
+    return eff
+
+
+def stage_cost(layers: Sequence[Layer], sub: SubCluster, mesh: Submesh,
+               mb_tokens: int, cfgm: CostModelConfig = CostModelConfig(),
+               measure_fn: Optional[Callable] = None) -> StageCost:
+    """Cheapest feasible intra-op strategy for this stage-mesh pair."""
+    if measure_fn is not None:
+        return measure_fn(layers, sub, mesh, mb_tokens)
+
+    flops = sum(l.flops_per_token for l in layers) * mb_tokens
+    params = sum(l.param_bytes for l in layers)
+    ar_bytes = sum(l.ar_bytes_per_token for l in layers) * mb_tokens
+    act_bytes = sum(l.act_out_bytes_per_token for l in layers) * mb_tokens
+    n, m = mesh.n, mesh.m
+    dev = sub.device
+
+    best: Optional[StageCost] = None
+    tp = 1
+    while tp <= m:
+        dp = n * (m // tp)
+        if m % tp == 0:
+            eff = _mfu(sub, tp, dp, cfgm)
+            t_comp_f = flops / (mesh.n_devices * dev.peak_flops * eff)
+            # Megatron TP: all-reduce row-parallel outputs over NVLink/ICI.
+            # ring all-reduce moves 2(tp-1)/tp of payload; fwd once, bwd once.
+            if tp > 1:
+                t_ar = (ar_bytes / dp) * 2 * (tp - 1) / tp / sub.intra_node_bw
+            else:
+                t_ar = 0.0
+            t_f = t_comp_f + t_ar
+            t_b = cfgm.bwd_flops_mult * t_comp_f + t_ar
+            # memory
+            shard = tp * (dp if cfgm.zero1 else 1)
+            mem_p = params * (1.0 + cfgm.opt_mult) / min(shard, mesh.n_devices)
+            act_stored = act_bytes if cfgm.remat else 3.0 * act_bytes
+            mem_a = act_stored / mesh.n_devices
+            # per-step dp grad sync (overlappable; charged once per step)
+            if dp > 1:
+                bw = sub.inter_node_bw if n > 1 else sub.intra_node_bw
+                dp_sync = params * 2 * (dp - 1) / dp / bw
+            else:
+                dp_sync = 0.0
+            cand = StageCost(t_f, t_b, mem_p, mem_a, tp, dp, dp_sync)
+            if best is None or cand.t < best.t:
+                best = cand
+        tp *= 2
+    assert best is not None
+    return best
+
+
+def cut_comm_bytes(layers: Sequence[Layer], cut_after: int, mb_tokens: int) -> float:
+    """Bytes of the activation crossing the stage boundary after layer index
+    ``cut_after`` (exclusive end of the left stage), per microbatch."""
+    if cut_after <= 0 or cut_after >= len(layers):
+        return 0.0
+    return layers[cut_after - 1].act_out_bytes_per_token * mb_tokens
+
+
+def memory_feasible(cost: StageCost, sub: SubCluster, warmup_k: int) -> bool:
+    """Eq. 18: mem_p + K * mem_a <= mem_device."""
+    return cost.mem_p + warmup_k * cost.mem_a <= sub.device.mem_bytes

@@ -1,0 +1,333 @@
+"""Heterogeneous inter-op parallel strategy search (paper §5.2, Alg. 1).
+
+DP over ``F[k, a, b, nc]`` = min pipeline fill cost of partitioning layers
+``k..L`` into stages, with ``a``/``b`` device *units* of each sub-cluster
+remaining and the suffix's first stage placed on cluster ``nc`` (index C =
+"end of pipeline").  Objective (Eq. 13):
+
+    T*(t_max) = min F + (B - 1) * t_max,   F = sum_i (t_i + 2 c_i)
+
+subject to t_i <= t_max, c_i <= t_max, and the H-1F1B memory bound (Eq. 18)
+with K from Eq. 17.  The warm-up-count table ``N`` is carried through the DP
+exactly as the paper's ``N(s, k, d_A, d_B; t_max)``.
+
+Deviation (superset of the paper, flag ``monotone_clusters`` restores the
+exact formulation): the paper's Eqs. 14/15 allocate cluster A fully before
+cluster B along the pipeline; tracking the next stage's cluster in the state
+removes that restriction at 2x state cost and can only find better strategies.
+
+The paper's three search optimizations are implemented:
+  - *sparsity index*: per (mesh, k), the feasible j-window under t_max is
+    located by binary search over the monotone stage-cost row (precomputed
+    cumulative structure from the Zero-Redundant Profiler);
+  - *bidirectional pruning*: binary-search the smallest feasible t_S; bound
+    t_E = T(t_S)/B and drop all candidates outside [t_S, t_E];
+  - *batched parallel evaluation*: remaining candidates are evaluated in
+    worker processes (Ray-actor analogue), batched round-robin by activated
+    candidate count for balance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import HeteroCluster
+from repro.core.h1f1b import h1f1b_counts
+from repro.core.pipesim import eta_load_balance, simulate
+from repro.core.profiler import ProfileTables
+from repro.core.strategy import ParallelStrategy, StageAssignment
+
+INF = np.inf
+
+
+@dataclass
+class SearchConfig:
+    n_microbatches: int = 128
+    monotone_clusters: bool = False   # True = paper's exact Eq. 14/15 ordering
+    require_all_devices: bool = False
+    n_workers: int = 0                # 0 -> serial
+    tmax_round_digits: int = 4        # dedupe candidates to this many sig digits
+    max_candidates: int = 512
+
+
+class _DPContext:
+    """Immutable tables shared by all t_max evaluations (fork-inherited)."""
+
+    def __init__(self, cluster: HeteroCluster, tables: ProfileTables,
+                 cfg: SearchConfig):
+        self.cluster = cluster
+        self.tables = tables
+        self.cfg = cfg
+        self.C = len(cluster.subclusters)
+        self.L = tables.t_f.shape[1] - 1
+        # device units per cluster = smallest submesh size present
+        self.unit = []
+        for ci in range(self.C):
+            sizes = [m.n_devices for m in tables.meshes if m.cluster_idx == ci]
+            self.unit.append(min(sizes) if sizes else 1)
+        self.units_total = [
+            (cluster.subclusters[ci].n_devices // self.unit[ci])
+            for ci in range(self.C)]
+        self.mesh_units = [m.n_devices // self.unit[m.cluster_idx]
+                           for m in tables.meshes]
+        self.caps = [s.device.mem_bytes for s in cluster.subclusters]
+        self.t_tab = tables.t_f + tables.t_b
+
+    def bw(self, src: int, dst: int) -> float:
+        return self.cluster.link_bw(src, dst)
+
+
+def _shift(plane: np.ndarray, u: int, axis: int, fill=INF) -> np.ndarray:
+    """out[a] = plane[a - u] along axis (device-consumption shift)."""
+    out = np.full_like(plane, fill)
+    if axis == 0:
+        out[u:, :] = plane[:plane.shape[0] - u, :]
+    else:
+        out[:, u:] = plane[:, :plane.shape[1] - u]
+    return out
+
+
+def _dp_eval(ctx: _DPContext, t_max: float,
+             want_tables: bool = False):
+    """Run the DP under a fixed t_max.  Returns (fill_cost, F, N) where
+    fill_cost = min over nc of F[0, UA, UB, nc] (inf if infeasible)."""
+    C, L = ctx.C, ctx.L
+    UA = ctx.units_total[0]
+    UB = ctx.units_total[1] if C > 1 else 0
+    tab = ctx.tables
+    B = ctx.cfg.n_microbatches
+
+    F = np.full((L + 1, UA + 1, UB + 1, C + 1), INF)
+    N = np.zeros((L + 1, UA + 1, UB + 1, C + 1), dtype=np.int64)
+    F[L, :, :, C] = 0.0
+
+    for k in range(L - 1, -1, -1):
+        for c in range(C):
+            axis = 0 if c == 0 else 1
+            best = np.full((UA + 1, UB + 1), INF)
+            bestK = np.zeros((UA + 1, UB + 1), dtype=np.int64)
+            for mid, mesh in enumerate(tab.meshes):
+                if mesh.cluster_idx != c:
+                    continue
+                u = ctx.mesh_units[mid]
+                row_t = ctx.t_tab[mid, k]           # (L+1,)
+                row_ok = tab.feasible[mid, k]
+                # sparsity index: t is monotone in j -> contiguous window
+                js = np.nonzero(row_ok & (row_t <= t_max))[0]
+                for j in js:
+                    t_stage = row_t[j]
+                    mp, ma = tab.mem_p[mid, k, j], tab.mem_a[mid, k, j]
+                    ncs = (C,) if j == L else tuple(range(C))
+                    for nc in ncs:
+                        if ctx.cfg.monotone_clusters and j < L and nc < c:
+                            continue  # paper: clusters in fixed pipeline order
+                        if j == L:
+                            c_time = 0.0
+                        else:
+                            c_time = tab.cut_bytes[j] / ctx.bw(c, nc)
+                        if c_time > t_max:
+                            continue
+                        Fn = F[j, :, :, nc]
+                        Nn = N[j, :, :, nc]
+                        K = math.ceil(2.0 * c_time / t_max) + 1 + Nn
+                        val = Fn + t_stage + 2.0 * c_time
+                        val = np.where(mp + K * ma <= ctx.caps[c], val, INF)
+                        val = _shift(val, u, axis)
+                        Ksh = _shift(K.astype(np.float64), u, axis, fill=0)
+                        upd = val < best
+                        best = np.where(upd, val, best)
+                        bestK = np.where(upd, Ksh.astype(np.int64), bestK)
+            F[k, :, :, c] = best
+            N[k, :, :, c] = bestK
+
+    if not ctx.cfg.require_all_devices:
+        # idle devices allowed: availability is monotone, take running min
+        F_full = np.minimum.accumulate(np.minimum.accumulate(F, axis=1), axis=2)
+        fill = float(np.min(F_full[0, UA, UB, :C]))
+    else:
+        fill = float(np.min(F[0, UA, UB, :C]))
+    if want_tables:
+        return fill, F, N
+    return fill, None, None
+
+
+def _backtrack(ctx: _DPContext, t_max: float, F: np.ndarray, N: np.ndarray
+               ) -> List[Tuple[int, int, int, int]]:
+    """Extract the argmin stage list [(mid, k, j, K), ...] by re-finding the
+    achieving transition at each state along the optimal path."""
+    C, L = ctx.C, ctx.L
+    tab = ctx.tables
+    UA = ctx.units_total[0]
+    UB = ctx.units_total[1] if C > 1 else 0
+
+    # find start state (allowing idle devices: scan all (a, b) <= (UA, UB);
+    # with require_all_devices, only the full-allocation state qualifies)
+    best = (INF, None)
+    for c in range(C):
+        if ctx.cfg.require_all_devices:
+            v = F[0, UA, UB, c]
+            if v < best[0] - 1e-15:
+                best = (v, (0, UA, UB, c))
+            continue
+        for a in range(UA + 1):
+            for b in range(UB + 1):
+                v = F[0, a, b, c]
+                if v < best[0] - 1e-15:
+                    best = (v, (0, a, b, c))
+    assert best[1] is not None, "infeasible strategy"
+    k, a, b, c = best[1]
+    out = []
+    while k < L:
+        found = None
+        target = F[k, a, b, c]
+        for mid, mesh in enumerate(tab.meshes):
+            if mesh.cluster_idx != c:
+                continue
+            u = ctx.mesh_units[mid]
+            avail = a if c == 0 else b
+            if u > avail:
+                continue
+            a2 = a - u if c == 0 else a
+            b2 = b - u if c == 1 else b
+            row_t = ctx.t_tab[mid, k]
+            row_ok = tab.feasible[mid, k]
+            for j in range(k + 1, L + 1):
+                if not row_ok[j] or row_t[j] > t_max:
+                    continue
+                ncs = (C,) if j == L else tuple(range(C))
+                for nc in ncs:
+                    if ctx.cfg.monotone_clusters and j < L and nc < c:
+                        continue
+                    c_time = 0.0 if j == L else tab.cut_bytes[j] / ctx.bw(c, nc)
+                    if c_time > t_max:
+                        continue
+                    K = math.ceil(2.0 * c_time / t_max) + 1 + N[j, a2, b2, nc]
+                    mp, ma = tab.mem_p[mid, k, j], tab.mem_a[mid, k, j]
+                    if mp + K * ma > ctx.caps[c]:
+                        continue
+                    val = F[j, a2, b2, nc] + row_t[j] + 2.0 * c_time
+                    if abs(val - target) <= 1e-9 * max(1.0, abs(target)):
+                        found = (mid, k, j, int(K), a2, b2, nc)
+                        break
+                if found:
+                    break
+            if found:
+                break
+        assert found is not None, "backtrack failed"
+        mid, _, j, K, a2, b2, nc = found
+        out.append((mid, k, j, K))
+        k, a, b, c = j, a2, b2, nc
+    return out
+
+
+# --- module-level worker state for fork-based parallel evaluation -----------
+_WORKER_CTX: Optional[_DPContext] = None
+
+
+def _worker_eval(args):
+    t_max_batch = args
+    return [(t, _dp_eval(_WORKER_CTX, t)[0]) for t in t_max_batch]
+
+
+def search(cluster: HeteroCluster, tables: ProfileTables, mb_tokens: int,
+           cfg: SearchConfig = SearchConfig(),
+           verbose: bool = False) -> ParallelStrategy:
+    """Full HAPT search: candidate t_max generation, bidirectional pruning,
+    (parallel) batched evaluation, backtracking, H-1F1B scheduling."""
+    global _WORKER_CTX
+    ctx = _DPContext(cluster, tables, cfg)
+    B = cfg.n_microbatches
+
+    # ---- candidate t_max values (sorted, dedup'd — Alg. 1 line 2) ----------
+    vals = ctx.t_tab[tables.feasible]
+    sig = cfg.tmax_round_digits
+    cands = np.unique(np.array(
+        [float(f"%.{sig}g" % v) for v in vals if np.isfinite(v)]))
+    if len(cands) == 0:
+        raise RuntimeError("no feasible stage-mesh candidates")
+
+    # ---- bidirectional pruning ---------------------------------------------
+    lo, hi = 0, len(cands) - 1
+    if _dp_eval(ctx, float(cands[hi]))[0] == INF:
+        raise RuntimeError("infeasible even at largest t_max")
+    while lo < hi:  # smallest feasible t_S (monotone feasibility)
+        mid = (lo + hi) // 2
+        if _dp_eval(ctx, float(cands[mid]))[0] < INF:
+            hi = mid
+        else:
+            lo = mid + 1
+    t_S = float(cands[lo])
+    fill_S = _dp_eval(ctx, t_S)[0]
+    T_S = fill_S + (B - 1) * t_S
+    t_E = T_S / max(B - 1, 1)
+    keep = cands[(cands >= t_S) & (cands <= t_E)]
+    if len(keep) > cfg.max_candidates:
+        idx = np.linspace(0, len(keep) - 1, cfg.max_candidates).astype(int)
+        keep = keep[np.unique(idx)]
+    if verbose:
+        print(f"[search] {len(cands)} candidates -> t_S={t_S:.4g}, "
+              f"t_E={t_E:.4g}, evaluating {len(keep)}")
+
+    # ---- batched (parallel) evaluation --------------------------------------
+    results: List[Tuple[float, float]] = []
+    if cfg.n_workers and len(keep) > 8:
+        _WORKER_CTX = ctx
+        nb = min(cfg.n_workers * 4, len(keep))
+        batches = [list(map(float, keep[i::nb])) for i in range(nb)]
+        with ProcessPoolExecutor(max_workers=cfg.n_workers) as ex:
+            for out in ex.map(_worker_eval, batches):
+                results.extend(out)
+        _WORKER_CTX = None
+    else:
+        for t in keep:
+            results.append((float(t), _dp_eval(ctx, float(t))[0]))
+
+    best_t, best_T = None, INF
+    for t, fill in results:
+        if fill == INF:
+            continue
+        T = fill + (B - 1) * t
+        if T < best_T:
+            best_T, best_t = T, t
+    assert best_t is not None
+
+    # ---- extract strategy ----------------------------------------------------
+    _, F, N = _dp_eval(ctx, best_t, want_tables=True)
+    picks = _backtrack(ctx, best_t, F, N)
+    stages, c_links = [], []
+    for si, (mid, k, j, K) in enumerate(picks):
+        mesh = tables.meshes[mid]
+        sc = tables.stage_costs[(mid, k, j)]
+        stages.append(StageAssignment(
+            layer_start=k, layer_end=j, cluster_idx=mesh.cluster_idx,
+            mesh_n=mesh.n, mesh_m=mesh.m, tp=sc.tp, dp=sc.dp,
+            t_f=sc.t_f, t_b=sc.t_b, mem_p=sc.mem_p, mem_a=sc.mem_a))
+        if si < len(picks) - 1:
+            nxt_cluster = tables.meshes[picks[si + 1][0]].cluster_idx
+            c_links.append(
+                tables.cut_bytes[j] / ctx.bw(mesh.cluster_idx, nxt_cluster))
+
+    t_per_stage = [s.t for s in stages]
+    counts = h1f1b_counts(t_per_stage, c_links, B)
+    res = simulate([s.t_f for s in stages], [s.t_b for s in stages],
+                   c_links, B, counts)
+    eta = eta_load_balance(
+        res.stage_compute,
+        [s.n_devices * cluster.subclusters[s.cluster_idx].device.peak_flops
+         for s in stages])
+    return ParallelStrategy(
+        stages=stages, c_links=c_links, warmup_counts=counts,
+        t_max=float(best_t), n_microbatches=B, mb_tokens=mb_tokens,
+        est_step_time=res.makespan, eta=eta,
+        planner_meta={
+            "fill_cost": best_T - (B - 1) * best_t,
+            "predicted_T": best_T,
+            "n_tmax_evaluated": len(results),
+            "profiler": dataclasses.asdict(tables.stats),
+        })

@@ -1,0 +1,82 @@
+"""HAPTPlanner: config + cluster -> ParallelStrategy (the paper's Fig. 4 flow).
+
+    ops = build_op_sequence(arch)                  # operator IR
+    layers = build_layers(ops, granularity)        # §5.1 structural layers
+    tables = ZeroRedundantProfiler(...).profile()  # §5.1 pruned profiles
+    strategy = dp_search.search(...)               # §5.2 DP + H-1F1B (§4)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.configs.base import ArchConfig
+from repro.core.cluster import HeteroCluster
+from repro.core.costmodel import CostModelConfig
+from repro.core.dp_search import SearchConfig, search
+from repro.core.layering import Layer, build_layers
+from repro.core.opgraph import Op, build_op_sequence
+from repro.core.profiler import ZeroRedundantProfiler
+from repro.core.strategy import ParallelStrategy
+
+
+@dataclass
+class PlannerConfig:
+    granularity: int = 128            # target #layers (fine-grained)
+    n_microbatches: int = 128
+    microbatch_tokens: int = 0        # 0 -> global_batch_tokens / n_microbatches
+    z_heavy: int = 2
+    rho: float = 16.0
+    min_submesh_devices: int = 1
+    max_submesh_devices: int = 0   # 0 = unrestricted
+    cost: CostModelConfig = field(default_factory=CostModelConfig)
+    search: SearchConfig = field(default_factory=SearchConfig)
+
+
+class HAPTPlanner:
+    def __init__(self, cluster: HeteroCluster, cfg: PlannerConfig = None):
+        self.cluster = cluster
+        self.cfg = cfg or PlannerConfig()
+
+    def plan(self, arch: ArchConfig, *, seq_len: int = 1024,
+             global_batch: int = 1024, verbose: bool = False,
+             ops: Optional[Sequence[Op]] = None,
+             layers: Optional[Sequence[Layer]] = None) -> ParallelStrategy:
+        t0 = time.time()
+        cfg = self.cfg
+        B = cfg.n_microbatches
+        mb_tokens = cfg.microbatch_tokens or (global_batch * seq_len) // B
+
+        if layers is None:
+            if ops is None:
+                ops = build_op_sequence(arch, seq_len=seq_len)
+            layers = build_layers(ops, cfg.granularity, z=cfg.z_heavy)
+        t_layer = time.time()
+
+        profiler = ZeroRedundantProfiler(
+            self.cluster, layers, mb_tokens, cost_cfg=cfg.cost, rho=cfg.rho,
+            min_submesh_devices=cfg.min_submesh_devices,
+            max_submesh_devices=cfg.max_submesh_devices)
+        tables = profiler.profile()
+        t_prof = time.time()
+
+        scfg = cfg.search
+        scfg.n_microbatches = B
+        strategy = search(self.cluster, tables, mb_tokens, scfg,
+                          verbose=verbose)
+        t_search = time.time()
+
+        strategy.planner_meta.update({
+            "arch": arch.arch_id,
+            "granularity": len(layers),
+            "seq_len": seq_len,
+            "global_batch": global_batch,
+            "time_layering_s": t_layer - t0,
+            "time_profiling_s": t_prof - t_layer,
+            "time_search_s": t_search - t_prof,
+            "cluster": self.cluster.describe(),
+        })
+        if verbose:
+            print(strategy.describe())
+        return strategy

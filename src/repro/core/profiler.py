@@ -1,0 +1,153 @@
+"""Zero-Redundant Profiler (paper §5.1).
+
+Enumerates candidate (stage = contiguous layer range) x (submesh) pairs and
+collects execution profiles, with the paper's two prunings:
+
+1. *Feasibility pruning*: drop candidates that OOM outright (Eq. 18 with
+   K=1) or whose workload share is severely imbalanced w.r.t. the submesh's
+   compute-capacity share (ratio outside [1/rho, rho]).
+2. *Structural aliasing* ("zero redundancy"): candidates whose layer
+   class-key sequences match (ranges spanning identical instances of repeated
+   modules) share one profile entry — the profile function is evaluated once
+   per unique key.  With an expensive ``measure_fn`` (real hardware) this is
+   the paper's >10x profiling saving; the stats are reported either way.
+
+Profiles are materialized as dense numpy tables indexed (mesh_id, i, j) for
+the DP search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import HeteroCluster
+from repro.core.costmodel import CostModelConfig, StageCost, Submesh, stage_cost
+from repro.core.layering import Layer, layer_class_sequence
+
+
+@dataclass
+class ProfilerStats:
+    n_candidates: int = 0
+    n_pruned_memory: int = 0
+    n_pruned_imbalance: int = 0
+    n_unique_profiled: int = 0
+    n_aliased: int = 0
+
+    @property
+    def dedup_ratio(self) -> float:
+        evaluated = self.n_unique_profiled + self.n_aliased
+        return self.n_aliased / evaluated if evaluated else 0.0
+
+
+@dataclass
+class ProfileTables:
+    """Dense DP inputs. meshes[mid] describes column mid of each array."""
+    meshes: List[Submesh]
+    t_f: np.ndarray          # (n_mesh, L+1, L+1); [mid, i, j] = stage layers[i:j]
+    t_b: np.ndarray
+    mem_p: np.ndarray
+    mem_a: np.ndarray
+    feasible: np.ndarray     # bool, post-pruning
+    cut_bytes: np.ndarray    # (L+1,) activation bytes crossing cut at j
+    stats: ProfilerStats
+    stage_costs: Dict[Tuple[int, int, int], StageCost] = field(default_factory=dict)
+
+    @property
+    def t(self) -> np.ndarray:
+        return self.t_f + self.t_b
+
+
+class ZeroRedundantProfiler:
+    def __init__(self, cluster: HeteroCluster, layers: Sequence[Layer],
+                 mb_tokens: int, *,
+                 cost_cfg: CostModelConfig = CostModelConfig(),
+                 rho: float = 16.0,
+                 min_submesh_devices: int = 1,
+                 max_submesh_devices: int = 0,
+                 max_stage_layers: Optional[int] = None,
+                 measure_fn: Optional[Callable] = None):
+        self.cluster = cluster
+        self.layers = list(layers)
+        self.mb_tokens = mb_tokens
+        self.cost_cfg = cost_cfg
+        self.rho = rho
+        self.min_submesh = min_submesh_devices
+        self.max_submesh = max_submesh_devices
+        self.max_stage_layers = max_stage_layers or len(self.layers)
+        self.measure_fn = measure_fn
+
+    def meshes(self) -> List[Submesh]:
+        out = []
+        for ci, sub in enumerate(self.cluster.subclusters):
+            for (n, m) in sub.submeshes():
+                if n * m < self.min_submesh:
+                    continue
+                if self.max_submesh and n * m > self.max_submesh:
+                    continue
+                out.append(Submesh(ci, n, m))
+        return out
+
+    def profile(self) -> ProfileTables:
+        L = len(self.layers)
+        meshes = self.meshes()
+        nm = len(meshes)
+        shape = (nm, L + 1, L + 1)
+        t_f = np.full(shape, np.inf)
+        t_b = np.full(shape, np.inf)
+        mem_p = np.full(shape, np.inf)
+        mem_a = np.full(shape, np.inf)
+        feas = np.zeros(shape, dtype=bool)
+        stats = ProfilerStats()
+        cache: Dict[Tuple, StageCost] = {}
+        stage_costs: Dict[Tuple[int, int, int], StageCost] = {}
+
+        total_flops = sum(l.flops_per_token for l in self.layers) or 1.0
+        total_peak = self.cluster.peak_flops
+
+        # prefix sums for fast share computation
+        pre_flops = np.zeros(L + 1)
+        for i, l in enumerate(self.layers):
+            pre_flops[i + 1] = pre_flops[i] + l.flops_per_token
+
+        for mid, mesh in enumerate(meshes):
+            sub = self.cluster.subclusters[mesh.cluster_idx]
+            cap_share = mesh.n_devices * sub.device.peak_flops / total_peak
+            for i in range(L):
+                jmax = min(L, i + self.max_stage_layers)
+                for j in range(i + 1, jmax + 1):
+                    stats.n_candidates += 1
+                    work_share = (pre_flops[j] - pre_flops[i]) / total_flops
+                    if work_share > self.rho * cap_share:
+                        stats.n_pruned_imbalance += 1
+                        continue
+                    key = (layer_class_sequence(self.layers, i, j),
+                           mesh.cluster_idx, mesh.n, mesh.m)
+                    if key in cache:
+                        stats.n_aliased += 1
+                        cost = cache[key]
+                    else:
+                        cost = stage_cost(self.layers[i:j], sub, mesh,
+                                          self.mb_tokens, self.cost_cfg,
+                                          self.measure_fn)
+                        cache[key] = cost
+                        stats.n_unique_profiled += 1
+                    # memory pruning at the loosest warm-up (K=1)
+                    if cost.mem_p + cost.mem_a > sub.device.mem_bytes:
+                        stats.n_pruned_memory += 1
+                        continue
+                    t_f[mid, i, j] = cost.t_f
+                    t_b[mid, i, j] = cost.t_b
+                    mem_p[mid, i, j] = cost.mem_p
+                    mem_a[mid, i, j] = cost.mem_a
+                    feas[mid, i, j] = True
+                    stage_costs[(mid, i, j)] = cost
+
+        cut_bytes = np.zeros(L + 1)
+        for j in range(1, L):
+            cut_bytes[j] = self.layers[j - 1].act_out_bytes_per_token * self.mb_tokens
+
+        return ProfileTables(meshes, t_f, t_b, mem_p, mem_a, feas, cut_bytes,
+                             stats, stage_costs)

@@ -1,0 +1,80 @@
+"""Parallel strategy IR: what the planner emits and the runtime consumes."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class StageAssignment:
+    layer_start: int
+    layer_end: int                 # exclusive
+    cluster_idx: int
+    mesh_n: int
+    mesh_m: int
+    tp: int
+    dp: int
+    t_f: float
+    t_b: float
+    mem_p: float
+    mem_a: float
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh_n * self.mesh_m
+
+    @property
+    def t(self) -> float:
+        return self.t_f + self.t_b
+
+
+@dataclass
+class ParallelStrategy:
+    stages: List[StageAssignment]
+    c_links: List[float]           # inter-stage comm time per microbatch (s)
+    warmup_counts: List[int]       # H-1F1B N_i
+    t_max: float
+    n_microbatches: int
+    mb_tokens: int
+    est_step_time: float = 0.0     # from pipesim
+    eta: float = 1.0               # Eq. 19 load balance
+    planner_meta: Dict = field(default_factory=dict)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def devices_used(self) -> int:
+        return sum(s.n_devices for s in self.stages)
+
+    def tokens_per_step(self) -> int:
+        return self.mb_tokens * self.n_microbatches
+
+    def throughput_tokens_per_s(self) -> float:
+        return self.tokens_per_step() / self.est_step_time if self.est_step_time else 0.0
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d, indent=2)
+
+    @staticmethod
+    def from_json(s: str) -> "ParallelStrategy":
+        d = json.loads(s)
+        d["stages"] = [StageAssignment(**st) for st in d["stages"]]
+        return ParallelStrategy(**d)
+
+    def describe(self) -> str:
+        lines = [f"{self.n_stages} stages, B={self.n_microbatches} microbatches,"
+                 f" t_max={self.t_max*1e3:.2f} ms, est step {self.est_step_time*1e3:.1f} ms,"
+                 f" eta={self.eta*100:.1f}%"]
+        for i, s in enumerate(self.stages):
+            c = self.c_links[i] if i < len(self.c_links) else 0.0
+            lines.append(
+                f"  stage{i}: layers[{s.layer_start}:{s.layer_end}] "
+                f"cluster{s.cluster_idx} mesh({s.mesh_n}x{s.mesh_m}) tp={s.tp} dp={s.dp} "
+                f"t={s.t*1e3:.2f}ms N={self.warmup_counts[i]} c->next={c*1e3:.2f}ms")
+        return "\n".join(lines)

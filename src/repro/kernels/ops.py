@@ -1,0 +1,175 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: model<->kernel layout transposes, padding to block multiples,
+GQA gradient reduction, custom_vjp wiring, and interpret-mode dispatch
+(``interpret=None`` -> auto: Python interpretation of the kernel body on
+non-TPU backends, compiled Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, block_q, block_k, interpret):
+    out, _ = _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    # model layout (B, T, H, D) -> kernel layout (B, H, T, D)
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    qt = _pad_to(jnp.transpose(q, (0, 2, 1, 3)), 2, block_q)
+    kt = _pad_to(jnp.transpose(k, (0, 2, 1, 3)), 2, block_k)
+    vt = _pad_to(jnp.transpose(v, (0, 2, 1, 3)), 2, block_k)
+    # real (unpadded) lengths drive the kernel masks
+    ot, lse = _pallas_fwd(qt, kt, vt, causal, window, T, S, block_q, block_k,
+                          interpret)
+    out = jnp.transpose(ot[:, :, :T], (0, 2, 1, 3))
+    return out, (q, k, v, ot, lse)
+
+
+def _pallas_fwd(qt, kt, vt, causal, window, q_len, kv_len, block_q, block_k,
+                interpret):
+    kernel = functools.partial(
+        _fa._fwd_kernel, scale=qt.shape[-1] ** -0.5, causal=causal,
+        window=window, q_len=q_len, kv_len=kv_len, block_q=block_q,
+        block_k=block_k, nk=kt.shape[2] // block_k)
+    import jax.experimental.pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    B, H, Tq, D = qt.shape
+    rep = H // kt.shape[1]
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Tq // block_q, kt.shape[2] // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(qt.shape, qt.dtype),
+            jax.ShapeDtypeStruct((B, H, Tq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+
+
+def _flash_bwd(causal, window, block_q, block_k, interpret, res, g):
+    q, k, v, ot, lse = res
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qt = _pad_to(jnp.transpose(q, (0, 2, 1, 3)), 2, block_q)
+    kt = _pad_to(jnp.transpose(k, (0, 2, 1, 3)), 2, block_k)
+    vt = _pad_to(jnp.transpose(v, (0, 2, 1, 3)), 2, block_k)
+    dot = _pad_to(jnp.transpose(g, (0, 2, 1, 3)), 2, block_q)
+    dq, dk, dv = _fa.flash_attention_bwd(
+        qt, kt, vt, ot, lse, dot, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    dq = jnp.transpose(dq[:, :, :T], (0, 2, 1, 3))
+    # reduce expanded heads back to KV groups
+    dk = dk[:, :, :S].reshape(B, KV, rep, S, D).sum(axis=2)
+    dv = dv[:, :, :S].reshape(B, KV, rep, S, D).sum(axis=2)
+    dk = jnp.transpose(dk, (0, 2, 1, 3)).astype(k.dtype)
+    dv = jnp.transpose(dv, (0, 2, 1, 3)).astype(v.dtype)
+    return dq.astype(q.dtype), dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Flash attention in model layout. q: (B, T, H, D); k, v: (B, S, KV, D)."""
+    return _flash(q, k, v, causal, window, block_q, block_k,
+                  _auto_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk
+# ---------------------------------------------------------------------------
+
+
+def ssd_intra(xc, dtc, cum, Bc, Cc, *, interpret: Optional[bool] = None):
+    """Differentiable via recomputation (the term is a closed-form polynomial
+    of its inputs; jax.grad falls back to the jnp oracle under the hood)."""
+    interpret = _auto_interpret(interpret)
+
+    @jax.custom_vjp
+    def call(xc, dtc, cum, Bc, Cc):
+        return _ssd.ssd_intra(xc, dtc, cum, Bc, Cc, interpret=interpret)
+
+    def fwd(xc, dtc, cum, Bc, Cc):
+        return call(xc, dtc, cum, Bc, Cc), (xc, dtc, cum, Bc, Cc)
+
+    def bwd(res, g):
+        from repro.kernels.ref import ssd_intra_oracle
+        _, vjp = jax.vjp(ssd_intra_oracle, *res)
+        return vjp(g)
+
+    call.defvjp(fwd, bwd)
+    return call(xc, dtc, cum, Bc, Cc)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, interpret: Optional[bool] = None):
+    """x: (..., D) any leading dims; w: (D,)."""
+    interpret = _auto_interpret(interpret)
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    block = 128
+    while rows % block and block > 1:
+        block //= 2
+    out = _rn.rmsnorm(x2, w, eps=eps, block_rows=block, interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attention_ref
+from repro.models.common import rms_norm
+from repro.models.ssm import ssd_intra_ref
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Model layout: q (B, T, H, D); k, v (B, S, KV, D). -> (B, T, H, D)."""
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssd_intra_oracle(xc, dtc, cum, Bc, Cc):
+    """Same contract as kernels.ssd_scan.ssd_intra (f32 output)."""
+    return ssd_intra_ref(xc, dtc, cum, Bc, Cc).astype(jnp.float32)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    return rms_norm(x, w, eps)

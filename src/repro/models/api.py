@@ -1,0 +1,119 @@
+"""Unified model API.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions
+``init / forward / loss / init_cache / decode_step`` dispatching on
+``cfg.family``.  ``input_specs(cfg, shape)`` returns ShapeDtypeStruct
+stand-ins for every model input of a given shape cell (no allocation) —
+the same structs feed ``jit(...).lower()`` in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec, hybrid_lm, mamba_lm, moe_lm, transformer, vlm
+from repro.models.common import softmax_cross_entropy
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": moe_lm,
+    "ssm": mamba_lm,
+    "hybrid": hybrid_lm,
+    "vlm": vlm,
+    "audio": encdec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]          # (params, batch) -> (logits, aux)
+    loss: Callable[..., Any]             # (params, batch) -> (scalar, metrics)
+    init_cache: Callable[..., Any]       # (batch, seq_len) -> cache
+    decode_step: Callable[..., Any]      # (params, cache, tokens, pos) -> (logits, cache)
+
+
+def build_model(cfg: ArchConfig, *, use_pallas: bool = False,
+                remat: bool = True, param_dtype=jnp.float32) -> Model:
+    mod = _FAMILY[cfg.family]
+
+    def init_fn(rng):
+        return mod.init(cfg, rng, dtype=param_dtype)
+
+    def forward_fn(params, batch):
+        return mod.forward(cfg, params, batch, use_pallas=use_pallas, remat=remat)
+
+    def loss_fn(params, batch):
+        logits, aux = forward_fn(params, batch)
+        per_tok, acc = softmax_cross_entropy(logits, batch["labels"])
+        mask = batch.get("loss_mask")
+        if mask is None:
+            loss = jnp.mean(per_tok)
+            accuracy = jnp.mean(acc)
+        else:
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+            loss = jnp.sum(per_tok * mask) / denom
+            accuracy = jnp.sum(acc * mask) / denom
+        total = loss + aux
+        return total, {"loss": loss, "aux_loss": aux, "accuracy": accuracy}
+
+    def init_cache_fn(batch, seq_len, dtype=jnp.bfloat16):
+        return mod.init_cache(cfg, batch, seq_len, dtype)
+
+    def decode_fn(params, cache, tokens, pos):
+        return mod.decode_step(cfg, params, cache, tokens, pos)
+
+    return Model(cfg=cfg, init=init_fn, forward=forward_fn, loss=loss_fn,
+                 init_cache=init_cache_fn, decode_step=decode_fn)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                act_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch input structs for (arch, shape).
+
+    train/prefill: token batch (+ modality stubs). decode: single-token batch
+    (+ position); the KV cache/SSM state is built by ``cache_specs``."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, jax.ShapeDtypeStruct] = {
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), act_dtype)
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), act_dtype)
+        return specs
+    # decode: one new token against a cache of length T
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStructs of the KV cache / SSM state for a decode cell."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+
+def param_specs(cfg: ArchConfig, param_dtype=jnp.float32) -> Any:
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    model = build_model(cfg, param_dtype=param_dtype)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,0 +1,160 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv frontend is a STUB: ``input_specs`` supplies precomputed frame
+embeddings (B, enc_frames, d).  Encoder: bidirectional self-attention blocks.
+Decoder: causal self-attention + cross-attention blocks.  Absolute learned
+position embeddings (rope disabled per config).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import transformer as tf
+from repro.models.common import (
+    dense_init, embed_init, rms_norm, scan_unroll, shard_act,
+)
+
+Params = Dict[str, Any]
+
+MAX_DEC_POS = 4096  # decoder learned positions (backbone setting)
+
+
+def dec_block_init(cfg: ArchConfig, rng, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "xattn": attn.attn_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_mod.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+    }
+
+
+def init(cfg: ArchConfig, rng, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 6)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_embed": 0.02 * jax.random.normal(
+            ks[1], (MAX_DEC_POS, cfg.d_model), jnp.float32).astype(dtype),
+        "enc_blocks": jax.vmap(lambda r: tf.block_init(cfg, r, dtype))(
+            jax.random.split(ks[2], cfg.enc_layers)),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "dec_blocks": jax.vmap(lambda r: dec_block_init(cfg, r, dtype))(
+            jax.random.split(ks[3], cfg.n_layers)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params: Params, frames: jnp.ndarray, *,
+           use_pallas: bool = False, remat: bool = True) -> jnp.ndarray:
+    h = frames
+
+    def body(carry, p):
+        a = attn.self_attention(
+            p["attn"], rms_norm(carry, p["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=0.0, causal=False,
+            use_pallas=use_pallas)
+        carry = carry + a
+        carry = carry + mlp_mod.mlp(
+            p["mlp"], rms_norm(carry, p["ln2"], cfg.norm_eps), cfg.activation)
+        return carry, None
+
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"], unroll=scan_unroll())
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(cfg, p, h, memory, *, use_pallas):
+    a = attn.self_attention(
+        p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=0.0, causal=True, use_pallas=use_pallas)
+    h = h + a
+    x = attn.cross_attention(
+        p["xattn"], rms_norm(h, p["ln_x"], cfg.norm_eps), memory,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        use_pallas=use_pallas)
+    h = h + x
+    h = h + mlp_mod.mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                        cfg.activation)
+    return shard_act(h, ("batch", "seq", "embed"))
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            use_pallas: bool = False, remat: bool = True):
+    memory = encode(cfg, params, batch["frames"].astype(params["embed"].dtype),
+                    use_pallas=use_pallas, remat=remat)
+    tokens = batch["tokens"]
+    T = tokens.shape[1]
+    h = params["embed"][tokens]
+    pos = jnp.arange(T) % MAX_DEC_POS
+    h = h + params["pos_embed"][pos][None]
+
+    def body(carry, p):
+        return _dec_block(cfg, p, carry, memory, use_pallas=use_pallas), None
+
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"], unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    kv = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    mem = (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "mem_k": jnp.zeros(mem, dtype), "mem_v": jnp.zeros(mem, dtype)}
+
+
+def prefill_memory(cfg: ArchConfig, params: Params, frames, cache: Params):
+    """Encode frames and precompute per-layer cross-attention KV."""
+    memory = encode(cfg, params, frames.astype(params["embed"].dtype))
+
+    def one(p):
+        k = attn._split_heads(
+            jnp.einsum("bmd,dk->bmk", memory, p["xattn"]["wk"]),
+            cfg.n_kv_heads, cfg.head_dim)
+        v = attn._split_heads(
+            jnp.einsum("bmd,dk->bmk", memory, p["xattn"]["wv"]),
+            cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+    k, v = jax.vmap(one)(params["dec_blocks"])
+    return {**cache, "mem_k": k.astype(cache["mem_k"].dtype),
+            "mem_v": v.astype(cache["mem_v"].dtype)}
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    h = params["embed"][tokens]
+    h = h + params["pos_embed"][jnp.mod(pos, MAX_DEC_POS)][None, None]
+
+    def body(carry, inp):
+        p, ck, cv, mk, mv = inp
+        a, (ck, cv) = attn.decode_self_attention(
+            p["attn"], rms_norm(carry, p["ln1"], cfg.norm_eps), ck, cv, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=0.0)
+        carry = carry + a
+        x = attn.decode_cross_attention(
+            p["xattn"], rms_norm(carry, p["ln_x"], cfg.norm_eps), mk, mv,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim)
+        carry = carry + x
+        carry = carry + mlp_mod.mlp(
+            p["mlp"], rms_norm(carry, p["ln2"], cfg.norm_eps), cfg.activation)
+        return carry, (ck, cv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["mem_k"], cache["mem_v"]), unroll=scan_unroll())
+    new_cache = {**cache, "k": nk, "v": nv}
+    return tf.lm_head(cfg, params, h), new_cache

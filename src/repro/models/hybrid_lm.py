@@ -1,0 +1,163 @@
+"""Zamba2-style hybrid LM: Mamba-2 backbone + one *shared* transformer block
+applied every ``shared_attn_every`` layers through per-application adapters.
+
+zamba2-7b: 81 SSD layers, shared block at layers 6,12,...,78 (13 applications)
+plus a 3-layer tail.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba_lm
+from repro.models import mlp as mlp_mod
+from repro.models import transformer as tf
+from repro.models.common import (
+    dense_init, embed_init, linear, rms_norm, scan_unroll,
+)
+from repro.models.ssm import ssm_decode_step, ssm_init_state
+
+Params = Dict[str, Any]
+
+
+def _n_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _n_tail(cfg: ArchConfig) -> int:
+    return cfg.n_layers - _n_apps(cfg) * cfg.shared_attn_every
+
+
+def init(cfg: ArchConfig, rng, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 8)
+    n_apps, k = _n_apps(cfg), cfg.shared_attn_every
+    blocks = jax.vmap(lambda r: mamba_lm.block_init(cfg, r, dtype))(
+        jax.random.split(ks[1], cfg.n_layers))
+    grouped = jax.tree.map(
+        lambda x: x[:n_apps * k].reshape(n_apps, k, *x.shape[1:]), blocks)
+    tail = jax.tree.map(lambda x: x[n_apps * k:], blocks)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "groups": grouped,
+        "tail": tail,
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.attn_init(ks[2], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_mod.mlp_init(ks[3], cfg.d_model, cfg.d_ff,
+                                    cfg.activation, dtype),
+        },
+        "adapt_in": dense_init(ks[4], cfg.d_model, cfg.d_model, dtype, (n_apps,)),
+        "adapt_out": dense_init(ks[5], cfg.d_model, cfg.d_model, dtype, (n_apps,)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[6], cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def _shared_apply(cfg: ArchConfig, shared: Params, a_in, a_out, h, *, use_pallas):
+    x = linear(h, a_in)
+    y = attn.self_attention(
+        shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, causal=True, use_pallas=use_pallas)
+    x = x + y
+    x = x + mlp_mod.mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps),
+                        cfg.activation)
+    return h + linear(x, a_out)
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            use_pallas: bool = False, remat: bool = True):
+    h = tf.embed_tokens(cfg, params, batch["tokens"])
+    shared = params["shared"]
+
+    def group_body(carry, inp):
+        pg, a_in, a_out = inp
+
+        def ssm_body(c, p):
+            return mamba_lm._block_apply(cfg, p, c, use_pallas=use_pallas), None
+        carry, _ = jax.lax.scan(ssm_body, carry, pg)
+        carry = _shared_apply(cfg, shared, a_in, a_out, carry,
+                              use_pallas=use_pallas)
+        return carry, None
+
+    group_body = jax.checkpoint(group_body) if remat else group_body
+    h, _ = jax.lax.scan(group_body, h,
+                        (params["groups"], params["adapt_in"], params["adapt_out"]),
+                        unroll=scan_unroll())
+
+    def tail_body(c, p):
+        return mamba_lm._block_apply(cfg, p, c, use_pallas=use_pallas), None
+    tail_body = jax.checkpoint(tail_body) if remat else tail_body
+    h, _ = jax.lax.scan(tail_body, h, params["tail"], unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    n_apps, k = _n_apps(cfg), cfg.shared_attn_every
+    ssm_single = ssm_init_state(batch, cfg.d_inner, cfg.ssm_state,
+                                cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv)
+    kv_shape = (n_apps, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "ssm_groups": jax.tree.map(
+            lambda x: jnp.zeros((n_apps, k, *x.shape), x.dtype), ssm_single),
+        "ssm_tail": jax.tree.map(
+            lambda x: jnp.zeros((_n_tail(cfg), *x.shape), x.dtype), ssm_single),
+        "k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    h = tf.embed_tokens(cfg, params, tokens)
+    shared = params["shared"]
+    k_every = cfg.shared_attn_every
+
+    def ssm_step(c, p, st):
+        out, st = ssm_decode_step(
+            p["ssm"], rms_norm(c, p["ln"], cfg.norm_eps), st,
+            d_inner=cfg.d_inner, d_state=cfg.ssm_state, n_heads=cfg.n_ssm_heads,
+            head_dim=cfg.ssm_head_dim, norm_eps=cfg.norm_eps)
+        return c + out, st
+
+    def group_body(carry, inp):
+        pg, a_in, a_out, st_g, ck, cv = inp
+
+        def inner(c, xs):
+            p, st = xs
+            c, st = ssm_step(c, p, st)
+            return c, st
+        carry, st_g = jax.lax.scan(inner, carry, (pg, st_g))
+        # shared attention block (decode)
+        x = linear(carry, a_in)
+        y, (ck, cv) = attn.decode_self_attention(
+            shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps), ck, cv, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta)
+        x = x + y
+        x = x + mlp_mod.mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps),
+                            cfg.activation)
+        carry = carry + linear(x, a_out)
+        return carry, (st_g, ck, cv)
+
+    h, (st_groups, nk, nv) = jax.lax.scan(
+        group_body, h,
+        (params["groups"], params["adapt_in"], params["adapt_out"],
+         cache["ssm_groups"], cache["k"], cache["v"]), unroll=scan_unroll())
+
+    def tail_body(c, xs):
+        p, st = xs
+        c, st = ssm_step(c, p, st)
+        return c, st
+    h, st_tail = jax.lax.scan(tail_body, h, (params["tail"], cache["ssm_tail"]),
+                              unroll=scan_unroll())
+
+    new_cache = {"ssm_groups": st_groups, "ssm_tail": st_tail, "k": nk, "v": nv}
+    return tf.lm_head(cfg, params, h), new_cache

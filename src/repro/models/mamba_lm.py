@@ -1,0 +1,83 @@
+"""Mamba-2 (SSD) language model — attention-free (mamba2-2.7b)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.common import dense_init, embed_init, rms_norm, scan_unroll
+from repro.models.ssm import (
+    ssm_block, ssm_decode_step, ssm_init, ssm_init_state,
+)
+
+Params = Dict[str, Any]
+
+
+def block_init(cfg: ArchConfig, rng, dtype) -> Params:
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "ssm": ssm_init(rng, cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.n_ssm_heads, cfg.ssm_conv, dtype),
+    }
+
+
+def init(cfg: ArchConfig, rng, dtype=jnp.float32) -> Params:
+    k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+    p: Params = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": jax.vmap(lambda k: block_init(cfg, k, dtype))(
+            jax.random.split(k_blocks, cfg.n_layers)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def _block_apply(cfg: ArchConfig, p: Params, h: jnp.ndarray, *, use_pallas: bool):
+    return h + ssm_block(
+        p["ssm"], rms_norm(h, p["ln"], cfg.norm_eps),
+        d_inner=cfg.d_inner, d_state=cfg.ssm_state, n_heads=cfg.n_ssm_heads,
+        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk, use_pallas=use_pallas,
+        norm_eps=cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            use_pallas: bool = False, remat: bool = True):
+    h = tf.embed_tokens(cfg, params, batch["tokens"])
+
+    def body(carry, p):
+        return _block_apply(cfg, p, carry, use_pallas=use_pallas), None
+
+    body = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body, h, params["blocks"], unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    del seq_len, dtype  # SSM state is O(1) in sequence length
+    single = ssm_init_state(batch, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                            cfg.ssm_head_dim, cfg.ssm_conv)
+    return jax.tree.map(
+        lambda x: jnp.zeros((cfg.n_layers, *x.shape), x.dtype), single)
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    del pos  # SSM decode is position-free
+    h = tf.embed_tokens(cfg, params, tokens)
+
+    def body(carry, inp):
+        p, st = inp
+        out, st = ssm_decode_step(
+            p["ssm"], rms_norm(carry, p["ln"], cfg.norm_eps), st,
+            d_inner=cfg.d_inner, d_state=cfg.ssm_state, n_heads=cfg.n_ssm_heads,
+            head_dim=cfg.ssm_head_dim, norm_eps=cfg.norm_eps)
+        return carry + out, st
+
+    h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache),
+                                unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), new_cache

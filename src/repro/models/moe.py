@@ -1,0 +1,92 @@
+"""Top-k routed mixture-of-experts with capacity-bounded scatter dispatch.
+
+Dispatch is the GShard cumsum algorithm without the dense (T, E, C) one-hot:
+per-assignment positions inside each expert come from a cumulative sum of the
+assignment one-hot, then tokens are scattered into an (E, C, d) buffer
+(out-of-capacity assignments dropped), experts run as one batched einsum, and
+outputs are gathered back weighted by the router gate.  Under GSPMD the
+scatter/gather lower to all-to-all-style exchanges when experts are sharded.
+
+Expert weights are sharded expert-dim over the ``data`` axis (EP=DP, confined
+to a pod — paper rule 1) and ff-dim over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activate, dense_init, linear, shard_act
+from repro.models.mlp import GATED
+
+
+def moe_init(rng, d_model: int, d_ff: int, n_experts: int, activation: str,
+             dtype=jnp.float32, stack: Tuple[int, ...] = ()) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 4)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32, stack),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype, (*stack, n_experts)),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype, (*stack, n_experts)),
+    }
+    if activation in GATED:
+        p["w_gate"] = dense_init(ks[3], d_model, d_ff, dtype, (*stack, n_experts))
+    return p
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_block(p: Dict[str, Any], h: jnp.ndarray, *, top_k: int,
+              capacity_factor: float, activation: str,
+              router_aux_coef: float = 0.0):
+    """h: (B, T, d) -> (out: (B, T, d), aux_loss: scalar f32)."""
+    B, T, d = h.shape
+    E = p["w_up"].shape[0]
+    n_tok = B * T
+    C = _capacity(n_tok, E, top_k, capacity_factor)
+    x = h.reshape(n_tok, d)
+
+    # --- routing (f32) -----------------------------------------------------
+    logits = linear(x.astype(jnp.float32), p["router"])           # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)            # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- load-balance auxiliary loss (Switch/GShard form) -------------------
+    frac_prob = jnp.mean(probs, axis=0)                            # (E,)
+    top1 = expert_ids[:, 0]
+    frac_tok = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    aux = router_aux_coef * E * jnp.sum(frac_prob * frac_tok)
+
+    # --- positions within experts (priority = routing order, then token id) --
+    flat_e = expert_ids.T.reshape(-1)                              # (k*N,) k-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (k*N, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                      # (k*N,)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                                # OOB -> dropped
+
+    # --- dispatch: scatter tokens into (E, C, d) -----------------------------
+    x_rep = jnp.broadcast_to(x[None], (top_k, n_tok, d)).reshape(-1, d)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, pos_c].set(x_rep.astype(x.dtype), mode="drop")
+    buf = shard_act(buf, ("expert", None, "embed"))
+
+    # --- expert computation (batched over experts) ----------------------------
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    if activation in GATED:
+        gt = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+        up = activate(gt, activation) * up
+    else:
+        up = activate(up, activation)
+    up = shard_act(up, ("expert", None, "ff"))
+    out_buf = jnp.einsum("ecf,efd->ecd", up, p["w_down"].astype(buf.dtype))
+
+    # --- combine: gather + gate-weighted sum over k ----------------------------
+    gathered = out_buf.at[flat_e, pos_c].get(mode="fill", fill_value=0)  # (k*N, d)
+    w = (gate_vals.T.reshape(-1) * keep).astype(jnp.float32)
+    y = jnp.sum((gathered.astype(jnp.float32) * w[:, None]).reshape(top_k, n_tok, d), axis=0)
+    return y.reshape(B, T, d).astype(h.dtype), aux

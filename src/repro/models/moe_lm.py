@@ -1,0 +1,95 @@
+"""Mixture-of-experts decoder LMs (qwen3-moe-235b-a22b, granite-moe-1b-a400m)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import transformer as tf
+from repro.models.common import dense_init, embed_init, rms_norm, scan_unroll
+from repro.models.moe import moe_block, moe_init
+
+Params = Dict[str, Any]
+
+
+def block_init(cfg: ArchConfig, rng, dtype) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "moe": moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                        cfg.activation, dtype),
+    }
+
+
+def init(cfg: ArchConfig, rng, dtype=jnp.float32) -> Params:
+    k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+    p: Params = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": jax.vmap(lambda k: block_init(cfg, k, dtype))(
+            jax.random.split(k_blocks, cfg.n_layers)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def _block_apply(cfg: ArchConfig, p: Params, h: jnp.ndarray, *,
+                 use_pallas: bool):
+    a = attn.self_attention(
+        p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, causal=True, use_pallas=use_pallas)
+    h = h + a
+    m, aux = moe_block(p["moe"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                       top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                       activation=cfg.activation,
+                       router_aux_coef=cfg.router_aux_coef)
+    return h + m, aux
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            use_pallas: bool = False, remat: bool = True):
+    h = tf.embed_tokens(cfg, params, batch["tokens"])
+
+    def body(carry, p):
+        hh, aux_total = carry
+        hh, aux = _block_apply(cfg, p, hh, use_pallas=use_pallas)
+        return (hh, aux_total + aux), None
+
+    body = jax.checkpoint(body) if remat else body
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    h = tf.embed_tokens(cfg, params, tokens)
+
+    def body(carry, inp):
+        p, ck, cv = inp
+        a, (ck, cv) = attn.decode_self_attention(
+            p["attn"], rms_norm(carry, p["ln1"], cfg.norm_eps), ck, cv, pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+        hh = carry + a
+        m, _ = moe_block(p["moe"], rms_norm(hh, p["ln2"], cfg.norm_eps),
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         activation=cfg.activation, router_aux_coef=0.0)
+        return hh + m, (ck, cv)
+
+    h, (nk, nv) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]),
+                               unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), {"k": nk, "v": nv}

@@ -1,0 +1,267 @@
+"""Prefill: full-sequence forward that RETURNS the serving state.
+
+``prefill(cfg, params, batch, cache_len=None)`` -> (last_logits (B,1,V),
+cache) where the cache is decode-compatible (same layouts as each family's
+``init_cache`` / ``decode_step``).  This is the real inference-prefill
+compute pattern: hidden states for every position, per-layer KV / SSM state
+materialized, only the final position's logits produced.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import encdec, hybrid_lm, mamba_lm, moe_lm, transformer, vlm
+from repro.models import mlp as mlp_mod
+from repro.models.common import linear, rms_norm, scan_unroll, shard_act
+from repro.models.moe import moe_block
+from repro.models.ssm import ssm_block
+
+Params = Dict[str, Any]
+
+
+def _attn_collect(cfg, p, h, *, window=0, use_pallas=False):
+    a, (k, v) = attn.self_attention(
+        p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, causal=True, window=window,
+        use_pallas=use_pallas, return_kv=True)
+    return h + a, k, v
+
+
+def _pad_cache(k: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    """(..., T, KV, D) -> (..., cache_len, KV, D), right-padded."""
+    T = k.shape[-3]
+    if cache_len == T:
+        return k
+    assert cache_len > T
+    pad = [(0, 0)] * k.ndim
+    pad[-3] = (0, cache_len - T)
+    return jnp.pad(k, pad)
+
+
+def _ring_slice(k: jnp.ndarray, loc_len: int, T: int) -> jnp.ndarray:
+    """Last ``loc_len`` positions laid out in decode's ring order
+    (slot = position % loc_len, matching the decode ring buffer size)."""
+    w = min(loc_len, T)
+    tail = k[:, T - w:]
+    slots = (jnp.arange(T - w, T)) % loc_len
+    ring = jnp.zeros((k.shape[0], loc_len, *k.shape[2:]), k.dtype)
+    return ring.at[:, slots].set(tail)
+
+
+def _mlp_res(cfg, p, h):
+    return h + mlp_mod.mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps),
+                           cfg.activation)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _prefill_dense(cfg, params, batch, cache_len, dtype, use_pallas):
+    h = transformer.embed_tokens(cfg, params, batch["tokens"])
+    T = h.shape[1]
+    ratio = cfg.local_global_ratio
+
+    if not ratio:
+        def body(hh, p):
+            hh, k, v = _attn_collect(cfg, p, hh, window=cfg.sliding_window,
+                                     use_pallas=use_pallas)
+            hh = _mlp_res(cfg, p, hh)
+            return shard_act(hh, ("batch", "seq", "embed")), (k, v)
+        h, (ks, vs) = jax.lax.scan(body, h, params["blocks"], unroll=scan_unroll())
+        ks = shard_act(_pad_cache(ks.astype(dtype), cache_len),
+                       (None, "batch", "kv_seq", None, None))
+        vs = shard_act(_pad_cache(vs.astype(dtype), cache_len),
+                       (None, "batch", "kv_seq", None, None))
+        cache = {"k": ks, "v": vs}
+    else:
+        gsz = ratio + 1
+        G = cfg.n_layers // gsz
+        grouped = jax.tree.map(
+            lambda x: x.reshape(G, gsz, *x.shape[1:]), params["blocks"])
+
+        loc_len = min(cache_len, cfg.sliding_window)
+
+        def gbody(hh, pg):
+            loc_k, loc_v = [], []
+            for i in range(ratio):
+                p = jax.tree.map(lambda x: x[i], pg)
+                hh, k, v = _attn_collect(cfg, p, hh, window=cfg.sliding_window,
+                                         use_pallas=use_pallas)
+                hh = _mlp_res(cfg, p, hh)
+                loc_k.append(_ring_slice(k, loc_len, T))
+                loc_v.append(_ring_slice(v, loc_len, T))
+            pglob = jax.tree.map(lambda x: x[ratio], pg)
+            hh, gk, gv = _attn_collect(cfg, pglob, hh, window=0,
+                                       use_pallas=use_pallas)
+            hh = _mlp_res(cfg, pglob, hh)
+            return hh, (jnp.stack(loc_k), jnp.stack(loc_v), gk, gv)
+
+        h, (lk, lv, gk, gv) = jax.lax.scan(gbody, h, grouped, unroll=scan_unroll())
+        cache = {
+            "k_loc": lk.astype(dtype), "v_loc": lv.astype(dtype),
+            "k_glb": shard_act(_pad_cache(gk.astype(dtype), cache_len),
+                               (None, "batch", "kv_seq", None, None)),
+            "v_glb": shard_act(_pad_cache(gv.astype(dtype), cache_len),
+                               (None, "batch", "kv_seq", None, None)),
+        }
+    return transformer.lm_head(cfg, params, h[:, -1:]), cache
+
+
+def _prefill_moe(cfg, params, batch, cache_len, dtype, use_pallas):
+    h = transformer.embed_tokens(cfg, params, batch["tokens"])
+
+    def body(hh, p):
+        hh, k, v = _attn_collect(cfg, p, hh, use_pallas=use_pallas)
+        m, _ = moe_block(p["moe"], rms_norm(hh, p["ln2"], cfg.norm_eps),
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         activation=cfg.activation, router_aux_coef=0.0)
+        return hh + m, (k, v)
+    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"], unroll=scan_unroll())
+    kv_spec = (None, "batch", "kv_seq", None, None)
+    cache = {"k": shard_act(_pad_cache(ks.astype(dtype), cache_len), kv_spec),
+             "v": shard_act(_pad_cache(vs.astype(dtype), cache_len), kv_spec)}
+    return transformer.lm_head(cfg, params, h[:, -1:]), cache
+
+
+def _ssm_block_state(cfg, p, h, use_pallas):
+    out, st = ssm_block(
+        p["ssm"], rms_norm(h, p["ln"], cfg.norm_eps),
+        d_inner=cfg.d_inner, d_state=cfg.ssm_state, n_heads=cfg.n_ssm_heads,
+        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+        use_pallas=use_pallas, norm_eps=cfg.norm_eps, return_state=True)
+    return h + out, st
+
+
+def _prefill_ssm(cfg, params, batch, cache_len, dtype, use_pallas):
+    h = transformer.embed_tokens(cfg, params, batch["tokens"])
+
+    def body(hh, p):
+        hh, st = _ssm_block_state(cfg, p, hh, use_pallas)
+        return hh, st
+    h, states = jax.lax.scan(body, h, params["blocks"], unroll=scan_unroll())
+    return transformer.lm_head(cfg, params, h[:, -1:]), states
+
+
+def _prefill_hybrid(cfg, params, batch, cache_len, dtype, use_pallas):
+    h = transformer.embed_tokens(cfg, params, batch["tokens"])
+    shared = params["shared"]
+    T = h.shape[1]
+
+    def gbody(hh, xs):
+        pg, a_in, a_out = xs
+
+        def inner(c, p):
+            return _ssm_block_state(cfg, p, c, use_pallas)
+        hh, st = jax.lax.scan(inner, hh, pg, unroll=scan_unroll())
+        x = linear(hh, a_in)
+        y, (k, v) = attn.self_attention(
+            shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True,
+            use_pallas=use_pallas, return_kv=True)
+        x = x + y
+        x = x + mlp_mod.mlp(shared["mlp"], rms_norm(x, shared["ln2"],
+                                                    cfg.norm_eps),
+                            cfg.activation)
+        hh = hh + linear(x, a_out)
+        return hh, (st, k, v)
+
+    h, (st_g, ks, vs) = jax.lax.scan(
+        gbody, h, (params["groups"], params["adapt_in"], params["adapt_out"]),
+        unroll=scan_unroll())
+
+    def tbody(c, p):
+        return _ssm_block_state(cfg, p, c, use_pallas)
+    h, st_t = jax.lax.scan(tbody, h, params["tail"], unroll=scan_unroll())
+
+    kv_spec = (None, "batch", "kv_seq", None, None)
+    cache = {"ssm_groups": st_g, "ssm_tail": st_t,
+             "k": shard_act(_pad_cache(ks.astype(dtype), cache_len), kv_spec),
+             "v": shard_act(_pad_cache(vs.astype(dtype), cache_len), kv_spec)}
+    return transformer.lm_head(cfg, params, h[:, -1:]), cache
+
+
+def _prefill_vlm(cfg, params, batch, cache_len, dtype, use_pallas):
+    h = transformer.embed_tokens(cfg, params, batch["tokens"])
+    memory = batch["image_embeds"].astype(h.dtype)
+
+    def gbody(hh, xs):
+        pg_self, pg_cross = xs
+        nk, nv = [], []
+        n_self = jax.tree.leaves(pg_self)[0].shape[0]
+        for i in range(n_self):
+            p = jax.tree.map(lambda x: x[i], pg_self)
+            hh, k, v = _attn_collect(cfg, p, hh, use_pallas=use_pallas)
+            hh = _mlp_res(cfg, p, hh)
+            nk.append(k)
+            nv.append(v)
+        hh, (mk, mv) = vlm._cross_apply(cfg, pg_cross, hh, memory,
+                                        use_pallas=use_pallas, return_kv=True)
+        return hh, (jnp.stack(nk), jnp.stack(nv), mk, mv)
+
+    h, (ks, vs, mks, mvs) = jax.lax.scan(
+        gbody, h, (params["self_blocks"], params["cross_blocks"]),
+        unroll=scan_unroll())
+    kv_spec = (None, None, "batch", "kv_seq", None, None)
+    cache = {"k": shard_act(_pad_cache(ks.astype(dtype), cache_len), kv_spec),
+             "v": shard_act(_pad_cache(vs.astype(dtype), cache_len), kv_spec),
+             "mem_k": mks.astype(dtype), "mem_v": mvs.astype(dtype)}
+    return transformer.lm_head(cfg, params, h[:, -1:]), cache
+
+
+def _prefill_audio(cfg, params, batch, cache_len, dtype, use_pallas):
+    memory = encdec.encode(cfg, params,
+                           batch["frames"].astype(params["embed"].dtype),
+                           use_pallas=use_pallas)
+    tokens = batch["tokens"]
+    T = tokens.shape[1]
+    h = params["embed"][tokens]
+    h = h + params["pos_embed"][jnp.arange(T) % encdec.MAX_DEC_POS][None]
+
+    def body(hh, p):
+        a, (k, v) = attn.self_attention(
+            p["attn"], rms_norm(hh, p["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=0.0, causal=True,
+            use_pallas=use_pallas, return_kv=True)
+        hh = hh + a
+        x, (mk, mv) = attn.cross_attention(
+            p["xattn"], rms_norm(hh, p["ln_x"], cfg.norm_eps), memory,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, use_pallas=use_pallas, return_kv=True)
+        hh = hh + x
+        hh = hh + mlp_mod.mlp(p["mlp"], rms_norm(hh, p["ln2"], cfg.norm_eps),
+                              cfg.activation)
+        return hh, (k, v, mk, mv)
+
+    h, (ks, vs, mks, mvs) = jax.lax.scan(body, h, params["dec_blocks"], unroll=scan_unroll())
+    kv_spec = (None, "batch", "kv_seq", None, None)
+    cache = {"k": shard_act(_pad_cache(ks.astype(dtype), cache_len), kv_spec),
+             "v": shard_act(_pad_cache(vs.astype(dtype), cache_len), kv_spec),
+             "mem_k": mks.astype(dtype), "mem_v": mvs.astype(dtype)}
+    return transformer.lm_head(cfg, params, h[:, -1:]), cache
+
+
+_FAMILY = {
+    "dense": _prefill_dense,
+    "moe": _prefill_moe,
+    "ssm": _prefill_ssm,
+    "hybrid": _prefill_hybrid,
+    "vlm": _prefill_vlm,
+    "audio": _prefill_audio,
+}
+
+
+def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            cache_len: Optional[int] = None, cache_dtype=jnp.bfloat16,
+            use_pallas: bool = False) -> Tuple[jnp.ndarray, Any]:
+    T = batch["tokens"].shape[1]
+    cache_len = cache_len or T
+    return _FAMILY[cfg.family](cfg, params, batch, cache_len, cache_dtype,
+                               use_pallas)

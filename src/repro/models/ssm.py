@@ -1,0 +1,234 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Implements the chunked SSD algorithm (intra-chunk quadratic term + inter-chunk
+linear state recurrence) in pure jnp; the intra-chunk term is the compute
+hot-spot and has a Pallas kernel (``repro.kernels.ssd_scan``) selected via
+``use_pallas``.  ``ssd_naive`` is the sequential oracle used by tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear, rms_norm, shard_act
+
+
+def ssm_init(rng, d_model: int, d_inner: int, d_state: int, n_heads: int,
+             d_conv: int, dtype=jnp.float32, stack: Tuple[int, ...] = ()) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 6)
+    d_proj = 2 * d_inner + 2 * d_state + n_heads   # z, xBC, dt
+    d_xbc = d_inner + 2 * d_state
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_proj, dtype, stack),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (*stack, d_conv, d_xbc), jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((*stack, d_xbc), dtype),
+        "A_log": jnp.zeros((*stack, n_heads), jnp.float32),        # A = -exp(0) = -1
+        "D": jnp.ones((*stack, n_heads), jnp.float32),
+        "dt_bias": jnp.zeros((*stack, n_heads), jnp.float32),
+        "norm_w": jnp.ones((*stack, d_inner), dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype, stack),
+    }
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, T, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):  # K is tiny (4): unrolled taps
+        out = out + pad[:, k:k + x.shape[1]].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_naive(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential oracle.  x: (B,T,H,P); dt: (B,T,H); A: (H,) (negative);
+    Bm, Cm: (B,T,N).  Returns (y: (B,T,H,P), final_state: (B,H,P,N))."""
+    Bsz, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+    if init_state is None:
+        # derive zeros from the input so collective-varying axes (vma) inside
+        # shard_map pipelines are inherited by the scan carry
+        s0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32) + \
+            0.0 * x[:, 0, :, :, None].astype(jnp.float32)
+    else:
+        s0 = init_state
+
+    def step(s, inp):
+        x_t, dt_t, B_t, C_t = inp                      # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(A[None] * dt_t)                # (B,H)
+        upd = (dt_t[:, :, None] * x_t)[..., None] * B_t[:, None, None, :]
+        s = s * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, C_t)
+        return s, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_fin
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None, use_pallas: bool = False):
+    """Chunked SSD (Mamba-2 alg. 1). Shapes as :func:`ssd_naive`."""
+    Bsz, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    if T % Q:
+        pad = Q - T % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = x.shape[1]
+    nc = Tp // Q
+    xc = x.reshape(Bsz, nc, Q, H, Pd).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    a = A[None, None, None, :] * dtc                       # (B,nc,Q,H) log-decays (<=0)
+    cum = jnp.cumsum(a, axis=2)                            # inclusive cumsum
+    total = cum[:, :, -1]                                  # (B,nc,H)
+
+    # ---- chunk input states: S_c = sum_q exp(total - cum_q) dt_q x_q B_q^T
+    w_in = jnp.exp(total[:, :, None] - cum) * dtc          # (B,nc,Q,H)
+    S_in = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w_in, xc, Bc)
+
+    # ---- inter-chunk recurrence over chunk axis
+    if init_state is None:
+        s0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32) + \
+            0.0 * xc[:, 0, 0, :, :, None]    # inherit vma (see ssd_naive)
+    else:
+        s0 = init_state
+    dec_tot = jnp.exp(total)                               # (B,nc,H)
+
+    def scan_fn(s, inp):
+        d_c, S_c = inp                                     # (B,H), (B,H,P,N)
+        s_prev = s
+        s = s * d_c[:, :, None, None] + S_c
+        return s, s_prev
+
+    s_fin, S_prev = jax.lax.scan(
+        scan_fn, s0, (jnp.moveaxis(dec_tot, 1, 0), jnp.moveaxis(S_in, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                    # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: C_q . (exp(cum_q) * S_prev)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, S_prev) * jnp.exp(cum)[..., None]
+
+    # ---- intra-chunk (quadratic) part — the kernel hot-spot
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y_intra = kops.ssd_intra(xc, dtc, cum, Bc, Cc)
+    else:
+        y_intra = ssd_intra_ref(xc, dtc, cum, Bc, Cc)
+
+    y = (y_intra + y_inter).reshape(Bsz, Tp, H, Pd)[:, :T]
+    return y.astype(x.dtype), s_fin
+
+
+def ssd_intra_ref(xc, dtc, cum, Bc, Cc):
+    """Intra-chunk quadratic term (jnp oracle).
+
+    xc: (B,nc,Q,H,P); dtc: (B,nc,Q,H); cum: (B,nc,Q,H) inclusive log-decay
+    cumsum; Bc, Cc: (B,nc,Q,N).  Output (B,nc,Q,H,P)."""
+    Q = xc.shape[2]
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)             # (B,nc,Q,Q)
+    # decay from step k (exclusive) to q (inclusive): exp(cum_q - cum_k)
+    ldec = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(ldec), 0.0)
+    M = CB[..., None] * L * dtc[:, :, None, :, :]          # (B,nc,Q,K,H)
+    return jnp.einsum("bcqkh,bckhp->bcqhp", M, xc)
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+
+def ssm_block(p: Dict[str, Any], h: jnp.ndarray, *, d_inner: int, d_state: int,
+              n_heads: int, head_dim: int, chunk: int,
+              use_pallas: bool = False, norm_eps: float = 1e-6,
+              return_state: bool = False):
+    """Mamba-2 mixer over a full sequence. h: (B, T, d_model).
+
+    ``return_state`` additionally returns the decode-compatible state
+    (final SSD state + conv tail) for prefill."""
+    B, T, _ = h.shape
+    zxbcdt = linear(h, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xBC_raw = zxbcdt[..., d_inner:2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., -n_heads:].astype(jnp.float32)
+    xBC = jax.nn.silu(causal_conv1d(xBC_raw, p["conv_w"], p["conv_b"]))
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + d_state]
+    Cm = xBC[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(B, T, n_heads, head_dim)
+    xh = shard_act(xh, ("batch", "seq", "heads", None))
+    y, s_fin = ssd_chunked(xh, dt, A, Bm, Cm, chunk, use_pallas=use_pallas)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype),
+                 p["norm_w"], norm_eps)
+    out = linear(y, p["out_proj"])
+    if return_state:
+        K = p["conv_w"].shape[0]
+        tail = xBC_raw[:, max(T - (K - 1), 0):].astype(jnp.float32)
+        if T < K - 1:
+            tail = jnp.pad(tail, ((0, 0), (K - 1 - T, 0), (0, 0)))
+        return out, {"s": s_fin, "conv": tail}
+    return out
+
+
+def ssm_init_state(batch: int, d_inner: int, d_state: int, n_heads: int,
+                   head_dim: int, d_conv: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "s": jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner + 2 * d_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(p: Dict[str, Any], h: jnp.ndarray, state: Dict[str, jnp.ndarray], *,
+                    d_inner: int, d_state: int, n_heads: int, head_dim: int,
+                    norm_eps: float = 1e-6):
+    """One-token SSM step. h: (B, 1, d_model). Returns (out, new_state)."""
+    B = h.shape[0]
+    zxbcdt = linear(h[:, 0], p["in_proj"])                  # (B, d_proj)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., -n_heads:].astype(jnp.float32)
+
+    # conv ring: state['conv'] holds the previous K-1 inputs
+    K = p["conv_w"].shape[0]
+    win = jnp.concatenate([state["conv"], xBC[:, None, :].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = win[:, 1:]
+
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + d_state]
+    Cm = xBC[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))     # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(B, n_heads, head_dim).astype(jnp.float32)
+
+    decay = jnp.exp(A[None] * dt)                                    # (B,H)
+    upd = (dt[:, :, None] * xh)[..., None] * Bm[:, None, None, :]
+    s = state["s"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype),
+                 p["norm_w"], norm_eps)
+    out = linear(y, p["out_proj"])[:, None, :]
+    return out, {"s": s, "conv": new_conv}

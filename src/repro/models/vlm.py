@@ -1,0 +1,148 @@
+"""Llama-3.2-Vision-style VLM backbone: decoder with cross-attention image
+layers every ``cross_attn_every`` layers.  The vision tower is a STUB —
+``input_specs`` supplies precomputed patch embeddings (B, n_image_tokens, d).
+
+100 layers = 20 groups of (4 self-attn blocks + 1 cross-attn block).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import transformer as tf
+from repro.models.common import dense_init, embed_init, rms_norm, scan_unroll
+
+Params = Dict[str, Any]
+
+
+def _group_dims(cfg: ArchConfig):
+    gsz = cfg.cross_attn_every
+    n_groups = cfg.n_layers // gsz
+    return n_groups, gsz - 1  # (groups, self layers per group)
+
+
+def cross_block_init(cfg: ArchConfig, rng, dtype) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "xattn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, dtype),
+        "gate_a": jnp.zeros((), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_mod.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+        "gate_m": jnp.zeros((), dtype),
+    }
+
+
+def init(cfg: ArchConfig, rng, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 4)
+    n_groups, n_self = _group_dims(cfg)
+    self_blocks = jax.vmap(lambda r: tf.block_init(cfg, r, dtype))(
+        jax.random.split(ks[1], n_groups * n_self))
+    cross_blocks = jax.vmap(lambda r: cross_block_init(cfg, r, dtype))(
+        jax.random.split(ks[2], n_groups))
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "self_blocks": jax.tree.map(
+            lambda x: x.reshape(n_groups, n_self, *x.shape[1:]), self_blocks),
+        "cross_blocks": cross_blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _cross_apply(cfg: ArchConfig, p: Params, h, memory, *, use_pallas,
+                 memory_kv=None, return_kv=False):
+    res = attn.cross_attention(
+        p["xattn"], rms_norm(h, p["ln1"], cfg.norm_eps), memory,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        use_pallas=use_pallas, memory_kv=memory_kv, return_kv=return_kv)
+    if return_kv:
+        a, kv = res
+    else:
+        a, kv = res, None
+    h = h + jnp.tanh(p["gate_a"].astype(jnp.float32)).astype(h.dtype) * a
+    m = mlp_mod.mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg.activation)
+    h = h + jnp.tanh(p["gate_m"].astype(jnp.float32)).astype(h.dtype) * m
+    return (h, kv) if return_kv else h
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray], *,
+            use_pallas: bool = False, remat: bool = True):
+    h = tf.embed_tokens(cfg, params, batch["tokens"])
+    memory = batch["image_embeds"].astype(h.dtype)
+
+    def group_body(carry, inp):
+        pg_self, pg_cross = inp
+
+        def self_body(c, p):
+            return tf._block_apply(cfg, p, c, window=0, use_pallas=use_pallas), None
+        carry, _ = jax.lax.scan(self_body, carry, pg_self)
+        carry = _cross_apply(cfg, pg_cross, carry, memory, use_pallas=use_pallas)
+        return carry, None
+
+    group_body = jax.checkpoint(group_body) if remat else group_body
+    h, _ = jax.lax.scan(group_body, h,
+                        (params["self_blocks"], params["cross_blocks"]),
+                        unroll=scan_unroll())
+    return tf.lm_head(cfg, params, h), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    n_groups, n_self = _group_dims(cfg)
+    kv = (n_groups, n_self, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    mem = (n_groups, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "mem_k": jnp.zeros(mem, dtype), "mem_v": jnp.zeros(mem, dtype)}
+
+
+def prefill_cross_kv(cfg: ArchConfig, params: Params, image_embeds, cache: Params):
+    """Precompute per-group cross-attention KV from image memory."""
+    def one(p):
+        k = attn._split_heads(
+            jnp.einsum("bmd,dk->bmk", image_embeds, p["xattn"]["wk"]),
+            cfg.n_kv_heads, cfg.head_dim)
+        v = attn._split_heads(
+            jnp.einsum("bmd,dk->bmk", image_embeds, p["xattn"]["wv"]),
+            cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+    k, v = jax.vmap(one)(params["cross_blocks"])
+    return {**cache, "mem_k": k.astype(cache["mem_k"].dtype),
+            "mem_v": v.astype(cache["mem_v"].dtype)}
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray):
+    h = tf.embed_tokens(cfg, params, tokens)
+
+    def group_body(carry, inp):
+        pg_self, pg_cross, ck, cv, mk, mv = inp
+        nk, nv = [], []
+        n_self = ck.shape[0]
+        for i in range(n_self):
+            p = jax.tree.map(lambda x: x[i], pg_self)
+            carry, cki, cvi = tf._decode_block(cfg, p, carry, ck[i], cv[i], pos, 0)
+            nk.append(cki)
+            nv.append(cvi)
+        a = attn.decode_cross_attention(
+            pg_cross["xattn"], rms_norm(carry, pg_cross["ln1"], cfg.norm_eps),
+            mk, mv, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim)
+        carry = carry + jnp.tanh(pg_cross["gate_a"].astype(jnp.float32)).astype(carry.dtype) * a
+        m = mlp_mod.mlp(pg_cross["mlp"], rms_norm(carry, pg_cross["ln2"], cfg.norm_eps),
+                        cfg.activation)
+        carry = carry + jnp.tanh(pg_cross["gate_m"].astype(jnp.float32)).astype(carry.dtype) * m
+        return carry, (jnp.stack(nk), jnp.stack(nv))
+
+    h, (nk, nv) = jax.lax.scan(
+        group_body, h,
+        (params["self_blocks"], params["cross_blocks"],
+         cache["k"], cache["v"], cache["mem_k"], cache["mem_v"]),
+        unroll=scan_unroll())
+    new_cache = {**cache, "k": nk, "v": nv}
+    return tf.lm_head(cfg, params, h), new_cache

@@ -1,0 +1,3 @@
+from repro.parallel import sharding
+from repro.parallel.pipeline import pipeline_loss_fn
+from repro.parallel.staging import build_staging

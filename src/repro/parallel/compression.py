@@ -1,0 +1,72 @@
+"""Gradient compression for slow (cross-pod) reductions: int8 block
+quantization with error feedback.
+
+Beyond-paper distributed-optimization trick (HAPT avoids cross-cluster
+collectives entirely; when a deployment *does* reduce gradients across the
+DCN — e.g. zamba2's shared block whose parameters live on every stage — 4x
+smaller payloads matter).  Error feedback keeps the quantization bias out of
+the optimizer: the residual (g - dequant(quant(g))) is added to the next
+step's gradient, which provably preserves SGD convergence.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % BLOCK
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size)
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, err_fb):
+    """Apply error feedback + quantize each leaf.  Returns (payload, new_err).
+
+    payload leaves are (q, scale) pairs — 4x smaller on the wire than f32."""
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    e_leaves = treedef.flatten_up_to(err_fb)
+    qs, errs = [], []
+    for g, e in zip(g_leaves, e_leaves):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s, g.shape)
+        qs.append((q, s))
+        errs.append(corrected - deq)
+    payload = jax.tree_util.tree_unflatten(treedef, qs)
+    new_err = jax.tree_util.tree_unflatten(treedef, errs)
+    return payload, new_err
+
+
+def decompress_tree(payload, template):
+    return jax.tree.map(
+        lambda qs, t: dequantize_int8(qs[0], qs[1], t.shape, t.dtype),
+        payload, template,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)

@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules -> PartitionSpecs for parameters, optimizer
+states, activations and KV caches.
+
+Parameter specs are derived from leaf *names* in the model pytree (every
+model family uses the same naming vocabulary), with trailing-dims matching:
+a rule gives the spec of the rightmost dims; any extra leading dims (layer
+stacks, expert dims handled explicitly, pipeline-stage dims) are padded with
+``None`` / the stage axis.
+
+Axes of the production mesh: ``data`` (DP + FSDP), ``model`` (TP/SP),
+``pod`` (pipeline, multi-pod only).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+
+# rule: leaf name -> trailing-dim partition entries
+_PARAM_RULES: Dict[str, Tuple] = {
+    # embeddings / head
+    "embed": (TP, FSDP),           # (V, d)
+    "lm_head": (FSDP, TP),         # (d, V)
+    "pos_embed": (None, FSDP),
+    # attention / mlp / adapters (column-parallel in, row-parallel out)
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP),
+    "wo": (TP, FSDP),
+    "w_up": (FSDP, TP), "w_gate": (FSDP, TP), "w_down": (TP, FSDP),
+    "adapt_in": (FSDP, TP), "adapt_out": (TP, FSDP),
+    # MoE (expert dim -> FSDP axis = expert parallelism inside the pod)
+    "router": (FSDP, None),
+    "moe:w_up": (FSDP, None, TP), "moe:w_gate": (FSDP, None, TP),
+    "moe:w_down": (FSDP, TP, None),
+    # SSM
+    "in_proj": (FSDP, TP),
+    "conv_w": (None, TP), "conv_b": (TP,),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "norm_w": (TP,), "out_proj": (TP, FSDP),
+    # norms / scalars
+    "ln": (None,), "ln1": (None,), "ln2": (None,), "ln_x": (None,),
+    "final_norm": (None,), "enc_norm": (None,),
+    "gate_a": (), "gate_m": (),
+}
+
+
+def _leaf_spec(path: Tuple[str, ...], ndim: int) -> P:
+    name = path[-1]
+    in_moe = any(p in ("moe",) for p in path)
+    rule = None
+    if in_moe and f"moe:{name}" in _PARAM_RULES:
+        rule = _PARAM_RULES[f"moe:{name}"]
+    elif name in _PARAM_RULES:
+        rule = _PARAM_RULES[name]
+    if rule is None:
+        raise KeyError(f"no sharding rule for param {'/'.join(path)}")
+    pad = ndim - len(rule)
+    assert pad >= 0, f"{path}: rule {rule} longer than ndim {ndim}"
+    return P(*([None] * pad), *rule)
+
+
+def _tree_paths(tree) -> Any:
+    """Map each leaf to its (path, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: (tuple(_key_str(k) for k in kp), leaf), tree)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def param_pspecs(params_tree) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+    def one(kp, leaf):
+        path = tuple(_key_str(k) for k in kp)
+        ndim = len(leaf.shape)
+        return _leaf_spec(path, ndim)
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def param_shardings(params_tree, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params_tree))
+
+
+def staged_param_pspecs(params_tree, stage_axis: str = "pod") -> Any:
+    """Specs for pipeline-staged params: leading stage dim on every leaf."""
+    def one(kp, leaf):
+        path = tuple(_key_str(k) for k in kp)
+        spec = _leaf_spec(path, len(leaf.shape) - 1)
+        return P(stage_axis, *spec)
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules per execution context
+# ---------------------------------------------------------------------------
+
+
+def train_act_rules(multi_pod: bool = False) -> Dict[str, Optional[object]]:
+    """Single-pod: DP over data, TP over model.  Multi-pod: same inside a
+    stage (the pod axis is manual inside the pipeline shard_map)."""
+    return {
+        "batch": "data", "batch_head": "data", "seq": None, "embed": None,
+        "heads": "model", "kv_heads": "model", "ff": "model",
+        "vocab": "model", "expert": "data", "kv_seq": None,
+    }
+
+
+def prefill_act_rules(multi_pod: bool = False) -> Dict[str, Optional[object]]:
+    """Prefill is pure forward: DP over every free axis (pods included); the
+    produced KV cache is sequence-sharded over model (decode layout)."""
+    return {
+        "batch": ("pod", "data") if multi_pod else "data",
+        "batch_head": ("pod", "data") if multi_pod else "data",
+        "seq": None, "embed": None,
+        "heads": "model", "kv_heads": None, "ff": "model",
+        "vocab": "model", "expert": "data", "kv_seq": "model",
+    }
+
+
+def decode_act_rules(batch: int, multi_pod: bool = False) -> Dict[str, Optional[object]]:
+    """Decode: batch over (pod?, data) + KV-cache *sequence* over model (the
+    distributed-decode layout — works for any kv-head count incl. MQA);
+    batch=1 long-context shards the cache sequence over every free axis."""
+    if batch >= 16:
+        return {
+            "batch": ("pod", "data") if multi_pod else "data",
+            "seq": None, "embed": None,
+            "heads": "model", "kv_heads": None, "ff": "model",
+            "vocab": "model", "expert": "data",
+            "kv_seq": "model",
+        }
+    # long-context: sequence-shard the cache
+    kv = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "batch": None, "batch_head": None, "seq": None, "embed": None,
+        "heads": "model", "kv_heads": None, "ff": "model",
+        "vocab": "model", "expert": "data",
+        "kv_seq": kv,  # kv_heads must stay None: same spec as kv_seq axes
+    }
+
+
+def fit_spec(mesh, spec: P, shape) -> P:
+    """Drop partition entries whose mesh-axis product does not divide the
+    corresponding dim (e.g. vocab 50280 over 16-way 'model', kv_heads 8 over
+    16) — those dims are replicated instead.  jit input shardings require
+    exact divisibility; real deployments pad instead (see EXPERIMENTS.md)."""
+    ax_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        for a in axes:
+            prod = 1
+            for kk in kept + [a]:
+                prod *= ax_size[kk]
+            if shape[i] % prod == 0:
+                kept.append(a)
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def fitted_shardings(mesh, spec_tree, struct_tree) -> Any:
+    """NamedSharding tree with per-leaf divisibility fitting."""
+    return jax.tree.map(
+        lambda sp, st: NamedSharding(mesh, fit_spec(mesh, sp, st.shape)),
+        spec_tree, struct_tree)
+
+
+def cache_pspecs(cache_tree, rules: Dict[str, Optional[object]]) -> Any:
+    """KV-cache / SSM-state specs.
+
+    KV leaves: (L..., B, S, KV, D) -> (batch, kv_seq, kv_heads) rules on the
+    trailing 4 dims.  SSM state leaves: 's' (L..., B, H, P, N), 'conv'
+    (L..., B, K, C)."""
+    def one(kp, leaf):
+        path = tuple(_key_str(k) for k in kp)
+        name = path[-1]
+        nd = len(leaf.shape)
+        if name in ("s",):
+            spec = (rules["batch"], rules["heads"], None, None)
+        elif name in ("conv",):
+            spec = (rules["batch"], None, rules["ff"])
+        else:  # k / v / mem_k / mem_v and grouped variants
+            spec = (rules["batch"], rules["kv_seq"], rules["kv_heads"], None)
+        pad = nd - len(spec)
+        return P(*([None] * pad), *spec)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,406 @@
+"""Per-family pipeline stage decompositions.
+
+``build_staging(cfg, n_stages, params)`` restructures a model's parameter
+pytree into (staged, shared, consts):
+
+  staged — every leaf gains a leading ``S`` dim (sharded over ``pod``);
+  shared — embed / head / norms / zamba's shared block (replicated over pod);
+  consts — non-trainable per-layer flag arrays (first-layer injection,
+           identity-padding gates for uneven stage splits).
+
+The *first-layer flag* makes the engine family-agnostic: layer ``l`` computes
+``x = f_l * io.h_in + (1 - f_l) * h`` before its block, so only the stage
+owning the model's first layer consumes fresh microbatches; everyone else
+consumes the ppermute'd carry.  Uneven splits (zamba2's 81 = 13x6+3) are
+padded to uniform unit counts with zero gates (identity layers) — the pad
+waste is reported by the planner.
+
+Stage divisibility per assigned arch at S=2 pods: minitron 32, deepseek 30,
+gemma 18, gemma3 8 groups, qwen3 94, granite 24, mamba2 64, vlm 20 groups,
+zamba2 14 padded units — all even.  whisper-medium (0.8B) is deliberately
+*not* pipelined: the planner places sub-1B models data-parallel across pods
+(see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import hybrid_lm, mamba_lm, moe_lm, transformer, vlm
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (
+    linear, rms_norm, scan_unroll, shard_act, softmax_cross_entropy,
+)
+from repro.models.moe import moe_block
+from repro.models.ssm import ssm_block
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class Staging:
+    cfg: ArchConfig
+    n_stages: int
+    staged: Params
+    shared: Params
+    consts: Params
+    stage_fn: Callable          # (staged1, consts1, shared, carry, io_t) -> carry
+    make_io: Callable           # (shared, batch, n_mb) -> io
+    head_loss: Callable         # (shared, carry, io_t) -> (ce_sum, ntok, aux)
+    zero_carry: Callable        # (io) -> carry
+
+
+def _with_dtype(mk, sh, b, n, dt):
+    io = mk(sh, b, n)
+    io["h_in"] = io["h_in"].astype(dt)
+    if "img" in io:
+        io["img"] = io["img"].astype(dt)
+    return io
+
+
+def _is_struct_tree(tree) -> bool:
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+
+def _apply_restructure(fn, params):
+    """Run the pure reshape/concat restructuring; under ShapeDtypeStructs it
+    runs through eval_shape (dry-run: no allocation)."""
+    if _is_struct_tree(params):
+        return jax.eval_shape(fn, params)
+    return fn(params)
+
+
+def _mix(f, io_h, h):
+    f = f.astype(h.dtype)
+    return f * io_h.astype(h.dtype) + (1.0 - f) * h
+
+
+def _reshape_stage(tree, S):
+    return jax.tree.map(lambda x: x.reshape(S, x.shape[0] // S, *x.shape[1:]),
+                        tree)
+
+
+def _make_io_lm(cfg: ArchConfig, shared, batch, n_mb, act_dtype=jnp.bfloat16):
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, T = tokens.shape
+    mb = B // n_mb
+    h = transformer.embed_tokens(cfg, {"embed": shared["embed"]}, tokens)
+    h = h.astype(act_dtype).reshape(n_mb, mb, T, -1)
+    h = shard_act(h, (None, "batch", "seq", "embed"))
+    io = {"h_in": h, "labels": labels.reshape(n_mb, mb, T)}
+    return io
+
+
+def _head_loss_lm(cfg: ArchConfig, shared, carry, io_t):
+    h = jnp.nan_to_num(carry["h"])  # pre-warmup garbage on non-last stages
+    logits = transformer.lm_head(cfg, shared, h)
+    per_tok, _ = softmax_cross_entropy(logits, io_t["labels"])
+    ntok = jnp.asarray(per_tok.size, jnp.float32)
+    return jnp.sum(per_tok), ntok, carry.get("aux", jnp.zeros((), jnp.float32))
+
+
+def _zero_carry_lm(io, with_aux=True):
+    c = {"h": jnp.zeros_like(io["h_in"][0])}
+    if with_aux:
+        c["aux"] = jnp.zeros((), jnp.float32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# dense (uniform + gemma3 local:global pattern)
+# ---------------------------------------------------------------------------
+
+
+def _stage_dense(cfg: ArchConfig, S: int, params: Params) -> Staging:
+    use_pallas = False
+    ratio = cfg.local_global_ratio
+    L = cfg.n_layers
+    if ratio:
+        gsz = ratio + 1
+        G = L // gsz
+        first = jnp.zeros((S, G // S, gsz), jnp.float32).at[0, 0, 0].set(1.0)
+    else:
+        first = jnp.zeros((S, L // S), jnp.float32).at[0, 0].set(1.0)
+    consts = {"first": first}
+
+    def restructure(p):
+        if ratio:
+            blocks = jax.tree.map(
+                lambda x: x.reshape(G, gsz, *x.shape[1:]), p["blocks"])
+            stg = {"blocks": _reshape_stage(blocks, S)}
+        else:
+            stg = {"blocks": _reshape_stage(p["blocks"], S)}
+        return stg, {k: v for k, v in p.items() if k != "blocks"}
+
+    staged, shared = _apply_restructure(restructure, params)
+
+    def stage_fn(staged1, consts1, shared_, carry, io_t):
+        h = carry["h"]
+        if ratio:
+            def gbody(hh, xs):
+                pg, fg = xs
+                for i in range(gsz):
+                    p = jax.tree.map(lambda x: x[i], pg)
+                    hh = _mix(fg[i], io_t["h_in"], hh)
+                    w = cfg.sliding_window if i < ratio else 0
+                    hh = transformer._block_apply(cfg, p, hh, window=w,
+                                                  use_pallas=use_pallas)
+                return hh, None
+            h, _ = jax.lax.scan(gbody, h,
+                                (staged1["blocks"], consts1["first"]),
+                                unroll=scan_unroll())
+        else:
+            def body(hh, xs):
+                p, f = xs
+                hh = _mix(f, io_t["h_in"], hh)
+                hh = transformer._block_apply(cfg, p, hh,
+                                              window=cfg.sliding_window,
+                                              use_pallas=use_pallas)
+                return hh, None
+            h, _ = jax.lax.scan(body, h,
+                                (staged1["blocks"], consts1["first"]),
+                                unroll=scan_unroll())
+        return {**carry, "h": h}
+
+    return Staging(cfg, S, staged, shared, consts, stage_fn,
+                   lambda sh, b, n: _make_io_lm(cfg, sh, b, n),
+                   lambda sh, c, i: _head_loss_lm(cfg, sh, c, i),
+                   lambda io: _zero_carry_lm(io, with_aux=False))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _stage_moe(cfg: ArchConfig, S: int, params: Params) -> Staging:
+    L = cfg.n_layers
+    consts = {"first": jnp.zeros((S, L // S), jnp.float32).at[0, 0].set(1.0)}
+
+    def restructure(p):
+        return ({"blocks": _reshape_stage(p["blocks"], S)},
+                {k: v for k, v in p.items() if k != "blocks"})
+
+    staged, shared = _apply_restructure(restructure, params)
+
+    def stage_fn(staged1, consts1, shared_, carry, io_t):
+        def body(c, xs):
+            hh, aux = c
+            p, f = xs
+            hh = _mix(f, io_t["h_in"], hh)
+            hh, a = moe_lm._block_apply(cfg, p, hh, use_pallas=False)
+            return (hh, aux + a), None
+        (h, aux), _ = jax.lax.scan(
+            body, (carry["h"], carry["aux"]),
+            (staged1["blocks"], consts1["first"]), unroll=scan_unroll())
+        return {"h": h, "aux": aux}
+
+    return Staging(cfg, S, staged, shared, consts, stage_fn,
+                   lambda sh, b, n: _make_io_lm(cfg, sh, b, n),
+                   lambda sh, c, i: _head_loss_lm(cfg, sh, c, i),
+                   _zero_carry_lm)
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2)
+# ---------------------------------------------------------------------------
+
+
+def _stage_ssm(cfg: ArchConfig, S: int, params: Params) -> Staging:
+    L = cfg.n_layers
+    consts = {"first": jnp.zeros((S, L // S), jnp.float32).at[0, 0].set(1.0)}
+
+    def restructure(p):
+        return ({"blocks": _reshape_stage(p["blocks"], S)},
+                {k: v for k, v in p.items() if k != "blocks"})
+
+    staged, shared = _apply_restructure(restructure, params)
+
+    def stage_fn(staged1, consts1, shared_, carry, io_t):
+        def body(hh, xs):
+            p, f = xs
+            hh = _mix(f, io_t["h_in"], hh)
+            return mamba_lm._block_apply(cfg, p, hh, use_pallas=False), None
+        h, _ = jax.lax.scan(
+            body, carry["h"],
+            (staged1["blocks"], consts1["first"]), unroll=scan_unroll())
+        return {**carry, "h": h}
+
+    return Staging(cfg, S, staged, shared, consts, stage_fn,
+                   lambda sh, b, n: _make_io_lm(cfg, sh, b, n),
+                   lambda sh, c, i: _head_loss_lm(cfg, sh, c, i),
+                   lambda io: _zero_carry_lm(io, with_aux=False))
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2): units of (k SSM layers + shared-block application)
+# ---------------------------------------------------------------------------
+
+
+def _stage_hybrid(cfg: ArchConfig, S: int, params: Params) -> Staging:
+    k = cfg.shared_attn_every
+    n_apps = cfg.n_layers // k
+    n_tail = cfg.n_layers - n_apps * k
+    U = n_apps + (1 if n_tail else 0)        # padded unit count
+    assert U % S == 0, f"zamba2 units {U} not divisible by {S} stages"
+
+    def pad_units(x_groups, x_tail):
+        # x_groups: (n_apps, k, ...); x_tail: (n_tail, ...)
+        flat = x_groups.reshape(n_apps * k, *x_groups.shape[2:])
+        if n_tail:
+            pad = jnp.zeros((k - n_tail, *x_tail.shape[1:]), x_tail.dtype)
+            flat = jnp.concatenate([flat, x_tail, pad], axis=0)
+        return flat.reshape(U, k, *flat.shape[1:])
+
+    def restructure(p):
+        units = jax.tree.map(pad_units, p["groups"], p["tail"])
+        a_in = jnp.concatenate(
+            [p["adapt_in"],
+             jnp.zeros((U - n_apps, *p["adapt_in"].shape[1:]),
+                       p["adapt_in"].dtype)], axis=0)
+        a_out = jnp.concatenate(
+            [p["adapt_out"],
+             jnp.zeros((U - n_apps, *p["adapt_out"].shape[1:]),
+                       p["adapt_out"].dtype)], axis=0)
+        stg = {"units": _reshape_stage(units, S),
+               "adapt_in": _reshape_stage(a_in, S),
+               "adapt_out": _reshape_stage(a_out, S)}
+        shr = {kk: v for kk, v in p.items()
+               if kk in ("embed", "final_norm", "lm_head", "shared")}
+        return stg, shr
+
+    staged, shared = _apply_restructure(restructure, params)
+
+    ssm_gate = jnp.ones((U, k), jnp.float32)
+    app_gate = jnp.ones((U,), jnp.float32)
+    if n_tail:
+        ssm_gate = ssm_gate.at[U - 1, n_tail:].set(0.0)
+        app_gate = app_gate.at[U - 1].set(0.0)
+    first = jnp.zeros((U, k), jnp.float32).at[0, 0].set(1.0)
+    consts = {"ssm_gate": ssm_gate.reshape(S, U // S, k),
+              "app_gate": app_gate.reshape(S, U // S),
+              "first": first.reshape(S, U // S, k)}
+
+    def stage_fn(staged1, consts1, shared_, carry, io_t):
+        def unit_body(hh, xs):
+            pu, ai, ao, sg, ag, fg = xs
+
+            def lbody(c, ys):
+                p, g, f = ys
+                c = _mix(f, io_t["h_in"], c)
+                delta = mamba_lm._block_apply(cfg, p, c, use_pallas=False) - c
+                return c + g * delta, None
+            hh, _ = jax.lax.scan(lbody, hh, (pu, sg, fg),
+                                 unroll=scan_unroll())
+            # shared transformer block through adapters (weights shared
+            # across all applications and stages — replicated params)
+            x = linear(hh, ai)
+            y = attn.self_attention(
+                shared_["shared"]["attn"],
+                rms_norm(x, shared_["shared"]["ln1"], cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta, causal=True)
+            x = x + y
+            x = x + mlp_mod.mlp(shared_["shared"]["mlp"],
+                                rms_norm(x, shared_["shared"]["ln2"],
+                                         cfg.norm_eps), cfg.activation)
+            hh = hh + ag * linear(x, ao)
+            return hh, None
+
+        h, _ = jax.lax.scan(
+            unit_body, carry["h"],
+            (staged1["units"], staged1["adapt_in"], staged1["adapt_out"],
+             consts1["ssm_gate"], consts1["app_gate"], consts1["first"]),
+            unroll=scan_unroll())
+        return {**carry, "h": h}
+
+    return Staging(cfg, S, staged, shared, consts, stage_fn,
+                   lambda sh, b, n: _make_io_lm(cfg, sh, b, n),
+                   lambda sh, c, i: _head_loss_lm(cfg, sh, c, i),
+                   lambda io: _zero_carry_lm(io, with_aux=False))
+
+
+# ---------------------------------------------------------------------------
+# VLM (llama-3.2-vision): groups of (n self blocks + 1 cross block)
+# ---------------------------------------------------------------------------
+
+
+def _stage_vlm(cfg: ArchConfig, S: int, params: Params) -> Staging:
+    G, n_self = vlm._group_dims(cfg)
+    assert G % S == 0
+
+    def restructure(p):
+        return ({"self_blocks": _reshape_stage(p["self_blocks"], S),
+                 "cross_blocks": _reshape_stage(p["cross_blocks"], S)},
+                {k: v for k, v in p.items()
+                 if k in ("embed", "final_norm", "lm_head")})
+
+    staged, shared = _apply_restructure(restructure, params)
+    consts = {"first": jnp.zeros((S, G // S, n_self), jnp.float32)
+              .at[0, 0, 0].set(1.0)}
+
+    def make_io(shared_, batch, n_mb):
+        io = _make_io_lm(cfg, shared_, batch, n_mb)
+        B = batch["tokens"].shape[0]
+        mb = B // n_mb
+        img = batch["image_embeds"].astype(io["h_in"].dtype)
+        io["img"] = img.reshape(n_mb, mb, *img.shape[1:])
+        return io
+
+    def stage_fn(staged1, consts1, shared_, carry, io_t):
+        def gbody(hh, xs):
+            pg_self, pg_cross, fg = xs
+
+            def sbody(c, ys):
+                p, f = ys
+                c = _mix(f, io_t["h_in"], c)
+                return transformer._block_apply(cfg, p, c, window=0,
+                                                use_pallas=False), None
+            hh, _ = jax.lax.scan(sbody, hh, (pg_self, fg),
+                                 unroll=scan_unroll())
+            hh = vlm._cross_apply(cfg, pg_cross, hh, io_t["img"],
+                                  use_pallas=False)
+            return hh, None
+        h, _ = jax.lax.scan(
+            gbody, carry["h"],
+            (staged1["self_blocks"], staged1["cross_blocks"],
+             consts1["first"]), unroll=scan_unroll())
+        return {**carry, "h": h}
+
+    return Staging(cfg, S, staged, shared, consts, stage_fn, make_io,
+                   lambda sh, c, i: _head_loss_lm(cfg, sh, c, i),
+                   lambda io: _zero_carry_lm(io, with_aux=False))
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_staging(cfg: ArchConfig, n_stages: int, params: Params,
+                  act_dtype=jnp.bfloat16) -> Staging:
+    fam = cfg.family
+    if fam == "dense":
+        st = _stage_dense(cfg, n_stages, params)
+    elif fam == "moe":
+        st = _stage_moe(cfg, n_stages, params)
+    elif fam == "ssm":
+        st = _stage_ssm(cfg, n_stages, params)
+    elif fam == "hybrid":
+        st = _stage_hybrid(cfg, n_stages, params)
+    elif fam == "vlm":
+        st = _stage_vlm(cfg, n_stages, params)
+    else:
+        st = None
+    if st is not None:
+        mk = st.make_io
+        st.make_io = lambda sh, b, n: _with_dtype(mk, sh, b, n, act_dtype)
+        return st
+    raise ValueError(
+        f"family {fam!r} is not pipelined (audio trains data-parallel across "
+        "pods — see DESIGN.md)")

@@ -1,0 +1,50 @@
+"""Serving steps: prefill (build KV cache / SSM state) + batched decode.
+
+Sharding per shape cell (see ``parallel/sharding.py``):
+  decode_32k  — batch over (pod?, data), KV heads over model;
+  long_500k   — batch=1: KV-cache *sequence* sharded over every free axis
+                (the distributed-decode layout; attention reduces over the
+                sharded seq dim with XLA inserting the psum).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import build_model
+from repro.models.common import activation_sharding
+from repro.parallel import sharding as shd
+
+
+def make_serve_step(cfg: ArchConfig, *, shape: ShapeSpec,
+                    multi_pod: bool = False, use_pallas: bool = False,
+                    greedy: bool = True):
+    """Returns serve_step(params, cache, tokens, pos) ->
+    (next_tokens (B,1), new_cache)."""
+    model = build_model(cfg, use_pallas=use_pallas)
+    rules = shd.decode_act_rules(shape.global_batch, multi_pod=multi_pod)
+
+    def serve_step(params, cache, tokens, pos):
+        with activation_sharding(rules):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step, model, rules
+
+
+def make_prefill_step(cfg: ArchConfig, *, multi_pod: bool = False,
+                      use_pallas: bool = False):
+    """Full-sequence forward (the prefill_32k cells): returns logits."""
+    model = build_model(cfg, use_pallas=use_pallas)
+    rules = shd.prefill_act_rules(multi_pod=multi_pod)
+
+    def prefill_step(params, batch):
+        with activation_sharding(rules):
+            logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill_step, model, rules

@@ -1,0 +1,3 @@
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.step import make_pipeline_train_step, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run on ONE CPU device (the dry-run alone uses 512 — never set here)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,71 @@
+"""Config registry + parameter accounting vs published sizes."""
+import pytest
+
+from repro.configs import get_config, get_shape, list_archs
+
+PUBLISHED_B = {
+    "minitron-8b": (7.0, 8.5),
+    "deepseek-7b": (6.5, 7.5),
+    "gemma-2b": (2.0, 3.0),
+    "gemma3-12b": (11.0, 13.0),
+    "qwen3-moe-235b-a22b": (225.0, 245.0),
+    "granite-moe-1b-a400m": (1.0, 1.6),
+    "mamba2-2.7b": (2.4, 3.0),
+    "llama-3.2-vision-90b": (85.0, 95.0),
+    "whisper-medium": (0.7, 0.9),
+    "zamba2-7b": (6.5, 7.6),
+}
+
+ACTIVE_B = {
+    "qwen3-moe-235b-a22b": (20.0, 24.0),
+    "granite-moe-1b-a400m": (0.3, 0.55),
+}
+
+
+def test_registry_has_all_assigned():
+    assert len(list_archs(assigned_only=True)) == 10
+
+
+@pytest.mark.parametrize("arch", list(PUBLISHED_B))
+def test_param_counts_match_published(arch):
+    lo, hi = PUBLISHED_B[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+
+
+@pytest.mark.parametrize("arch", list(ACTIVE_B))
+def test_active_params(arch):
+    lo, hi = ACTIVE_B[arch]
+    n = get_config(arch).active_param_count() / 1e9
+    assert lo <= n <= hi
+
+
+def test_shapes_applicability():
+    # long_500k only for sub-quadratic archs
+    long_archs = {a for a in list_archs(assigned_only=True)
+                  if any(s.name == "long_500k" for s in get_config(a).shapes())}
+    assert long_archs == {"mamba2-2.7b", "zamba2-7b", "gemma3-12b"}
+    # everyone gets train/prefill/decode
+    for a in list_archs(assigned_only=True):
+        names = {s.name for s in get_config(a).shapes()}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+
+
+def test_total_cells():
+    n = sum(len(get_config(a).shapes()) for a in list_archs(assigned_only=True))
+    assert n == 33  # 10 archs x 3 + 3 long_500k
+
+
+def test_reduced_configs_small():
+    for a in list_archs():
+        r = get_config(a).reduced()
+        assert r.d_model <= 64 and r.vocab_size <= 512
+        assert r.param_count() < 5e6
+
+
+def test_shape_lookup():
+    s = get_shape("train_4k")
+    assert s.seq_len == 4096 and s.global_batch == 256 and s.kind == "train"
+    assert get_shape("long_500k").seq_len == 524288
+    with pytest.raises(KeyError):
+        get_shape("nope")

@@ -1,0 +1,167 @@
+"""DP search (§5.2) correctness: optimal vs exhaustive brute force on small
+instances, constraint satisfaction, pruning soundness."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cluster import (
+    DeviceProfile, HeteroCluster, SubCluster, paper_case_study_cluster,
+)
+from repro.core.costmodel import CostModelConfig
+from repro.core.dp_search import SearchConfig, _DPContext, _dp_eval, search
+from repro.core.layering import build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.profiler import ZeroRedundantProfiler
+
+GB = 1024 ** 3
+
+
+def tiny_cluster(mem_gb_a=40.0, mem_gb_b=32.0):
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A", 1, 2, DeviceProfile("fast", 300e12, mem_gb_a * GB,
+                                                1.5e12), 300e9, 25e9),
+            SubCluster("B", 1, 2, DeviceProfile("slow", 120e12, mem_gb_b * GB,
+                                                0.9e12), 150e9, 25e9),
+        ),
+        cross_bw=0.625e9)  # 5 Gbps
+
+
+def make_tables(cluster, arch="gpt-15b", granularity=10, mb_tokens=2048):
+    ops = build_op_sequence(get_config(arch), seq_len=1024)
+    layers = build_layers(ops, granularity)
+    prof = ZeroRedundantProfiler(cluster, layers, mb_tokens)
+    return layers, prof.profile()
+
+
+def brute_force(ctx, t_max, B):
+    """Exhaustive enumeration of (partition, mesh assignment) under the same
+    constraints/objective as the DP (small L only)."""
+    tab = ctx.tables
+    L = ctx.L
+    best = math.inf
+
+    def recurse(k, a, b, fill, n_next_cluster, N_next):
+        nonlocal best
+        if k == L:
+            best = min(best, fill)
+            return
+        for mid, mesh in enumerate(tab.meshes):
+            c = mesh.cluster_idx
+            u = ctx.mesh_units[mid]
+            avail = a if c == 0 else b
+            if u > avail:
+                continue
+            for j in range(k + 1, L + 1):
+                if not tab.feasible[mid, k, j]:
+                    continue
+                t = ctx.t_tab[mid, k, j]
+                if t > t_max:
+                    continue
+                # comm to the stage AFTER this one: we recurse outward, so
+                # enumerate the next stage's cluster choice implicitly by
+                # trying both link speeds pessimistically -> replicate DP by
+                # carrying next-cluster; here recurse forward:
+                recurse_fwd(j, a - u * (c == 0), b - u * (c == 1),
+                            fill, c, t, mid, k)
+
+    # forward recursion carrying previous stage info to price the link
+    def recurse_fwd(k, a, b, fill, prev_cluster, prev_t, prev_mid, prev_k):
+        nonlocal best
+        # price the cut between prev stage (ending at k) and what follows
+        if k == L:
+            best = min(best, fill + prev_t)
+            return
+        for mid, mesh in enumerate(ctx.tables.meshes):
+            c = mesh.cluster_idx
+            u = ctx.mesh_units[mid]
+            avail = a if c == 0 else b
+            if u > avail:
+                continue
+            c_time = ctx.tables.cut_bytes[k] / ctx.bw(prev_cluster, c)
+            if c_time > t_max:
+                continue
+            for j in range(k + 1, L + 1):
+                if not ctx.tables.feasible[mid, k, j]:
+                    continue
+                t = ctx.t_tab[mid, k, j]
+                if t > t_max:
+                    continue
+                recurse_fwd(j, a - u * (c == 0), b - u * (c == 1),
+                            fill + prev_t + 2 * c_time, c, t, mid, k)
+
+    recurse(0, ctx.units_total[0],
+            ctx.units_total[1] if ctx.C > 1 else 0, 0.0, None, 0)
+    return best
+
+
+@pytest.mark.parametrize("granularity", [4, 6])
+def test_dp_matches_brute_force(granularity):
+    cluster = tiny_cluster()
+    layers, tables = make_tables(cluster, granularity=granularity)
+    cfg = SearchConfig(n_microbatches=8)
+    ctx = _DPContext(cluster, tables, cfg)
+    vals = ctx.t_tab[tables.feasible]
+    t_max = float(np.median(vals))
+    dp_fill = _dp_eval(ctx, t_max)[0]
+    bf_fill = brute_force(ctx, t_max, 8)
+    if math.isinf(bf_fill):
+        assert math.isinf(dp_fill)
+    else:
+        # DP ignores the memory-K coupling only through N table — identical
+        # here since the brute force doesn't model Eq.18 either at K>1;
+        # allow DP <= brute force (DP explores a superset incl. idle devices)
+        assert dp_fill <= bf_fill + 1e-9
+
+
+def test_search_end_to_end_properties():
+    cluster = paper_case_study_cluster()
+    layers, tables = make_tables(cluster, arch="gpt-2b", granularity=16,
+                                 mb_tokens=1024)
+    strat = search(cluster, tables, 1024, SearchConfig(n_microbatches=32))
+    # stages tile the layer range
+    pos = 0
+    for s in strat.stages:
+        assert s.layer_start == pos
+        pos = s.layer_end
+    assert pos == len(layers)
+    # per-stage compute under t_max; links under t_max (H-1F1B condition)
+    for s in strat.stages:
+        assert s.t <= strat.t_max * (1 + 1e-9)
+    for c in strat.c_links:
+        assert c <= strat.t_max * (1 + 1e-9)
+    # warm-up counts are non-increasing and end at 1
+    wc = strat.warmup_counts
+    assert all(wc[i] >= wc[i + 1] for i in range(len(wc) - 1))
+    assert wc[-1] == 1
+    # devices never oversubscribed per cluster
+    for ci, sub in enumerate(cluster.subclusters):
+        used = sum(s.n_devices for s in strat.stages if s.cluster_idx == ci)
+        assert used <= sub.n_devices
+
+
+def test_fine_granularity_improves_balance():
+    """The paper's central claim (Table 1): finer layers -> better balance
+    -> lower step time on a heterogeneous cluster."""
+    cluster = paper_case_study_cluster()
+    coarse_l, coarse_t = make_tables(cluster, "gpt-2b", 8, 1024)
+    fine_l, fine_t = make_tables(cluster, "gpt-2b", 64, 1024)
+    sc = SearchConfig(n_microbatches=64)
+    t_coarse = search(cluster, coarse_t, 1024, sc).est_step_time
+    t_fine = search(cluster, fine_t, 1024, sc).est_step_time
+    assert t_fine <= t_coarse * 1.001
+
+
+def test_feasibility_monotone_in_tmax():
+    cluster = tiny_cluster()
+    _, tables = make_tables(cluster, granularity=8)
+    ctx = _DPContext(cluster, tables, SearchConfig(n_microbatches=8))
+    vals = np.unique(ctx.t_tab[tables.feasible])
+    feas = [not math.isinf(_dp_eval(ctx, float(t))[0])
+            for t in vals[:: max(1, len(vals) // 8)]]
+    # once feasible, stays feasible
+    assert feas == sorted(feas)

@@ -1,0 +1,108 @@
+"""H-1F1B scheduler: the paper's §4 claims validated against the independent
+pipeline-DAG simulator.
+
+Key properties (Lemma 1/2, Eq. 9-11):
+  - with K = ceil(1 + 2c/(f+b)) + 1 warm-up launches the 2-stage steady phase
+    is bubble-free: T ~= B(f+b) + O(1);
+  - K-1 launches are NOT sufficient when c is large enough (minimality);
+  - the derived counts never schedule worse than classic or Eager-1F1B;
+  - Eager-1F1B hides at most (f+b)/2 of comm (the paper's 50% cap).
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.h1f1b import (
+    classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts, h1f1b_deltas,
+    memory_ok,
+)
+from repro.core.pipesim import eta_load_balance, simulate
+
+
+def overhead(f, b, c, K, B=64):
+    res = simulate([f, f], [b, b], [c], B, [K, 1])
+    ideal = B * (f + b)
+    return (res.makespan - ideal) / ideal
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=st.floats(0.2, 2.0), b_mult=st.floats(1.0, 3.0),
+       c_frac=st.floats(0.05, 0.99))
+def test_two_stage_bubble_free_at_derived_K(f, b_mult, c_frac):
+    b = f * b_mult
+    c = c_frac * (f + b)          # paper requires c <= f+b
+    delta = math.ceil(1.0 + 2.0 * c / (f + b))
+    K = 1 + delta
+    # steady phase bubble-free: only warm-up/cool-down O(1) overhead remains
+    assert overhead(f, b, c, K) < 0.10
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=st.floats(0.2, 2.0), b_mult=st.floats(1.0, 3.0),
+       c_frac=st.floats(0.30, 0.95))
+def test_minimality_K_minus_one_has_bubbles(f, b_mult, c_frac):
+    b = f * b_mult
+    c = c_frac * (f + b)
+    delta = math.ceil(1.0 + 2.0 * c / (f + b))
+    K = 1 + delta
+    # one fewer launch leaves steady-phase bubbles (Eq. 9: 2(f+b+c)/K' > f+b)
+    if 2 * (f + b + c) / (K - 1) > (f + b) * 1.02:
+        assert overhead(f, b, c, K - 1) > overhead(f, b, c, K) + 0.02
+
+
+def test_counts_formulas():
+    # paper Fig. 3(d): tailored {5, 2, 1} for fast link 2-3, slow link 1-2
+    t = [1.0, 1.0, 1.0]
+    c = [0.9, 0.01]               # c1 in (tmax/2, tmax], c2 negligible
+    counts = h1f1b_counts(t, c, n_microbatches=64)
+    assert counts == [5, 2, 1]
+    assert classic_1f1b_counts(3, 64) == [3, 2, 1]
+    assert eager_1f1b_counts(3, 64) == [5, 3, 1]
+
+
+def test_counts_capped_by_microbatches():
+    counts = h1f1b_counts([1.0] * 4, [0.9, 0.9, 0.9], n_microbatches=3)
+    assert max(counts) <= 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.integers(2, 5), seed=st.integers(0, 100))
+def test_h1f1b_never_worse_than_baselines(S, seed):
+    import random
+    rnd = random.Random(seed)
+    t = [1.0] * S
+    c = [rnd.uniform(0.0, 1.9) for _ in range(S - 1)]
+    B = 48
+    f = [0.4] * S
+    b = [0.6] * S
+    mk = lambda counts: simulate(f, b, c, B, counts).makespan
+    h = mk(h1f1b_counts(t, c, B))
+    cl = mk(classic_1f1b_counts(S, B))
+    assert h <= cl * 1.001
+    eg = mk(eager_1f1b_counts(S, B))
+    assert h <= eg * 1.05  # Eager may tie when its fixed +2 happens to match
+
+
+def test_eager_cap_at_half():
+    """Eager-1F1B (K=3 at 2 stages) fully hides c <= (f+b)/2 but not beyond —
+    the paper's 50%-of-upper-bound claim."""
+    f, b = 0.4, 0.6
+    K_eager = 3
+    assert overhead(f, b, 0.49, K_eager) < 0.08     # c < (f+b)/2: hidden
+    assert overhead(f, b, 0.95, K_eager) > 0.15     # c -> (f+b): not hidden
+    K_h = 1 + math.ceil(1 + 2 * 0.95 / (f + b))     # H-1F1B compensates
+    assert overhead(f, b, 0.95, K_h) < 0.08
+
+
+def test_memory_bound():
+    assert memory_ok(10.0, 1.0, 4, 14.0)
+    assert not memory_ok(10.0, 1.0, 5, 14.0)
+
+
+def test_eta_metric():
+    # perfect balance
+    assert eta_load_balance([1.0, 1.0], [100.0, 100.0]) == pytest.approx(1.0)
+    # stage 2 idles half the time on equal hardware
+    eta = eta_load_balance([1.0, 0.5], [100.0, 100.0])
+    assert eta == pytest.approx(0.75)

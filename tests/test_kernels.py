@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + gradients
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, rmsnorm_ref, ssd_intra_oracle
+
+
+def _qkv(rng, B, T, S, H, KV, D, dtype):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, T, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D)).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # (B, T, S, H, KV, D, causal, window)
+    (1, 128, 128, 2, 2, 64, True, 0),
+    (2, 200, 200, 8, 2, 64, True, 0),      # GQA + non-multiple length
+    (1, 256, 256, 4, 1, 32, True, 64),     # MQA + sliding window
+    (2, 64, 192, 2, 2, 64, False, 0),      # cross-shaped (Tq != Tk)
+    (1, 130, 130, 2, 2, 128, True, 0),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_forward(case, dtype):
+    B, T, S, H, KV, D, causal, window = case
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, T, S, H, KV, D, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", FLASH_CASES[:3])
+def test_flash_attention_grads(case):
+    B, T, S, H, KV, D, causal, window = case
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, T, S, H, KV, D, jnp.float32)
+
+    def f(impl):
+        def inner(q, k, v):
+            return jnp.sum(jnp.sin(impl(q, k, v, causal=causal, window=window)))
+        return inner
+
+    g1 = jax.grad(f(ops.flash_attention), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f(flash_attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    B=st.integers(1, 2), nc=st.integers(1, 3),
+    Q=st.sampled_from([16, 32]), H=st.integers(1, 4),
+    P=st.sampled_from([8, 16]), N=st.sampled_from([8, 16]),
+)
+def test_ssd_intra_property(B, nc, Q, H, P, N):
+    rng = jax.random.PRNGKey(B * 1000 + nc * 100 + Q + H + P + N)
+    ks = jax.random.split(rng, 5)
+    xc = jax.random.normal(ks[0], (B, nc, Q, H, P))
+    dtc = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, H)))
+    a = -jnp.abs(jax.random.normal(ks[2], (B, nc, Q, H))) * 0.1
+    cum = jnp.cumsum(a, axis=2)
+    Bc = jax.random.normal(ks[3], (B, nc, Q, N))
+    Cc = jax.random.normal(ks[4], (B, nc, Q, N))
+    out = ops.ssd_intra(xc, dtc, cum, Bc, Cc)
+    ref = ssd_intra_oracle(xc, dtc, cum, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    rng = jax.random.PRNGKey(7)
+    x = jax.random.normal(rng, shape).astype(dtype)
+    w = 1 + 0.1 * jax.random.normal(rng, shape[-1:])
+    out = ops.rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_flash_attention_fully_masked_rows():
+    """Window smaller than block: early rows see 1 key; no NaNs."""
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 128, 128, 2, 2, 32, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=4)
+    ref = flash_attention_ref(q, k, v, causal=True, window=4)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,68 @@
+"""Structure-preserving layer construction (§5.1)."""
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core.layering import build_layers, mine_modules
+from repro.core.opgraph import build_op_sequence, total_flops_per_token
+
+
+@pytest.mark.parametrize("arch", ["gpt-39b", "minitron-8b", "mamba2-2.7b",
+                                  "qwen3-moe-235b-a22b"])
+def test_mining_finds_repeated_blocks(arch):
+    cfg = get_config(arch)
+    ops = build_op_sequence(cfg)
+    mods = mine_modules(ops)
+    rep = [m for m in mods if m.repeated]
+    assert len(rep) >= cfg.n_layers  # at least one repeated module per block
+
+
+def test_modules_partition_sequence():
+    """Modules tile the op sequence exactly (no gaps, no overlaps)."""
+    for arch in list_archs(assigned_only=True):
+        ops = build_op_sequence(get_config(arch))
+        mods = sorted(mine_modules(ops), key=lambda m: m.start)
+        pos = 0
+        for m in mods:
+            assert m.start == pos, f"{arch}: gap/overlap at {pos}"
+            pos = m.end
+        assert pos == len(ops)
+
+
+def test_layers_cover_all_ops():
+    for arch in ["gpt-39b", "zamba2-7b", "whisper-medium"]:
+        ops = build_op_sequence(get_config(arch))
+        layers = build_layers(ops, target_layers=64)
+        pos = 0
+        for l in layers:
+            assert l.start == pos
+            pos = l.end
+        assert pos == len(ops)
+        # flops conserved
+        assert sum(l.flops_per_token for l in layers) == pytest.approx(
+            total_flops_per_token(ops), rel=1e-9)
+
+
+def test_repeated_instances_share_class_keys():
+    """Zero-redundancy: layers at the same position of repeated module
+    instances must share their class_key."""
+    ops = build_op_sequence(get_config("gpt-39b"))
+    layers = build_layers(ops, target_layers=96)
+    by_key = {}
+    for l in layers:
+        by_key.setdefault(l.class_key, []).append(l)
+    # a 48-block model with ~2 layers/block must reuse keys ~48x
+    reuse_counts = [len(v) for v in by_key.values()]
+    assert max(reuse_counts) >= 40
+    # same class key -> identical flops (structural identity)
+    for key, ls in by_key.items():
+        flops = {round(l.flops_per_token) for l in ls}
+        assert len(flops) == 1, f"class {key} has differing flops"
+
+
+def test_granularity_scales():
+    ops = build_op_sequence(get_config("gpt-39b"))
+    n8 = len(build_layers(ops, target_layers=8))
+    n128 = len(build_layers(ops, target_layers=128))
+    assert n8 < n128
+    # fine granularity reaches ~1e2 layers (the paper's #L=146 regime)
+    assert n128 >= 64

@@ -1,0 +1,78 @@
+"""SPMD pipeline runtime equivalence: the shard_map+ppermute pipeline over a
+(2,2,2) host-device mesh computes the SAME loss and gradients as the plain
+single-device model.
+
+Multi-device host platforms require XLA_FLAGS before jax init, so these run
+in a subprocess (tests otherwise see 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import build_model
+from repro.parallel.staging import build_staging
+from repro.parallel.pipeline import pipeline_loss_fn
+
+arch = sys.argv[1]
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+cfg = get_config(arch).reduced()
+model = build_model(cfg, param_dtype=jnp.float32)
+params = model.init(k1)
+B, T = 8, 32
+batch = {"tokens": jax.random.randint(k2, (B, T), 0, cfg.vocab_size),
+         "labels": jax.random.randint(k3, (B, T), 0, cfg.vocab_size)}
+if cfg.family == "vlm":
+    batch["image_embeds"] = 0.1 * jax.random.normal(
+        k2, (B, cfg.n_image_tokens, cfg.d_model))
+ref_loss, _ = model.loss(params, batch)
+ref_g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+ref_gn = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(ref_g))))
+
+st = build_staging(cfg, 2, params, act_dtype=jnp.float32)
+loss_fn = pipeline_loss_fn(st, mesh, n_microbatches=4)
+with jax.set_mesh(mesh):
+    loss, _ = jax.jit(loss_fn)(st.staged, st.shared, st.consts, batch)
+    g = jax.jit(jax.grad(lambda s, sh: loss_fn(s, sh, st.consts, batch)[0],
+                         argnums=(0, 1)))(st.staged, st.shared)
+    gn = float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32)**2)
+                            for x in jax.tree.leaves(g))))
+print(json.dumps({"ref": float(ref_loss), "pipe": float(loss),
+                  "ref_gn": ref_gn, "pipe_gn": gn}))
+"""
+
+
+def _run(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT, arch],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mamba2-2.7b", "zamba2-7b"])
+def test_pipeline_matches_reference(arch):
+    r = _run(arch)
+    assert abs(r["ref"] - r["pipe"]) < 5e-3, r
+    # gradient magnitudes agree (elementwise equality checked in dev runs;
+    # the norm catches wiring errors like dropped stages or double-counting)
+    assert abs(r["ref_gn"] - r["pipe_gn"]) / r["ref_gn"] < 0.05, r
+
+
+@pytest.mark.slow
+def test_moe_pipeline_close():
+    """MoE capacity effects differ per-microbatch; losses are close, not
+    equal."""
+    r = _run("qwen3-moe-235b-a22b")
+    assert abs(r["ref"] - r["pipe"]) < 0.1, r

@@ -1,0 +1,121 @@
+"""End-to-end system behaviour: plan -> schedule -> simulate on the paper's
+clusters; trainer loop with checkpoint-resume; baseline comparisons."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    HAPTPlanner, PlannerConfig, paper_case_study_cluster, simulate,
+)
+from repro.core.baselines import plan_coarse_sync, plan_uniform
+from repro.core.strategy import ParallelStrategy
+from repro.data.pipeline import DataConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def hapt_strategy():
+    cluster = paper_case_study_cluster()
+    cfg = PlannerConfig(granularity=32, n_microbatches=32)
+    return HAPTPlanner(cluster, cfg).plan(
+        get_config("gpt-2b"), seq_len=1024, global_batch=64)
+
+
+def test_planner_produces_valid_strategy(hapt_strategy):
+    s = hapt_strategy
+    assert s.n_stages >= 2
+    assert s.est_step_time > 0
+    assert 0.5 < s.eta <= 1.0
+    # uses both subclusters (heterogeneity-aware)
+    assert {st.cluster_idx for st in s.stages} == {0, 1}
+
+
+def test_strategy_json_roundtrip(hapt_strategy):
+    s2 = ParallelStrategy.from_json(hapt_strategy.to_json())
+    assert s2.n_stages == hapt_strategy.n_stages
+    assert s2.stages == hapt_strategy.stages
+    assert s2.warmup_counts == hapt_strategy.warmup_counts
+
+
+def test_hapt_beats_naive_uniform(hapt_strategy):
+    """The paper's headline: HAPT > heterogeneity-blind baselines."""
+    cluster = paper_case_study_cluster()
+    try:
+        base = plan_uniform(cluster, get_config("gpt-2b"), seq_len=1024,
+                            global_batch=64, n_microbatches=32)
+    except ValueError:
+        pytest.skip("uniform planner cannot express this cluster")
+    assert hapt_strategy.est_step_time < base.est_step_time
+
+
+def test_hapt_beats_no_overlap(hapt_strategy):
+    cluster = paper_case_study_cluster()
+    sync = plan_coarse_sync(cluster, get_config("gpt-2b"), seq_len=1024,
+                            global_batch=64, n_microbatches=32)
+    assert hapt_strategy.est_step_time <= sync.est_step_time * 1.001
+
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    cfg = get_config("gemma-2b").reduced()
+    opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=40)
+    train_step, model, opt_init = make_train_step(cfg, opt_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt_state": opt_init(params)}
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=8, kind="markov")
+    tcfg = TrainerConfig(total_steps=20, ckpt_dir=str(tmp_path),
+                         ckpt_every=10, log_every=5)
+    out = Trainer(tcfg, data_cfg, jax.jit(train_step), state,
+                  log_fn=lambda *_: None).run()
+    hist = out["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss did not decrease"
+    assert out["final_step"] == 20
+
+    # simulate preemption: a fresh Trainer resumes from the checkpoint
+    state2 = {"params": jax.tree.map(jnp.zeros_like, params),
+              "opt_state": opt_init(params)}
+    tcfg2 = TrainerConfig(total_steps=30, ckpt_dir=str(tmp_path),
+                          ckpt_every=10, log_every=5)
+    t2 = Trainer(tcfg2, data_cfg, jax.jit(train_step), state2,
+                 log_fn=lambda *_: None)
+    out2 = t2.run()
+    assert out2["final_step"] == 30  # continued from 20, not 0
+
+
+def test_straggler_hook_fires():
+    calls = []
+    cfg = get_config("gemma-2b").reduced()
+    opt_cfg = OptimizerConfig(lr=1e-3)
+    train_step, model, opt_init = make_train_step(cfg, opt_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt_state": opt_init(params)}
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4)
+
+    jitted = jax.jit(train_step)
+
+    # deterministic fake clock: steps take 1.0s except step 8 (10.0s) —
+    # immune to real wall-clock noise on loaded CI boxes
+    ticks = {"t": 0.0, "calls": 0, "step": 0}
+
+    def fake_clock():
+        ticks["calls"] += 1
+        if ticks["calls"] % 2 == 1:     # step start
+            ticks["step"] += 1
+        else:                            # step end
+            ticks["t"] += 10.0 if ticks["step"] == 8 else 1.0
+        return ticks["t"]
+
+    tcfg = TrainerConfig(total_steps=10, ckpt_dir="/tmp/_none_",
+                         ckpt_every=10_000, log_every=100,
+                         replan_threshold=2.0)
+    Trainer(tcfg, data_cfg, jitted, state,
+            on_straggler=lambda *a: calls.append(a),
+            log_fn=lambda *_: None, clock=fake_clock).run()
+    assert calls, "straggler hook did not fire"
