@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): full test suite on one CPU device.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

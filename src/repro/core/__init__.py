@@ -1,7 +1,9 @@
 from repro.core.cluster import (
     DeviceProfile, HeteroCluster, SubCluster,
-    heterogeneous_tpu_cluster, homogeneous_cluster,
-    paper_case_study_cluster, paper_eval_cluster, tpu_multipod_cluster,
+    add_nodes, cluster_fingerprint, heterogeneous_tpu_cluster,
+    homogeneous_cluster, paper_case_study_cluster, paper_eval_cluster,
+    remove_nodes, set_efficiency, subcluster_index, tpu_multipod_cluster,
+    with_cross_bw,
 )
 from repro.core.h1f1b import (
     classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts, h1f1b_deltas,
@@ -17,4 +19,6 @@ __all__ = [
     "h1f1b_counts", "h1f1b_deltas", "classic_1f1b_counts",
     "eager_1f1b_counts", "paper_case_study_cluster", "paper_eval_cluster",
     "homogeneous_cluster", "tpu_multipod_cluster", "heterogeneous_tpu_cluster",
+    "add_nodes", "remove_nodes", "with_cross_bw", "set_efficiency",
+    "subcluster_index", "cluster_fingerprint",
 ]

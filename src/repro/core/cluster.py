@@ -22,6 +22,12 @@ class DeviceProfile:
     mem_bytes: float
     hbm_bw: float                # bytes/s
     base_mfu: float = 0.5        # achievable model-flop utilization at TP=1
+    efficiency: float = 1.0      # runtime calibration scale (1.0 = as-specced;
+                                 # <1 = straggling/thermal-throttled hardware)
+
+    @property
+    def effective_flops(self) -> float:
+        return self.peak_flops * self.efficiency
 
 
 # Published specs (paper Table 2 + TPU targets)
@@ -138,6 +144,88 @@ def tpu_multipod_cluster(n_pods: int = 2, pod_side: Tuple[int, int] = (16, 16),
         SubCluster(f"pod{i}", n, m, device, 4 * 50e9, 3 * 50e9)
         for i in range(n_pods))
     return HeteroCluster(subclusters=subs, cross_bw=dcn_gbps * GBPS)
+
+
+# ---------------------------------------------------------------------------
+# Mutation helpers (elastic runtime): HeteroCluster is frozen, so every fleet
+# change produces a new value via dataclasses.replace.  All helpers address
+# sub-clusters by *name* — indices shift when a sub-cluster disappears.
+# ---------------------------------------------------------------------------
+
+
+def subcluster_index(cluster: HeteroCluster, name: str) -> int:
+    for i, s in enumerate(cluster.subclusters):
+        if s.name == name:
+            return i
+    raise KeyError(f"no sub-cluster named {name!r} in {cluster.describe()}")
+
+
+def _replace_subcluster(cluster: HeteroCluster, name: str,
+                        new: SubCluster | None) -> HeteroCluster:
+    idx = subcluster_index(cluster, name)
+    subs = list(cluster.subclusters)
+    if new is None:
+        del subs[idx]
+    else:
+        subs[idx] = new
+    if not subs:
+        raise ValueError("cluster would have no sub-clusters left")
+    return dataclasses.replace(cluster, subclusters=tuple(subs))
+
+
+def remove_nodes(cluster: HeteroCluster, name: str, n: int = 1) -> HeteroCluster:
+    """Node failure / preemption: ``name`` loses ``n`` nodes (the whole
+    sub-cluster is dropped when none remain)."""
+    idx = subcluster_index(cluster, name)
+    sub = cluster.subclusters[idx]
+    if n > sub.n_nodes:
+        raise ValueError(
+            f"{name} has {sub.n_nodes} nodes, cannot remove {n}")
+    if n == sub.n_nodes:
+        return _replace_subcluster(cluster, name, None)
+    return _replace_subcluster(
+        cluster, name, dataclasses.replace(sub, n_nodes=sub.n_nodes - n))
+
+
+def add_nodes(cluster: HeteroCluster, name: str, n: int = 1) -> HeteroCluster:
+    """Node (re)join: ``name`` gains ``n`` nodes of its existing profile."""
+    idx = subcluster_index(cluster, name)
+    sub = cluster.subclusters[idx]
+    return _replace_subcluster(
+        cluster, name, dataclasses.replace(sub, n_nodes=sub.n_nodes + n))
+
+
+def with_cross_bw(cluster: HeteroCluster, cross_bw: float) -> HeteroCluster:
+    """Cross-cluster bandwidth shift (bytes/s)."""
+    if cross_bw <= 0:
+        raise ValueError("cross_bw must be positive")
+    return dataclasses.replace(cluster, cross_bw=cross_bw)
+
+
+def set_efficiency(cluster: HeteroCluster, name: str,
+                   efficiency: float) -> HeteroCluster:
+    """Absolute runtime-calibration efficiency for one sub-cluster's device."""
+    if efficiency <= 0:
+        raise ValueError("efficiency must be positive")
+    idx = subcluster_index(cluster, name)
+    sub = cluster.subclusters[idx]
+    dev = dataclasses.replace(sub.device, efficiency=efficiency)
+    return _replace_subcluster(
+        cluster, name, dataclasses.replace(sub, device=dev))
+
+
+def cluster_fingerprint(cluster: HeteroCluster) -> str:
+    """Stable identity of everything the planner's cost model reads — used to
+    key plan caches (two clusters with equal fingerprints plan identically)."""
+    parts = []
+    for s in cluster.subclusters:
+        d = s.device
+        parts.append(f"{s.name}:{s.n_nodes}x{s.devices_per_node}"
+                     f":{d.name}:{d.peak_flops:.6g}:{d.mem_bytes:.6g}"
+                     f":{d.base_mfu:.6g}:{d.efficiency:.6g}"
+                     f":{s.intra_node_bw:.6g}:{s.inter_node_bw:.6g}")
+    parts.append(f"cross:{cluster.cross_bw:.6g}:{cluster.cross_latency:.6g}")
+    return "|".join(parts)
 
 
 def heterogeneous_tpu_cluster(dcn_gbps: float = 100.0) -> HeteroCluster:

@@ -56,7 +56,9 @@ class CostModelConfig:
 
 
 def _mfu(sub: SubCluster, tp: int, dp: int, cfgm: CostModelConfig) -> float:
-    eff = sub.device.base_mfu
+    # device.efficiency is the runtime-calibration scale (telemetry EWMA);
+    # a straggling sub-cluster shows up here and shifts the whole plan
+    eff = sub.device.base_mfu * sub.device.efficiency
     eff *= cfgm.tp_eff_decay ** max(0, math.log2(max(tp, 1)))
     eff *= cfgm.dp_eff_decay ** max(0, math.log2(max(dp, 1)))
     return eff

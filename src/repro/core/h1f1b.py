@@ -32,12 +32,7 @@ def h1f1b_deltas(t_per_stage: Sequence[float], c_links: Sequence[float],
             # the strict Eq. 10 ceiling would waste a buffer here
             out.append(1)
         elif banded:
-            if c <= eps * t_max:
-                out.append(1)
-            elif c <= t_max / 2:
-                out.append(2)
-            else:
-                out.append(3)
+            out.append(2 if c <= t_max / 2 else 3)
         else:
             out.append(max(1, math.ceil(1.0 + 2.0 * c / t_max)))
     return out

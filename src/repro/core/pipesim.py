@@ -111,13 +111,17 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
         # deps from producer already in stage chains; nothing extra
         pass
 
-    # data dependencies into compute nodes
+    # data dependencies into compute nodes (no_overlap elides zero-cost comm
+    # nodes, so fall back to the producing compute op directly)
     for i in range(S):
         for j in range(B):
             if i > 0:
-                deps[("F", j, i)].append(("CF", j, i - 1))
+                cf = ("CF", j, i - 1)
+                deps[("F", j, i)].append(cf if cf in dur else ("F", j, i - 1))
             if i < S - 1:
-                deps[("B", j, i)].append(("CB", j, i))
+                cbn = ("CB", j, i)
+                deps[("B", j, i)].append(
+                    cbn if cbn in dur else ("B", j, i + 1))
             else:
                 deps[("B", j, i)].append(("F", j, i))
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 from repro.configs.base import ArchConfig
 from repro.core.cluster import HeteroCluster
@@ -32,6 +32,7 @@ class PlannerConfig:
     max_submesh_devices: int = 0   # 0 = unrestricted
     cost: CostModelConfig = field(default_factory=CostModelConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
+    measure_fn: Optional[Callable] = None   # on-hardware profiling hook
 
 
 class HAPTPlanner:
@@ -42,7 +43,11 @@ class HAPTPlanner:
     def plan(self, arch: ArchConfig, *, seq_len: int = 1024,
              global_batch: int = 1024, verbose: bool = False,
              ops: Optional[Sequence[Op]] = None,
-             layers: Optional[Sequence[Layer]] = None) -> ParallelStrategy:
+             layers: Optional[Sequence[Layer]] = None,
+             profile_cache: Optional[Dict] = None) -> ParallelStrategy:
+        """``profile_cache``: caller-owned cross-invocation stage-cost cache
+        (see ZeroRedundantProfiler.cost_cache) — the elastic runtime passes
+        one so incremental replans only re-profile changed sub-clusters."""
         t0 = time.time()
         cfg = self.cfg
         B = cfg.n_microbatches
@@ -57,7 +62,8 @@ class HAPTPlanner:
         profiler = ZeroRedundantProfiler(
             self.cluster, layers, mb_tokens, cost_cfg=cfg.cost, rho=cfg.rho,
             min_submesh_devices=cfg.min_submesh_devices,
-            max_submesh_devices=cfg.max_submesh_devices)
+            max_submesh_devices=cfg.max_submesh_devices,
+            measure_fn=cfg.measure_fn, cost_cache=profile_cache)
         tables = profiler.profile()
         t_prof = time.time()
 

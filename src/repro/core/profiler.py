@@ -35,11 +35,13 @@ class ProfilerStats:
     n_pruned_imbalance: int = 0
     n_unique_profiled: int = 0
     n_aliased: int = 0
+    n_cache_hits: int = 0     # hits on a warm cross-invocation cost_cache
 
     @property
     def dedup_ratio(self) -> float:
-        evaluated = self.n_unique_profiled + self.n_aliased
-        return self.n_aliased / evaluated if evaluated else 0.0
+        evaluated = self.n_unique_profiled + self.n_aliased + self.n_cache_hits
+        return (self.n_aliased + self.n_cache_hits) / evaluated \
+            if evaluated else 0.0
 
 
 @dataclass
@@ -68,7 +70,15 @@ class ZeroRedundantProfiler:
                  min_submesh_devices: int = 1,
                  max_submesh_devices: int = 0,
                  max_stage_layers: Optional[int] = None,
-                 measure_fn: Optional[Callable] = None):
+                 measure_fn: Optional[Callable] = None,
+                 cost_cache: Optional[Dict] = None):
+        """``cost_cache``: a caller-owned stage-cost cache shared ACROSS
+        profiler invocations (the elastic runtime's table-reuse API).  Keys
+        fingerprint everything ``stage_cost`` reads — layer-class sequence,
+        device profile (incl. calibrated efficiency), link bandwidths, mesh
+        shape, microbatch tokens, cost config — so after a fleet change only
+        the affected sub-cluster's entries miss; untouched meshes are never
+        re-profiled (asserted in tests/test_runtime.py)."""
         self.cluster = cluster
         self.layers = list(layers)
         self.mb_tokens = mb_tokens
@@ -78,6 +88,7 @@ class ZeroRedundantProfiler:
         self.max_submesh = max_submesh_devices
         self.max_stage_layers = max_stage_layers or len(self.layers)
         self.measure_fn = measure_fn
+        self.cost_cache = cost_cache if cost_cache is not None else {}
 
     def meshes(self) -> List[Submesh]:
         out = []
@@ -101,11 +112,13 @@ class ZeroRedundantProfiler:
         mem_a = np.full(shape, np.inf)
         feas = np.zeros(shape, dtype=bool)
         stats = ProfilerStats()
-        cache: Dict[Tuple, StageCost] = {}
+        cache = self.cost_cache
+        warm_keys = frozenset(cache)        # pre-existing (cross-invocation)
         stage_costs: Dict[Tuple[int, int, int], StageCost] = {}
 
         total_flops = sum(l.flops_per_token for l in self.layers) or 1.0
-        total_peak = self.cluster.peak_flops
+        total_peak = sum(s.n_devices * s.device.effective_flops
+                         for s in self.cluster.subclusters)
 
         # prefix sums for fast share computation
         pre_flops = np.zeros(L + 1)
@@ -114,7 +127,7 @@ class ZeroRedundantProfiler:
 
         for mid, mesh in enumerate(meshes):
             sub = self.cluster.subclusters[mesh.cluster_idx]
-            cap_share = mesh.n_devices * sub.device.peak_flops / total_peak
+            cap_share = mesh.n_devices * sub.device.effective_flops / total_peak
             for i in range(L):
                 jmax = min(L, i + self.max_stage_layers)
                 for j in range(i + 1, jmax + 1):
@@ -124,9 +137,13 @@ class ZeroRedundantProfiler:
                         stats.n_pruned_imbalance += 1
                         continue
                     key = (layer_class_sequence(self.layers, i, j),
-                           mesh.cluster_idx, mesh.n, mesh.m)
+                           sub.device, sub.intra_node_bw, sub.inter_node_bw,
+                           mesh.n, mesh.m, self.mb_tokens, self.cost_cfg)
                     if key in cache:
-                        stats.n_aliased += 1
+                        if key in warm_keys:
+                            stats.n_cache_hits += 1
+                        else:
+                            stats.n_aliased += 1
                         cost = cache[key]
                     else:
                         cost = stage_cost(self.layers[i:j], sub, mesh,

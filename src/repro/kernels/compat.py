@@ -1,0 +1,13 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+container's 0.4.x has only the old name.  Kernels call this helper instead of
+either class so they run on both."""
+from __future__ import annotations
+
+
+def compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

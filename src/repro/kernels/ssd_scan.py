@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _ssd_intra_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, *, chunk: int):
     x = x_ref[0, 0, :, 0, :].astype(jnp.float32)       # (Q, P)
@@ -66,7 +68,7 @@ def ssd_intra(xc: jnp.ndarray, dtc: jnp.ndarray, cum: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
         out_shape=jax.ShapeDtypeStruct((Bsz, nc, Q, H, P), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(xc, dtc, cum, Bc, Cc)

@@ -1,0 +1,395 @@
+"""ElasticController: the offline HAPT planner closed into a runtime loop.
+
+Owns the current ``HeteroCluster`` + ``ParallelStrategy``, consumes cluster
+events, and picks the *cheapest sufficient* response:
+
+1. **warm-up retune** — a bandwidth-only change leaves stage placement and
+   compute untouched; recompute inter-stage comm times and the H-1F1B
+   warm-up counts (§4) in place.  Near-free.
+2. **incremental re-search** — the DP re-runs, warm-started from the shared
+   stage-cost cache (``ZeroRedundantProfiler.cost_cache``): only meshes of
+   the *changed* sub-cluster miss; untouched sub-clusters are never
+   re-profiled.
+3. **full replan** — cold cache (first plan, or every sub-cluster changed).
+
+Voluntary replans (the fleet still runs the current plan) are gated by the
+amortization rule:
+
+    (t_current - t_candidate) * remaining_steps  >  migration_bytes/cross_bw
+                                                    + search_time
+
+Forced replans (the plan no longer fits the fleet) always adopt.  Adopted
+plans are persisted as JSON (``ParallelStrategy.to_json``) in
+``plan_cache_dir`` keyed by a fingerprint of (arch, planner config, cluster),
+so a restarted controller reloads instead of re-searching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core.cluster import HeteroCluster, cluster_fingerprint
+from repro.core.h1f1b import h1f1b_counts
+from repro.core.layering import Layer, build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.pipesim import eta_load_balance, simulate
+from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.core.strategy import ParallelStrategy
+from repro.runtime.events import BandwidthShift, ClusterEvent, apply_event
+from repro.runtime.replay import project_step, recompute_c_links
+from repro.runtime.telemetry import StepObservation, TelemetryCalibrator
+
+
+@dataclass
+class ControllerConfig:
+    total_steps: int = 10_000          # training horizon (amortization window)
+    seq_len: int = 1024
+    global_batch: int = 1024
+    replan_slowdown: float = 1.15      # bw retune worse than this vs. pre-event
+                                       # -> also evaluate a re-search
+    drift_threshold: float = 0.15      # telemetry drift that triggers a replan
+    telemetry_warmup_steps: int = 1    # ignore the first N measured steps
+                                       # (jit compilation inflates them)
+    amortize: bool = True              # False = always adopt a better plan
+    plan_cache_dir: Optional[str] = None
+
+
+@dataclass
+class ReplanDecision:
+    step: int
+    action: str                        # none | warmup_only | incremental | full
+    reason: str
+    event: Optional[str] = None
+    step_time_before: float = 0.0      # current plan under the new conditions
+    step_time_after: float = 0.0       # adopted (or retained) plan
+    search_time_s: float = 0.0
+    migration_s: float = 0.0
+    plan_cache_hit: bool = False
+    profile_cache_hits: int = 0
+
+    @property
+    def downtime_s(self) -> float:
+        return self.search_time_s + self.migration_s
+
+    def describe(self) -> str:
+        parts = [f"step {self.step}: {self.action} ({self.reason})"]
+        if self.step_time_before and self.step_time_after:
+            parts.append(f"{self.step_time_before * 1e3:.0f}ms"
+                         f" -> {self.step_time_after * 1e3:.0f}ms")
+        if self.downtime_s:
+            parts.append(f"downtime {self.downtime_s:.2f}s")
+        return " ".join(parts)
+
+
+class ElasticController:
+    def __init__(self, cluster: HeteroCluster,
+                 arch: Union[str, ArchConfig],
+                 planner_cfg: Optional[PlannerConfig] = None,
+                 cfg: Optional[ControllerConfig] = None,
+                 telemetry: Optional[TelemetryCalibrator] = None):
+        self.cfg = cfg or ControllerConfig()
+        self.planner_cfg = planner_cfg or PlannerConfig()
+        self.arch = get_config(arch) if isinstance(arch, str) else arch
+        self.cluster = cluster
+        # layering is fleet-independent: build once, reuse across every replan
+        ops = build_op_sequence(self.arch, seq_len=self.cfg.seq_len)
+        self.layers: List[Layer] = build_layers(
+            ops, self.planner_cfg.granularity, z=self.planner_cfg.z_heavy)
+        self.profile_cache: Dict = {}       # shared stage-cost cache (tables)
+        self.telemetry = telemetry or TelemetryCalibrator()
+        self.strategy: Optional[ParallelStrategy] = None
+        self.plan_cluster: Optional[HeteroCluster] = None
+        self.decisions: List[ReplanDecision] = []
+        self._mem_plans: Dict[str, str] = {}   # key -> strategy JSON
+        self._last_observed_step: Optional[int] = None
+
+    # ------------------------------------------------------------------
+    # planning (with persistent plan cache + warm profile tables)
+    # ------------------------------------------------------------------
+
+    def _plan_key(self, cluster: HeteroCluster) -> str:
+        pc = dataclasses.asdict(self.planner_cfg)
+        # callables don't serialize; key on identity so an analytic-model plan
+        # is never silently reused by an on-hardware-profiling controller
+        fn = pc.pop("measure_fn", None)
+        pc["measure_fn_id"] = None if fn is None else \
+            getattr(fn, "__qualname__", repr(fn))
+        pc["search"].pop("n_workers", None)     # parallelism doesn't alter plans
+        # search() overwrites its n_microbatches from the planner config at
+        # plan time; normalize so keys match before and after the first plan
+        pc["search"]["n_microbatches"] = self.planner_cfg.n_microbatches
+        material = json.dumps({
+            "arch": self.arch.arch_id,
+            "seq_len": self.cfg.seq_len,
+            "global_batch": self.cfg.global_batch,
+            "planner": pc,
+            "cluster": cluster_fingerprint(cluster),
+        }, sort_keys=True, default=str)
+        return hashlib.sha1(material.encode()).hexdigest()[:16]
+
+    def _cache_path(self, key: str) -> Optional[str]:
+        if not self.cfg.plan_cache_dir:
+            return None
+        return os.path.join(self.cfg.plan_cache_dir, f"plan_{key}.json")
+
+    def _load_cached_plan(self, key: str) -> Optional[ParallelStrategy]:
+        if key in self._mem_plans:
+            return ParallelStrategy.from_json(self._mem_plans[key])
+        path = self._cache_path(key)
+        if path and os.path.exists(path):
+            with open(path) as f:
+                s = f.read()
+            self._mem_plans[key] = s
+            return ParallelStrategy.from_json(s)
+        return None
+
+    def _store_plan(self, key: str, strategy: ParallelStrategy):
+        s = strategy.to_json()
+        self._mem_plans[key] = s
+        path = self._cache_path(key)
+        if path:
+            os.makedirs(self.cfg.plan_cache_dir, exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(s)
+            os.replace(tmp, path)
+
+    def _plan(self, cluster: HeteroCluster
+              ) -> Tuple[Optional[ParallelStrategy], float, bool, int]:
+        """(strategy | None, search_seconds, plan_cache_hit, profile_hits)."""
+        key = self._plan_key(cluster)
+        cached = self._load_cached_plan(key)
+        if cached is not None:
+            return cached, 0.0, True, 0
+        planner = HAPTPlanner(cluster, self.planner_cfg)
+        t0 = time.perf_counter()
+        try:
+            strategy = planner.plan(
+                self.arch, seq_len=self.cfg.seq_len,
+                global_batch=self.cfg.global_batch, layers=self.layers,
+                profile_cache=self.profile_cache)
+        except (RuntimeError, AssertionError):
+            return None, time.perf_counter() - t0, False, 0
+        dt = time.perf_counter() - t0
+        hits = strategy.planner_meta.get("profiler", {}).get("n_cache_hits", 0)
+        self._store_plan(key, strategy)
+        return strategy, dt, False, hits
+
+    def bootstrap(self) -> ParallelStrategy:
+        """Initial plan on the current fleet."""
+        strategy, dt, cache_hit, hits = self._plan(self.cluster)
+        if strategy is None:
+            raise RuntimeError("bootstrap planning failed: no feasible plan")
+        self.strategy = strategy
+        self.plan_cluster = self.cluster
+        self.decisions.append(ReplanDecision(
+            step=0, action="incremental" if (cache_hit or hits) else "full",
+            reason="bootstrap", step_time_after=strategy.est_step_time,
+            search_time_s=dt, plan_cache_hit=cache_hit,
+            profile_cache_hits=hits))
+        return strategy
+
+    # ------------------------------------------------------------------
+    # event handling
+    # ------------------------------------------------------------------
+
+    def handle(self, event: ClusterEvent, *,
+               step: Optional[int] = None) -> ReplanDecision:
+        step = event.step if step is None else step
+        new_cluster = apply_event(self.cluster, event)
+        return self._react(new_cluster, step, event.describe(),
+                           bandwidth_only=isinstance(event, BandwidthShift))
+
+    def on_step_time(self, step: int, step_time: float,
+                     stage_times: Optional[Sequence[float]] = None
+                     ) -> Optional[ReplanDecision]:
+        """Trainer telemetry hook: fold the measured step time; replan when
+        the calibrated fleet drifts past the threshold."""
+        if self.strategy is None:
+            return None
+        if step <= self.cfg.telemetry_warmup_steps:
+            return None    # jit-compile-inflated steps would poison the EWMA
+        # anchor the calibration to the efficiencies the prediction was made
+        # with (plan_cluster), not the current fleet value — anchoring to the
+        # already-calibrated value would compound the correction every step
+        self.telemetry.observe(
+            self.plan_cluster, self.strategy,
+            StepObservation(step, step_time,
+                            list(stage_times) if stage_times else None))
+        self._last_observed_step = step
+        drift = self.telemetry.drift(self.cluster)
+        if drift <= self.cfg.drift_threshold:
+            return None
+        calibrated = self.telemetry.calibrated(self.cluster)
+        return self._react(calibrated, step,
+                           f"telemetry drift {drift:.0%}", bandwidth_only=False)
+
+    def on_straggler(self, step: int, step_time: float, ewma: float
+                     ) -> Optional[ReplanDecision]:
+        """Drop-in for ``Trainer(on_straggler=...)`` — a sustained skew is a
+        strong single observation; fold it (unless on_step_time already saw
+        this step: the Trainer fires both hooks with the same measurement)
+        and react immediately."""
+        if self.strategy is None:
+            return None
+        if self._last_observed_step != step:
+            self.telemetry.observe(self.plan_cluster, self.strategy,
+                                   StepObservation(step, step_time))
+            self._last_observed_step = step
+        calibrated = self.telemetry.calibrated(self.cluster)
+        if cluster_fingerprint(calibrated) == cluster_fingerprint(self.cluster):
+            return None
+        return self._react(calibrated, step,
+                           f"straggler {step_time / max(ewma, 1e-12):.2f}x",
+                           bandwidth_only=False)
+
+    def trainer_hooks(self) -> Dict:
+        """Keyword arguments for ``train.trainer.Trainer``."""
+        return {"on_straggler": self.on_straggler,
+                "on_step_time": self.on_step_time}
+
+    # ------------------------------------------------------------------
+    # decision ladder
+    # ------------------------------------------------------------------
+
+    def _react(self, new_cluster: HeteroCluster, step: int, why: str,
+               bandwidth_only: bool) -> ReplanDecision:
+        assert self.strategy is not None, "call bootstrap() first"
+        old_est = self.strategy.est_step_time
+        res = project_step(self.strategy, self.plan_cluster, new_cluster,
+                           self.layers)
+        feasible = res is not None
+        t_before = res.makespan if feasible else float("inf")
+
+        # rung 1: bandwidth-only -> retune comm times + warm-up counts in place
+        if bandwidth_only and feasible:
+            self._retune_schedule(new_cluster)
+            t_retuned = self.strategy.est_step_time
+            if t_retuned <= self.cfg.replan_slowdown * old_est:
+                decision = ReplanDecision(
+                    step=step, action="warmup_only", reason=why, event=why,
+                    step_time_before=t_before, step_time_after=t_retuned)
+                return self._commit(decision, new_cluster, adopted=None)
+            t_before = t_retuned   # degradation too large: try a re-search
+
+        # rung 2/3: re-search (incremental thanks to the warm profile cache)
+        cand, search_s, plan_hit, profile_hits = self._plan(new_cluster)
+        if cand is None:
+            if not feasible:
+                raise RuntimeError(
+                    f"fleet change ({why}) broke the plan and re-planning "
+                    f"found no feasible strategy on {new_cluster.describe()}")
+            decision = ReplanDecision(
+                step=step, action="warmup_only" if bandwidth_only else "none",
+                reason=f"{why}; re-search infeasible, keeping current plan",
+                event=why, step_time_before=t_before, step_time_after=t_before,
+                search_time_s=search_s)
+            return self._commit(decision, new_cluster, adopted=None)
+
+        action = "incremental" if (plan_hit or profile_hits > 0) else "full"
+        mig_s = self._migration_seconds(cand, new_cluster)
+
+        if not feasible:
+            decision = ReplanDecision(
+                step=step, action=action, reason=f"{why}; forced (plan broken)",
+                event=why, step_time_before=t_before,
+                step_time_after=cand.est_step_time, search_time_s=search_s,
+                migration_s=mig_s, plan_cache_hit=plan_hit,
+                profile_cache_hits=profile_hits)
+            return self._commit(decision, new_cluster, adopted=cand)
+
+        # amortization: expected gain over the remaining horizon vs. the
+        # one-off cost of migrating state and having searched
+        remaining = max(0, self.cfg.total_steps - step)
+        gain_s = (t_before - cand.est_step_time) * remaining
+        cost_s = mig_s + search_s
+        if self.cfg.amortize and gain_s <= cost_s:
+            decision = ReplanDecision(
+                step=step, action="warmup_only" if bandwidth_only else "none",
+                reason=(f"{why}; not amortized "
+                        f"(gain {gain_s:.1f}s <= cost {cost_s:.1f}s)"),
+                event=why, step_time_before=t_before, step_time_after=t_before,
+                search_time_s=search_s, plan_cache_hit=plan_hit,
+                profile_cache_hits=profile_hits)
+            return self._commit(decision, new_cluster, adopted=None)
+
+        decision = ReplanDecision(
+            step=step, action=action,
+            reason=f"{why}; amortized (gain {gain_s:.1f}s > cost {cost_s:.1f}s)"
+            if self.cfg.amortize else f"{why}; amortization off",
+            event=why, step_time_before=t_before,
+            step_time_after=cand.est_step_time, search_time_s=search_s,
+            migration_s=mig_s, plan_cache_hit=plan_hit,
+            profile_cache_hits=profile_hits)
+        return self._commit(decision, new_cluster, adopted=cand)
+
+    def _commit(self, decision: ReplanDecision, new_cluster: HeteroCluster,
+                adopted: Optional[ParallelStrategy]) -> ReplanDecision:
+        # a committed efficiency change (event or calibration) supersedes the
+        # EWMA history for that sub-cluster — keeping the stale estimate would
+        # read as spurious drift against the new model and churn replans
+        old_eff = {s.name: s.device.efficiency for s in self.cluster.subclusters}
+        for s in new_cluster.subclusters:
+            if s.name in old_eff and old_eff[s.name] != s.device.efficiency:
+                self.telemetry.reset(s.name)
+        self.cluster = new_cluster
+        if adopted is not None:
+            self.strategy = adopted
+            self.plan_cluster = new_cluster
+        self.decisions.append(decision)
+        return decision
+
+    # ------------------------------------------------------------------
+    # cheap responses + costs
+    # ------------------------------------------------------------------
+
+    def _retune_schedule(self, new_cluster: HeteroCluster):
+        """Bandwidth-only response: stage placement and compute stand; only
+        comm times, H-1F1B warm-up counts, and the simulated step time move."""
+        strat = self.strategy
+        c_links = recompute_c_links(strat, self.plan_cluster, new_cluster,
+                                    self.layers)
+        counts = h1f1b_counts([s.t for s in strat.stages], c_links,
+                              strat.n_microbatches)
+        res = simulate([s.t_f for s in strat.stages],
+                       [s.t_b for s in strat.stages],
+                       c_links, strat.n_microbatches, counts)
+        strat.c_links = c_links
+        strat.warmup_counts = counts
+        strat.est_step_time = res.makespan
+        strat.eta = eta_load_balance(
+            res.stage_compute,
+            [s.n_devices
+             * self.plan_cluster.subclusters[s.cluster_idx].device.peak_flops
+             for s in strat.stages])
+        # deliberately NOT stored in the plan cache: only genuinely searched
+        # plans belong there — caching the retuned plan under the new fleet's
+        # key would short-circuit rung 2's re-search with our own retune
+
+    def _migration_seconds(self, cand: ParallelStrategy,
+                           new_cluster: HeteroCluster) -> float:
+        """Parameter bytes whose owning sub-cluster changes, over the cross
+        link (optimizer state is re-sharded locally, not shipped)."""
+        def owners(strategy: ParallelStrategy, cluster: HeteroCluster
+                   ) -> Dict[int, str]:
+            out: Dict[int, str] = {}
+            for s in strategy.stages:
+                name = cluster.subclusters[s.cluster_idx].name
+                for li in range(s.layer_start, s.layer_end):
+                    out[li] = name
+            return out
+
+        old = owners(self.strategy, self.plan_cluster)
+        new = owners(cand, new_cluster)
+        moved = sum(self.layers[li].param_bytes
+                    for li in new if old.get(li) != new[li])
+        if moved <= 0:
+            return 0.0
+        return moved / new_cluster.cross_bw + new_cluster.cross_latency

@@ -1,0 +1,244 @@
+"""Discrete-event replay: a (strategy, fleet-history) pair -> throughput
+timeline, composed from ``core.pipesim.simulate``.
+
+Two primitives make any plan projectable onto any fleet state:
+
+- :func:`feasible_under` — does the strategy's mesh footprint still fit?
+- :func:`project_step` — exact pipeline-DAG step simulation with stage times
+  rescaled by the *true* device efficiency (vs. the efficiency assumed at
+  plan time) and inter-stage comm recomputed from the *true* link bandwidths.
+
+:func:`run_replay` folds an :class:`EventTrace` over a training run.  In
+elastic mode the controller consumes each event (its replan downtime is
+charged to the wall clock); in static mode the initial plan is kept and
+infeasible steps earn zero tokens (checkpoint-restart waiting for the fleet
+to recover — the standard non-elastic baseline).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import HeteroCluster, cluster_fingerprint
+from repro.core.layering import Layer
+from repro.core.pipesim import SimResult, simulate
+from repro.core.strategy import ParallelStrategy
+from repro.runtime.events import EventTrace, apply_event
+
+
+# ---------------------------------------------------------------------------
+# Projection primitives
+# ---------------------------------------------------------------------------
+
+
+def _true_sub(plan_cluster: HeteroCluster, true_cluster: HeteroCluster,
+              cluster_idx: int):
+    """The current incarnation of the sub-cluster a stage was planned on
+    (matched by name; None if it left the fleet)."""
+    name = plan_cluster.subclusters[cluster_idx].name
+    for s in true_cluster.subclusters:
+        if s.name == name:
+            return s
+    return None
+
+
+def feasible_under(strategy: ParallelStrategy, plan_cluster: HeteroCluster,
+                   true_cluster: HeteroCluster) -> bool:
+    """Does the plan's mesh footprint fit the true fleet?  Per-stage mesh
+    shape must fit its sub-cluster, and stages sharing a sub-cluster must
+    jointly fit its device count."""
+    used: Dict[str, int] = {}
+    for s in strategy.stages:
+        sub = _true_sub(plan_cluster, true_cluster, s.cluster_idx)
+        if sub is None or s.mesh_n > sub.n_nodes or s.mesh_m > sub.devices_per_node:
+            return False
+        used[sub.name] = used.get(sub.name, 0) + s.n_devices
+    for s in true_cluster.subclusters:
+        if used.get(s.name, 0) > s.n_devices:
+            return False
+    return True
+
+
+def project_step(strategy: ParallelStrategy, plan_cluster: HeteroCluster,
+                 true_cluster: HeteroCluster, layers: Sequence[Layer], *,
+                 no_overlap: bool = False) -> Optional[SimResult]:
+    """Simulate one step of ``strategy`` under the true fleet state.
+
+    Stage compute is rescaled by (efficiency assumed at plan time) /
+    (true efficiency); inter-stage comm is recomputed from boundary
+    activation bytes over the true links.  Returns None when infeasible.
+    """
+    if not feasible_under(strategy, plan_cluster, true_cluster):
+        return None
+    t_f, t_b = [], []
+    for s in strategy.stages:
+        planned_eff = plan_cluster.subclusters[s.cluster_idx].device.efficiency
+        true_eff = _true_sub(plan_cluster, true_cluster,
+                             s.cluster_idx).device.efficiency
+        scale = planned_eff / true_eff
+        t_f.append(s.t_f * scale)
+        t_b.append(s.t_b * scale)
+    c_links = recompute_c_links(strategy, plan_cluster, true_cluster, layers)
+    return simulate(t_f, t_b, c_links, strategy.n_microbatches,
+                    strategy.warmup_counts, no_overlap=no_overlap)
+
+
+def recompute_c_links(strategy: ParallelStrategy, plan_cluster: HeteroCluster,
+                      true_cluster: HeteroCluster,
+                      layers: Sequence[Layer]) -> List[float]:
+    """Inter-stage comm times under the true link bandwidths (boundary
+    activation bytes are a property of the layering, not the fleet)."""
+    out = []
+    for i in range(strategy.n_stages - 1):
+        s, nxt = strategy.stages[i], strategy.stages[i + 1]
+        cut = layers[s.layer_end - 1].act_out_bytes_per_token * strategy.mb_tokens
+        src = _true_sub(plan_cluster, true_cluster, s.cluster_idx)
+        dst = _true_sub(plan_cluster, true_cluster, nxt.cluster_idx)
+        if src is not None and dst is not None and src.name == dst.name:
+            bw = src.inter_node_bw
+        else:
+            bw = true_cluster.cross_bw
+        out.append(cut / bw)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Replay harness
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplaySample:
+    step: int
+    wall_s: float            # cumulative wall clock at end of step
+    step_time_s: float       # this step's duration (stall time when starved)
+    tokens: int              # tokens earned this step (0 during outage)
+    events: List[str] = field(default_factory=list)
+    decision: Optional[str] = None
+
+
+@dataclass
+class ReplayResult:
+    samples: List[ReplaySample]
+    tokens_total: int
+    wall_total_s: float
+    decisions: List = field(default_factory=list)   # ReplanDecision records
+    stalled_steps: int = 0
+
+    def throughput(self) -> float:
+        return self.tokens_total / self.wall_total_s if self.wall_total_s else 0.0
+
+    def throughput_between(self, start_step: int, end_step: int) -> float:
+        """Average tokens/s over steps in [start_step, end_step)."""
+        window = [s for s in self.samples if start_step <= s.step < end_step]
+        wall = sum(s.step_time_s for s in window)
+        tok = sum(s.tokens for s in window)
+        return tok / wall if wall > 0 else 0.0
+
+    def tokens_lost(self, ideal_throughput: float) -> float:
+        """Tokens an undisrupted fleet at ``ideal_throughput`` would have
+        produced in the same wall time, minus what this run produced."""
+        return ideal_throughput * self.wall_total_s - self.tokens_total
+
+    def recovery_latency(self, event_step: int) -> Tuple[int, float]:
+        """(#starved steps, seconds) from ``event_step`` until tokens flow
+        again — the time-to-recover after a disruption."""
+        stalled, secs = 0, 0.0
+        seen = False
+        for s in self.samples:
+            if s.step < event_step:
+                continue
+            if s.tokens == 0:
+                seen = True
+                stalled += 1
+                secs += s.step_time_s
+            elif seen or s.step > event_step:
+                break
+        return stalled, secs
+
+
+def run_replay(trace: EventTrace, n_steps: int, *,
+               controller=None,
+               strategy: Optional[ParallelStrategy] = None,
+               plan_cluster: Optional[HeteroCluster] = None,
+               layers: Optional[Sequence[Layer]] = None,
+               no_overlap: bool = False,
+               feed_telemetry: bool = True) -> ReplayResult:
+    """Replay ``trace`` over ``n_steps`` training steps.
+
+    Elastic mode (``controller`` given): events are routed through
+    ``controller.handle``; its replan downtime (search + migration) is
+    charged to the wall clock at the event step, and measured step times are
+    fed back as telemetry.  Static mode (``strategy`` given): the plan never
+    changes; steps whose plan does not fit the fleet earn zero tokens and
+    burn the last known step time waiting (checkpoint-restart baseline).
+    """
+    elastic = controller is not None
+    if elastic:
+        if controller.strategy is None:
+            controller.bootstrap()
+        layers = controller.layers
+        true_cluster = controller.cluster
+    else:
+        assert strategy is not None and plan_cluster is not None \
+            and layers is not None, "static replay needs strategy+cluster+layers"
+        true_cluster = plan_cluster
+
+    samples: List[ReplaySample] = []
+    decisions: List = []
+    wall = 0.0
+    tokens_total = 0
+    stalled_steps = 0
+    last_step_time = (controller.strategy if elastic else strategy).est_step_time
+    sim_cache: Dict = {}
+
+    for step in range(n_steps):
+        evs = trace.at(step)
+        ev_names = [e.describe() for e in evs]
+        decision_str = None
+        for ev in evs:
+            if elastic:
+                d = controller.handle(ev, step=step)
+                decisions.append(d)
+                wall += d.downtime_s
+                decision_str = d.action if decision_str is None \
+                    else f"{decision_str},{d.action}"
+            else:
+                true_cluster = apply_event(true_cluster, ev)
+
+        if elastic:
+            strat, pcl = controller.strategy, controller.plan_cluster
+            true_cluster = controller.cluster
+        else:
+            strat, pcl = strategy, plan_cluster
+
+        key = (cluster_fingerprint(true_cluster), tuple(strat.warmup_counts),
+               tuple((s.layer_start, s.layer_end, s.cluster_idx,
+                      s.mesh_n, s.mesh_m) for s in strat.stages))
+        if key not in sim_cache:
+            res = project_step(strat, pcl, true_cluster, layers,
+                               no_overlap=no_overlap)
+            sim_cache[key] = res.makespan if res is not None else None
+        makespan = sim_cache[key]
+
+        if makespan is None:
+            # starved: plan does not fit the fleet; wait one nominal step
+            stalled_steps += 1
+            wall += last_step_time
+            samples.append(ReplaySample(step, wall, last_step_time, 0,
+                                        ev_names, decision_str))
+            continue
+
+        wall += makespan
+        last_step_time = makespan
+        tok = strat.tokens_per_step()
+        tokens_total += tok
+        samples.append(ReplaySample(step, wall, makespan, tok,
+                                    ev_names, decision_str))
+        if elastic and feed_telemetry:
+            d = controller.on_step_time(step, makespan)
+            if d is not None:
+                decisions.append(d)
+                wall += d.downtime_s
+
+    return ReplayResult(samples, tokens_total, wall, decisions, stalled_steps)

@@ -1,0 +1,109 @@
+"""Online calibration: measured step/stage times -> EWMA efficiency factors.
+
+The planner's cost model predicts per-stage times from ``DeviceProfile``
+specs scaled by ``device.efficiency``.  On a live fleet the prediction
+drifts — thermal throttling, noisy neighbors, background daemons.  The
+calibrator folds measurements back into per-sub-cluster efficiency estimates:
+
+    eff_est = eff_used_at_plan_time * t_predicted / t_measured
+
+EWMA-smoothed per sub-cluster.  ``calibrated(cluster)`` returns a cluster
+value with the estimates applied (only when outside the deadband, so noise
+does not thrash the plan cache), and ``drift(cluster)`` is the controller's
+replan trigger signal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.cluster import HeteroCluster, set_efficiency, subcluster_index
+from repro.core.strategy import ParallelStrategy
+
+
+@dataclass
+class StepObservation:
+    step: int
+    step_time: float                          # measured wall time (s)
+    stage_times: Optional[List[float]] = None  # per-stage f+b per microbatch
+
+
+class TelemetryCalibrator:
+    def __init__(self, alpha: float = 0.25, deadband: float = 0.05,
+                 min_efficiency: float = 0.05):
+        self.alpha = alpha
+        self.deadband = deadband
+        self.min_efficiency = min_efficiency
+        self._eff: Dict[str, float] = {}       # sub-cluster name -> EWMA estimate
+        self.n_observations = 0
+
+    # -- folding measurements ------------------------------------------------
+
+    def _fold(self, name: str, current_eff: float, est: float):
+        est = max(self.min_efficiency, est)
+        prev = self._eff.get(name, current_eff)
+        self._eff[name] = (1 - self.alpha) * prev + self.alpha * est
+
+    def observe(self, cluster: HeteroCluster, strategy: ParallelStrategy,
+                obs: StepObservation):
+        """Fold one step's measurement.  ``cluster`` must be the cluster the
+        strategy was PLANNED on — its efficiencies are what the predictions
+        assume, so they anchor the estimate (anchoring to an
+        already-calibrated value would compound the correction).  With
+        per-stage times, each stage calibrates its own sub-cluster; with only
+        the aggregate step time, the global predicted/measured ratio is
+        attributed to every sub-cluster the strategy runs on (coarse but
+        unbiased)."""
+        self.n_observations += 1
+        if obs.stage_times:
+            for s, t_meas in zip(strategy.stages, obs.stage_times):
+                if t_meas <= 0 or s.t <= 0:
+                    continue
+                sub = cluster.subclusters[s.cluster_idx]
+                self._fold(sub.name, sub.device.efficiency,
+                           sub.device.efficiency * s.t / t_meas)
+        elif obs.step_time > 0 and strategy.est_step_time > 0:
+            ratio = strategy.est_step_time / obs.step_time
+            for name in {cluster.subclusters[s.cluster_idx].name
+                         for s in strategy.stages}:
+                i = subcluster_index(cluster, name)
+                eff = cluster.subclusters[i].device.efficiency
+                self._fold(name, eff, eff * ratio)
+
+    # -- reading the calibration --------------------------------------------
+
+    def efficiency(self, name: str, default: float = 1.0) -> float:
+        return self._eff.get(name, default)
+
+    def drift(self, cluster: HeteroCluster) -> float:
+        """Largest relative gap between a sub-cluster's modeled efficiency
+        and the calibrated estimate.  The controller replans when this
+        exceeds its threshold."""
+        worst = 0.0
+        for s in cluster.subclusters:
+            if s.name not in self._eff:
+                continue
+            cur = s.device.efficiency
+            worst = max(worst, abs(self._eff[s.name] - cur) / max(cur, 1e-9))
+        return worst
+
+    def calibrated(self, cluster: HeteroCluster) -> HeteroCluster:
+        """Cluster value with estimates applied (deadband-gated per
+        sub-cluster: small drifts keep the modeled value so equal-fingerprint
+        plan-cache hits survive noise)."""
+        out = cluster
+        for s in cluster.subclusters:
+            est = self._eff.get(s.name)
+            if est is None:
+                continue
+            cur = s.device.efficiency
+            if abs(est - cur) / max(cur, 1e-9) > self.deadband:
+                out = set_efficiency(out, s.name, est)
+        return out
+
+    def reset(self, name: Optional[str] = None):
+        """Forget estimates (e.g. after hardware replacement)."""
+        if name is None:
+            self._eff.clear()
+        else:
+            self._eff.pop(name, None)

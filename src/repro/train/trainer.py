@@ -6,6 +6,9 @@
   ``replan_threshold`` triggers the ``on_straggler`` hook (on a real cluster:
   update the slow pod's ``DeviceProfile.efficiency`` and re-run the HAPT
   planner — heterogeneity-aware planning doubles as failure adaptation);
+- per-step telemetry: every measured step time flows to ``on_step_time`` —
+  ``runtime.ElasticController.trainer_hooks()`` provides both hooks, closing
+  the loop: telemetry -> EWMA calibration -> amortized replanning;
 - preemption-safe: SIGTERM finishes the current step, checkpoints, exits.
 """
 from __future__ import annotations
@@ -37,10 +40,14 @@ class Trainer:
     def __init__(self, cfg: TrainerConfig, data_cfg: DataConfig,
                  train_step: Callable, state: Dict[str, Any],
                  on_straggler: Optional[Callable] = None,
+                 on_step_time: Optional[Callable] = None,
                  log_fn: Callable = print,
                  clock: Callable[[], float] = time.perf_counter):
         """``state``: dict of pytrees passed through train_step in order;
-        train_step(*state_values, batch) -> (*new_state_values, metrics)."""
+        train_step(*state_values, batch) -> (*new_state_values, metrics).
+        ``on_step_time(step, dt)`` receives every measured step wall time
+        (telemetry feed for the elastic controller); ``on_straggler(step, dt,
+        ewma)`` fires only on sustained skew."""
         self.cfg = cfg
         self.data_cfg = data_cfg
         self.train_step = train_step
@@ -49,6 +56,7 @@ class Trainer:
         # canonicalizes dict key order, which must not reorder arguments
         self._keys = list(state.keys())
         self.on_straggler = on_straggler
+        self.on_step_time = on_step_time
         self.log = log_fn
         self.clock = clock
         self._stop = False
@@ -91,6 +99,9 @@ class Trainer:
             dt = self.clock() - t0
             self.state = dict(zip(keys, new_vals))
             step += 1
+
+            if self.on_step_time is not None:
+                self.on_step_time(step, dt)
 
             # straggler watch (EWMA seeded from the 2nd step — the 1st pays
             # jit compilation and would mask every later straggler)

@@ -1,7 +1,45 @@
 import os
 import sys
+import types
 
 # tests run on ONE CPU device (the dry-run alone uses 512 — never set here)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# hypothesis shim: property-based tests are optional (requirements-dev.txt);
+# without the package, @given tests skip but the rest of each module runs.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg signature on purpose: pytest must not mistake the
+            # wrapped function's strategy parameters for fixtures
+            def skipper():
+                pytest.skip(
+                    "hypothesis not installed (see requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    _st = _Strategies("hypothesis.strategies")
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.assume = lambda *a, **k: None
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -106,3 +106,23 @@ def test_eta_metric():
     # stage 2 idles half the time on equal hardware
     eta = eta_load_balance([1.0, 0.5], [100.0, 100.0])
     assert eta == pytest.approx(0.75)
+
+
+def test_banded_rule_all_three_bands():
+    """Eq. 2: delta = 1 / 2 / 3 for c in (0, eps*tmax] / (eps*tmax, tmax/2]
+    / (tmax/2, tmax] — including both boundaries of each band."""
+    t = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]
+    eps = 0.05
+    c = [0.01,    # well inside band 1
+         0.05,    # == eps * tmax (band-1 upper boundary, inclusive)
+         0.06,    # just past eps * tmax -> band 2
+         0.5,     # == tmax / 2 (band-2 upper boundary, inclusive)
+         0.51,    # just past tmax / 2 -> band 3
+         1.0]     # == tmax (band-3 upper boundary)
+    assert h1f1b_deltas(t, c, eps=eps, banded=True) == [1, 1, 2, 2, 3, 3]
+
+
+def test_banded_vs_exact_agree_on_tiny_comm():
+    t = [2.0, 2.0]
+    assert h1f1b_deltas(t, [0.05], banded=True) == \
+        h1f1b_deltas(t, [0.05], banded=False) == [1]

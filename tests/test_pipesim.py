@@ -1,0 +1,75 @@
+"""Pipeline-DAG simulator: ``no_overlap`` mode (HexiScale-like synchronous
+sends) and the eta load-balance metric's edge cases — the surfaces the
+elastic replay harness builds on."""
+import pytest
+
+from repro.core.h1f1b import h1f1b_counts
+from repro.core.pipesim import eta_load_balance, simulate
+
+
+def test_no_overlap_never_faster():
+    t_f, t_b, c = [1.0, 1.2], [2.0, 2.4], [0.5]
+    counts = h1f1b_counts([3.0, 3.6], c, 8)
+    over = simulate(t_f, t_b, c, 8, counts)
+    sync = simulate(t_f, t_b, c, 8, counts, no_overlap=True)
+    assert sync.makespan >= over.makespan - 1e-12
+
+
+def test_no_overlap_equals_overlap_without_comm():
+    t_f, t_b = [1.0, 1.0, 1.0], [2.0, 2.0, 2.0]
+    c = [0.0, 0.0]
+    counts = [3, 2, 1]
+    over = simulate(t_f, t_b, c, 6, counts)
+    sync = simulate(t_f, t_b, c, 6, counts, no_overlap=True)
+    assert sync.makespan == pytest.approx(over.makespan)
+    assert sync.comm_total == 0.0
+
+
+def test_no_overlap_two_stage_one_microbatch_exact():
+    # F0(1) -> send(0.5) -> F1(1) -> B1(1) -> send back(0.5) -> B0(1)
+    res = simulate([1.0, 1.0], [1.0, 1.0], [0.5], 1, [1, 1], no_overlap=True)
+    assert res.makespan == pytest.approx(5.0)
+
+
+def test_no_overlap_comm_charged_to_stages():
+    t_f, t_b, c = [1.0, 1.0], [1.0, 1.0], [0.4]
+    B = 4
+    sync = simulate(t_f, t_b, c, B, [2, 1], no_overlap=True)
+    # every CF is charged to stage 0, every CB to stage 1; full duplex both ways
+    assert sync.stage_comm_blocking[0] == pytest.approx(B * 0.4)
+    assert sync.stage_comm_blocking[1] == pytest.approx(B * 0.4)
+    assert sum(sync.stage_comm_blocking) == pytest.approx(sync.comm_total)
+    over = simulate(t_f, t_b, c, B, [2, 1])
+    assert over.stage_comm_blocking == [0.0, 0.0]
+
+
+def test_no_overlap_busy_idle_accounting():
+    sync = simulate([1.0, 2.0], [1.0, 2.0], [0.3], 5, [2, 1], no_overlap=True)
+    for i in range(2):
+        total = (sync.stage_compute[i] + sync.stage_comm_blocking[i]
+                 + sync.stage_idle[i])
+        assert total == pytest.approx(sync.makespan)
+
+
+def test_eta_zero_compute():
+    assert eta_load_balance([0.0, 0.0], [1e12, 1e12]) == 1.0
+
+
+def test_eta_single_stage():
+    assert eta_load_balance([3.0], [5e12]) == pytest.approx(1.0)
+
+
+def test_eta_perfect_balance():
+    assert eta_load_balance([2.0, 2.0], [1e12, 3e12]) == pytest.approx(1.0)
+
+
+def test_eta_imbalance_weighted_by_peak():
+    # idle time on the big sub-cluster hurts more than on the small one
+    eta_big_idle = eta_load_balance([1.0, 2.0], [3e12, 1e12])
+    eta_small_idle = eta_load_balance([2.0, 1.0], [3e12, 1e12])
+    assert eta_big_idle < eta_small_idle < 1.0
+
+
+def test_eta_one_stage_idle_zero_compute():
+    # a stage with zero compute on equal peaks: eta = 1 - 1/2
+    assert eta_load_balance([2.0, 0.0], [1e12, 1e12]) == pytest.approx(0.5)

@@ -1,0 +1,378 @@
+"""Elastic runtime subsystem: events fold correctly, telemetry calibrates,
+the controller picks the cheapest sufficient response (warm-up retune vs.
+incremental re-search vs. full replan) under the amortization rule, plan
+caches survive restarts, profiler tables are reused for untouched meshes,
+and the replay harness shows elastic > static after a disruption."""
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import (
+    GB, GBPS, DeviceProfile, HeteroCluster, SubCluster, cluster_fingerprint,
+)
+from repro.core.costmodel import CostModelConfig, stage_cost
+from repro.core.layering import build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.planner import PlannerConfig
+from repro.core.profiler import ZeroRedundantProfiler
+from repro.core.strategy import ParallelStrategy
+from repro.runtime import (
+    BandwidthShift, ControllerConfig, ElasticController, EventTrace,
+    NodeFailure, NodeJoin, Preemption, StepObservation, Straggler,
+    TelemetryCalibrator, apply_event, paper_trace, random_trace, run_replay,
+)
+
+
+def tiny_cluster(a_nodes=1, b_nodes=2, cross_gbps=10.0):
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A", a_nodes, 2,
+                       DeviceProfile("fast", 300e12, 40 * GB, 1.5e12),
+                       300e9, 25e9),
+            SubCluster("B", b_nodes, 2,
+                       DeviceProfile("slow", 120e12, 32 * GB, 0.9e12),
+                       150e9, 25e9),
+        ),
+        cross_bw=cross_gbps * GBPS)
+
+
+def tiny_layers(granularity=8, seq_len=256):
+    ops = build_op_sequence(get_config("gpt-2b"), seq_len=seq_len)
+    return build_layers(ops, granularity)
+
+
+def make_controller(cluster, total_steps=500, plan_cache_dir=None,
+                    amortize=True, require_all=True):
+    pcfg = PlannerConfig(granularity=8, n_microbatches=8,
+                         min_submesh_devices=2)
+    # all devices participate so plans genuinely span the cross link
+    pcfg.search.require_all_devices = require_all
+    ccfg = ControllerConfig(total_steps=total_steps, seq_len=256,
+                            global_batch=32, plan_cache_dir=plan_cache_dir,
+                            amortize=amortize)
+    return ElasticController(cluster, "gpt-2b", planner_cfg=pcfg, cfg=ccfg)
+
+
+# --- events -----------------------------------------------------------------
+
+
+def test_apply_node_failure_and_join():
+    cl = tiny_cluster(b_nodes=2)
+    cl2 = apply_event(cl, NodeFailure(step=5, subcluster="B"))
+    assert cl2.subclusters[1].n_nodes == 1
+    assert cl.subclusters[1].n_nodes == 2          # original untouched (frozen)
+    cl3 = apply_event(cl2, NodeJoin(step=9, subcluster="B"))
+    assert cluster_fingerprint(cl3) == cluster_fingerprint(cl)
+
+
+def test_apply_failure_drops_empty_subcluster_and_template_rejoins():
+    cl = tiny_cluster(a_nodes=1)
+    cl2 = apply_event(cl, NodeFailure(step=1, subcluster="A"))
+    assert [s.name for s in cl2.subclusters] == ["B"]
+    cl3 = apply_event(cl2, NodeJoin(step=2, subcluster="A",
+                                    template=cl.subclusters[0]))
+    assert {s.name for s in cl3.subclusters} == {"A", "B"}
+
+
+def test_apply_bandwidth_and_straggler():
+    cl = tiny_cluster()
+    cl2 = apply_event(cl, BandwidthShift(step=1, cross_bw=2 * GBPS))
+    assert cl2.cross_bw == pytest.approx(2 * GBPS)
+    cl3 = apply_event(cl2, Straggler(step=2, subcluster="B", efficiency=0.6))
+    assert cl3.subclusters[1].device.efficiency == pytest.approx(0.6)
+    assert cl3.subclusters[1].device.effective_flops == pytest.approx(
+        0.6 * 120e12)
+
+
+def test_remove_too_many_nodes_raises():
+    with pytest.raises(ValueError):
+        apply_event(tiny_cluster(), NodeFailure(step=0, subcluster="A",
+                                                n_nodes=5))
+
+
+def test_preemption_expands_to_scheduled_rejoin():
+    tr = EventTrace([Preemption(step=10, subcluster="B", n_nodes=1,
+                                duration_steps=25)])
+    assert len(tr.events) == 2
+    joins = [e for e in tr.events if isinstance(e, NodeJoin)]
+    assert joins and joins[0].step == 35
+    cl = tiny_cluster()
+    assert tr.cluster_at(cl, 20).subclusters[1].n_nodes == 1
+    assert tr.cluster_at(cl, 40).subclusters[1].n_nodes == 2
+
+
+def test_random_trace_deterministic_per_seed():
+    cl = tiny_cluster(a_nodes=4, b_nodes=4)
+    t1 = random_trace(cl, 2000, seed=3)
+    t2 = random_trace(cl, 2000, seed=3)
+    t3 = random_trace(cl, 2000, seed=4)
+    assert [e.describe() for e in t1.events] == [e.describe() for e in t2.events]
+    assert t1.events and [e.describe() for e in t1.events] \
+        != [e.describe() for e in t3.events]
+
+
+# --- telemetry --------------------------------------------------------------
+
+
+def _fake_strategy(stage_ts, cluster_idxs, est):
+    from repro.core.strategy import StageAssignment
+    stages = [StageAssignment(layer_start=i, layer_end=i + 1, cluster_idx=ci,
+                              mesh_n=1, mesh_m=2, tp=1, dp=2,
+                              t_f=t / 3, t_b=2 * t / 3, mem_p=0, mem_a=0)
+              for i, (t, ci) in enumerate(zip(stage_ts, cluster_idxs))]
+    return ParallelStrategy(stages=stages, c_links=[0.0] * (len(stages) - 1),
+                            warmup_counts=[1] * len(stages), t_max=max(stage_ts),
+                            n_microbatches=4, mb_tokens=128, est_step_time=est)
+
+
+def test_telemetry_converges_to_true_efficiency():
+    cl = tiny_cluster()
+    strat = _fake_strategy([1.0, 2.0], [0, 1], est=3.0)
+    cal = TelemetryCalibrator(alpha=0.5)
+    # sub-cluster B actually runs 2x slow: measured stage time = 2 * predicted
+    for step in range(20):
+        cal.observe(cl, strat, StepObservation(step, 5.0, [1.0, 4.0]))
+    assert cal.efficiency("A") == pytest.approx(1.0, abs=1e-6)
+    assert cal.efficiency("B") == pytest.approx(0.5, rel=1e-3)
+    assert cal.drift(cl) == pytest.approx(0.5, rel=1e-3)
+    calibrated = cal.calibrated(cl)
+    assert calibrated.subclusters[1].device.efficiency == pytest.approx(
+        0.5, rel=1e-3)
+    # A stays inside the deadband -> untouched object semantics
+    assert calibrated.subclusters[0].device.efficiency == 1.0
+
+
+def test_telemetry_deadband_suppresses_noise():
+    cl = tiny_cluster()
+    strat = _fake_strategy([1.0], [0], est=1.0)
+    cal = TelemetryCalibrator(alpha=0.5, deadband=0.10)
+    for step in range(10):
+        cal.observe(cl, strat, StepObservation(step, 1.03, [1.03]))
+    assert cluster_fingerprint(cal.calibrated(cl)) == cluster_fingerprint(cl)
+
+
+def test_telemetry_step_time_fallback():
+    cl = tiny_cluster()
+    strat = _fake_strategy([1.0, 1.0], [0, 1], est=2.0)
+    cal = TelemetryCalibrator(alpha=0.5)
+    for step in range(20):
+        cal.observe(cl, strat, StepObservation(step, 4.0))   # 2x slower
+    assert cal.efficiency("A") == pytest.approx(0.5, rel=1e-3)
+    assert cal.efficiency("B") == pytest.approx(0.5, rel=1e-3)
+
+
+# --- strategy serialization (plan cache survives restarts) ------------------
+
+
+def test_strategy_json_roundtrip_with_planner_meta():
+    layers = tiny_layers()
+    cl = tiny_cluster()
+    ctrl = make_controller(cl)
+    strat = ctrl.bootstrap()
+    assert strat.planner_meta.get("profiler") is not None
+    s = strat.to_json()
+    back = ParallelStrategy.from_json(s)
+    assert back.stages == strat.stages
+    assert back.warmup_counts == strat.warmup_counts
+    assert [pytest.approx(c) for c in strat.c_links] == back.c_links
+    assert back.t_max == pytest.approx(strat.t_max)
+    assert back.est_step_time == pytest.approx(strat.est_step_time)
+    assert back.planner_meta == json.loads(json.dumps(strat.planner_meta))
+    # second round trip is exact
+    assert back.to_json() == ParallelStrategy.from_json(back.to_json()).to_json()
+
+
+# --- profiler table reuse (incremental re-search) ---------------------------
+
+
+class CountingMeasure:
+    """measure_fn that delegates to the analytic model and records which
+    (sub-cluster, mesh) pairs were actually profiled."""
+
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, layers, sub, mesh, mb_tokens):
+        self.calls.append((sub.name, mesh.n, mesh.m))
+        return stage_cost(layers, sub, mesh, mb_tokens, CostModelConfig())
+
+
+def test_profiler_cache_skips_untouched_meshes_on_node_join():
+    from repro.core.cluster import add_nodes
+    layers = tiny_layers()
+    cache = {}
+    cl = tiny_cluster(a_nodes=1, b_nodes=2)
+    m1 = CountingMeasure()
+    ZeroRedundantProfiler(cl, layers, 1024, measure_fn=m1,
+                          cost_cache=cache).profile()
+    assert m1.calls
+    # B gains a node: only B's NEW mesh shapes may be profiled
+    cl2 = add_nodes(cl, "B", 1)
+    m2 = CountingMeasure()
+    t2 = ZeroRedundantProfiler(cl2, layers, 1024, measure_fn=m2,
+                               cost_cache=cache).profile()
+    assert all(name == "B" and n == 3 for (name, n, m) in m2.calls), m2.calls
+    assert t2.stats.n_cache_hits > 0
+
+
+def test_profiler_cache_invalidates_only_changed_subcluster():
+    from repro.core.cluster import set_efficiency
+    layers = tiny_layers()
+    cache = {}
+    cl = tiny_cluster()
+    ZeroRedundantProfiler(cl, layers, 1024, measure_fn=CountingMeasure(),
+                          cost_cache=cache).profile()
+    # A degrades: A's entries miss (device profile changed), B's all hit
+    cl2 = set_efficiency(cl, "A", 0.5)
+    m2 = CountingMeasure()
+    ZeroRedundantProfiler(cl2, layers, 1024, measure_fn=m2,
+                          cost_cache=cache).profile()
+    assert m2.calls and all(name == "A" for (name, _, _) in m2.calls)
+
+
+def test_profiler_cache_full_hit_on_unchanged_cluster():
+    layers = tiny_layers()
+    cache = {}
+    cl = tiny_cluster()
+    ZeroRedundantProfiler(cl, layers, 1024, measure_fn=CountingMeasure(),
+                          cost_cache=cache).profile()
+    m2 = CountingMeasure()
+    t2 = ZeroRedundantProfiler(cl, layers, 1024, measure_fn=m2,
+                               cost_cache=cache).profile()
+    assert m2.calls == []
+    assert t2.stats.n_unique_profiled == 0
+
+
+# --- controller decision ladder ---------------------------------------------
+
+
+def test_bandwidth_shift_is_warmup_only_and_retunes():
+    cl = tiny_cluster(cross_gbps=10.0)
+    ctrl = make_controller(cl)
+    strat = ctrl.bootstrap()
+    counts_before = list(strat.warmup_counts)
+    c_before = list(strat.c_links)
+    d = ctrl.handle(BandwidthShift(step=10, cross_bw=1 * GBPS))
+    assert d.action == "warmup_only"
+    assert d.downtime_s == pytest.approx(0.0) or d.search_time_s >= 0
+    # comm got 10x more expensive across the cross link
+    if any(c > 0 for c in c_before):
+        assert max(ctrl.strategy.c_links) > max(c_before)
+    assert ctrl.strategy.warmup_counts != counts_before or \
+        ctrl.strategy.c_links != c_before
+    # fleet state tracked even without adoption
+    assert ctrl.cluster.cross_bw == pytest.approx(1 * GBPS)
+
+
+def test_node_failure_forces_incremental_replan():
+    cl = tiny_cluster(b_nodes=2)
+    ctrl = make_controller(cl)
+    ctrl.bootstrap()
+    uses_b = any(ctrl.plan_cluster.subclusters[s.cluster_idx].name == "B"
+                 and s.mesh_n == 2 for s in ctrl.strategy.stages)
+    d = ctrl.handle(NodeFailure(step=10, subcluster="B"))
+    if uses_b:
+        assert d.action in ("incremental", "full")
+        assert "forced" in d.reason
+        assert d.profile_cache_hits > 0 or d.plan_cache_hit  # warm tables
+    # whatever the path, the new plan fits the shrunk fleet
+    from repro.runtime import feasible_under
+    assert feasible_under(ctrl.strategy, ctrl.plan_cluster, ctrl.cluster)
+    assert ctrl.cluster.subclusters[-1].n_nodes == 1
+
+
+def test_amortization_rejects_replan_near_horizon():
+    cl = tiny_cluster(b_nodes=1)
+    # 2 steps left: nothing amortizes
+    ctrl = make_controller(cl, total_steps=2)
+    ctrl.bootstrap()
+    d = ctrl.handle(NodeJoin(step=1, subcluster="B"), step=1)
+    assert d.action == "none"
+    assert "not amortized" in d.reason
+    # the join is still tracked in the fleet state
+    assert [s.n_nodes for s in ctrl.cluster.subclusters
+            if s.name == "B"] == [2]
+
+
+def test_amortization_accepts_replan_with_long_horizon():
+    cl = tiny_cluster(b_nodes=1)
+    ctrl = make_controller(cl, total_steps=10_000_000)
+    ctrl.bootstrap()
+    t0 = ctrl.strategy.est_step_time
+    d = ctrl.handle(NodeJoin(step=1, subcluster="B", n_nodes=3), step=1)
+    assert d.action in ("incremental", "full")
+    assert ctrl.strategy.est_step_time < t0
+
+
+def test_plan_cache_survives_controller_restart(tmp_path):
+    cl = tiny_cluster()
+    ctrl = make_controller(cl, plan_cache_dir=str(tmp_path))
+    s1 = ctrl.bootstrap()
+    assert not ctrl.decisions[0].plan_cache_hit
+    # "restart": a fresh controller over the same dir loads instead of searching
+    ctrl2 = make_controller(cl, plan_cache_dir=str(tmp_path))
+    s2 = ctrl2.bootstrap()
+    assert ctrl2.decisions[0].plan_cache_hit
+    assert ctrl2.decisions[0].search_time_s == 0.0
+    assert s2.to_json() == s1.to_json()
+
+
+def test_straggler_event_shifts_plan_or_is_amortized_away():
+    cl = tiny_cluster()
+    ctrl = make_controller(cl, total_steps=10_000_000)
+    ctrl.bootstrap()
+    d = ctrl.handle(Straggler(step=10, subcluster="A", efficiency=0.25))
+    assert d.action in ("none", "incremental", "full")
+    assert ctrl.cluster.subclusters[0].device.efficiency == pytest.approx(0.25)
+
+
+# --- replay harness ---------------------------------------------------------
+
+
+def test_replay_elastic_beats_static_after_disruption():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    trace = paper_trace(cl, fail_step=10, bw_step=20, recover_step=35,
+                        degraded_gbps=1.0)
+    n_steps = 50
+
+    ctrl = make_controller(cl, total_steps=n_steps)
+    ctrl.bootstrap()
+    elastic = run_replay(trace, n_steps, controller=ctrl)
+
+    ctrl_s = make_controller(cl, total_steps=n_steps)
+    static_plan = ctrl_s.bootstrap()
+    static = run_replay(trace, n_steps, strategy=static_plan,
+                        plan_cluster=cl, layers=ctrl_s.layers)
+
+    assert elastic.tokens_total >= static.tokens_total
+    post_e = elastic.throughput_between(10, n_steps)
+    post_s = static.throughput_between(10, n_steps)
+    assert post_e > post_s
+    # static loses the outage; elastic never starves
+    assert elastic.stalled_steps == 0
+    # replan decisions were logged with their flavor
+    actions = {d.action for d in ctrl.decisions}
+    assert actions & {"warmup_only", "incremental", "full"}
+
+
+def test_replay_quiet_trace_is_noop():
+    cl = tiny_cluster()
+    ctrl = make_controller(cl)
+    strat = ctrl.bootstrap()
+    res = run_replay(EventTrace([]), 10, controller=ctrl)
+    assert res.stalled_steps == 0
+    assert res.tokens_total == 10 * strat.tokens_per_step()
+    assert len(ctrl.decisions) == 1        # bootstrap only
+
+
+def test_replay_samples_accounting():
+    cl = tiny_cluster()
+    ctrl = make_controller(cl)
+    ctrl.bootstrap()
+    res = run_replay(EventTrace([]), 5, controller=ctrl)
+    assert len(res.samples) == 5
+    assert res.samples[-1].wall_s == pytest.approx(
+        sum(s.step_time_s for s in res.samples))
+    assert res.throughput() == pytest.approx(
+        res.tokens_total / res.wall_total_s)
