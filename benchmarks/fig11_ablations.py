@@ -1,6 +1,9 @@
 """Paper Fig. 11: (a) layer-granularity ablation {8, 16, 48, fine};
 (b) joint-optimization ablation — plan with C(i)=0 (communication-blind),
-then evaluate under real link costs (paper: 1.4x-3.3x slowdown)."""
+then evaluate under real link costs (paper: 1.4x-3.3x slowdown);
+(c) two-level ablation — inter-op-only vs. joint inter+intra search on a
+mixed-efficiency sub-cluster (both plans referee-priced identically via
+``sync_priced_step`` so the comparison is accounting-fair)."""
 from __future__ import annotations
 
 import numpy as np
@@ -10,15 +13,25 @@ from benchmarks.common import (
     plan_hapt,
 )
 from repro.configs import get_config
+from repro.core.cluster import set_node_efficiencies
 from repro.core.dp_search import SearchConfig, search
 from repro.core.h1f1b import h1f1b_counts
 from repro.core.layering import build_layers
 from repro.core.opgraph import build_op_sequence
 from repro.core.pipesim import simulate
+from repro.core.planner import HAPTPlanner, PlannerConfig
 from repro.core.profiler import ZeroRedundantProfiler
+from repro.runtime.replay import sync_priced_step
 
 ARCH = "gpt-30b"
 DIMS = (2, 8, 2, 8)
+
+# (c): both sub-clusters are *mixed* — one throttled node in each pool
+INTRA_ARCH = "gpt-15b"
+INTRA_DIMS = (2, 4, 2, 4)
+INTRA_NODE_EFFS = {"A100": (1.0, 0.8), "V100": (1.0, 0.6)}
+INTRA_GRAN = 48
+INTRA_B = 64
 
 
 def run():
@@ -77,6 +90,46 @@ def run():
     rows.append({"label": "fig11b/joint_vs_blind", "step_time_s": 0.0,
                  "derived": f"blind is {rb['blind_step'] / joint['t']:.2f}x"
                             " slower (paper: 1.4x-3.3x)"})
+
+    # (c) inter-op-only vs. joint inter+intra search (mixed-efficiency fleet)
+    def fn_c():
+        cl = hetero_cluster(*INTRA_DIMS)
+        for name, effs in INTRA_NODE_EFFS.items():
+            cl = set_node_efficiencies(cl, name, effs)
+        arch = get_config(INTRA_ARCH)
+        ops = build_op_sequence(arch, seq_len=SEQ_LEN)
+        layers = build_layers(ops, INTRA_GRAN)
+        pcfg = PlannerConfig(granularity=INTRA_GRAN, n_microbatches=INTRA_B,
+                             min_submesh_devices=2)
+        pcfg.search.n_workers = 6
+        planner = HAPTPlanner(cl, pcfg)
+        s_inter = planner.plan(arch, seq_len=SEQ_LEN,
+                               global_batch=GLOBAL_BATCH, layers=layers)
+        s_joint = planner.plan(arch, seq_len=SEQ_LEN,
+                               global_batch=GLOBAL_BATCH, layers=layers,
+                               intra_op=True)
+        t_inter = sync_priced_step(s_inter, cl, layers).makespan
+        t_joint = sync_priced_step(s_joint, cl, layers).makespan
+        tokens = s_joint.tokens_per_step()
+        return {"inter_step": t_inter, "joint_step": t_joint,
+                "inter_tok_s": tokens / t_inter,
+                "joint_tok_s": tokens / t_joint,
+                "n_uneven_stages": sum(
+                    1 for s in s_joint.stages
+                    if s.intra_op is not None and s.intra_op.is_uneven)}
+
+    rc = cached("fig11c_intra", fn_c)
+    rows.append({"label": "fig11c/inter_only", "step_time_s": rc["inter_step"],
+                 "derived": f"tok/s={rc['inter_tok_s']:.0f}"})
+    rows.append({"label": "fig11c/joint_inter_intra",
+                 "step_time_s": rc["joint_step"],
+                 "derived": f"tok/s={rc['joint_tok_s']:.0f};"
+                            f"uneven_stages={rc['n_uneven_stages']}"})
+    effs = " ".join(f"{n}={'/'.join(f'{e:g}' for e in v)}"
+                    for n, v in INTRA_NODE_EFFS.items())
+    rows.append({"label": "fig11c/joint_vs_inter_only", "step_time_s": 0.0,
+                 "derived": f"joint {rc['inter_step'] / rc['joint_step']:.2f}x"
+                            f" faster on mixed nodes ({effs})"})
     return rows
 
 

@@ -13,7 +13,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
 from repro.core import HAPTPlanner, PlannerConfig
-from repro.core.cluster import heterogeneous_tpu_cluster, paper_eval_cluster
+from repro.core.cluster import (
+    heterogeneous_tpu_cluster, paper_case_study_cluster, paper_eval_cluster,
+    set_node_efficiencies,
+)
 
 
 def plan(cluster, arch="gpt-15b", granularity=64, B=64, min_sub=2):
@@ -55,3 +58,18 @@ show("same fleet, v4 pod degraded to 70% (replan)", s2)
 moved = [(a.layer_end - a.layer_start, b.layer_end - b.layer_start)
          for a, b in zip(s.stages, s2.stages)]
 print(f"  -> layers per stage before/after degradation: {moved}")
+
+# 4. joint inter+intra-op search on a MIXED sub-cluster: one A100 node runs
+#    at 60% (thermal throttling).  intra_op=True lets the DP pick uneven,
+#    efficiency-proportional data shards instead of waiting on the slow node
+mixed = set_node_efficiencies(paper_case_study_cluster(), "meshA100",
+                              (1.0, 0.6))
+pcfg = PlannerConfig(granularity=16, n_microbatches=16)
+planner = HAPTPlanner(mixed, pcfg)
+sj = planner.plan(get_config("gpt-2b"), seq_len=1024, global_batch=16,
+                  intra_op=True)
+show("mixed A100 nodes (1.0/0.6), joint inter+intra search", sj)
+for i, st in enumerate(sj.stages):
+    if st.intra_op is not None and st.intra_op.is_uneven:
+        print(f"  -> stage{i} shards the microbatch unevenly: "
+              f"{[round(r, 3) for r in st.intra_op.shard_ratios]}")

@@ -2,19 +2,20 @@ from repro.core.cluster import (
     DeviceProfile, HeteroCluster, SubCluster,
     add_nodes, cluster_fingerprint, heterogeneous_tpu_cluster,
     homogeneous_cluster, paper_case_study_cluster, paper_eval_cluster,
-    remove_nodes, set_efficiency, subcluster_index, tpu_multipod_cluster,
-    with_cross_bw,
+    remove_nodes, set_efficiency, set_node_efficiencies, subcluster_index,
+    tpu_multipod_cluster, with_cross_bw,
 )
 from repro.core.h1f1b import (
     classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts, h1f1b_deltas,
 )
 from repro.core.planner import HAPTPlanner, PlannerConfig
 from repro.core.pipesim import ascii_timeline, eta_load_balance, simulate
-from repro.core.strategy import ParallelStrategy, StageAssignment
+from repro.core.strategy import IntraOpPlan, ParallelStrategy, StageAssignment
 
 __all__ = [
     "DeviceProfile", "HeteroCluster", "SubCluster", "HAPTPlanner",
-    "PlannerConfig", "ParallelStrategy", "StageAssignment",
+    "PlannerConfig", "ParallelStrategy", "StageAssignment", "IntraOpPlan",
+    "set_node_efficiencies",
     "simulate", "ascii_timeline", "eta_load_balance",
     "h1f1b_counts", "h1f1b_deltas", "classic_1f1b_counts",
     "eager_1f1b_counts", "paper_case_study_cluster", "paper_eval_cluster",

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 GBPS = 1e9 / 8          # 1 Gbps in bytes/s
 GB = 1024 ** 3
@@ -39,17 +39,48 @@ TPU_V4 = DeviceProfile("TPUv4", 275e12, 32 * GB, 1228e9, base_mfu=0.55)
 
 @dataclass(frozen=True)
 class SubCluster:
-    """One homogeneous DeviceMesh(N, M): N nodes x M devices."""
+    """One DeviceMesh(N, M): N nodes x M devices sharing one DeviceProfile.
+
+    ``node_efficiencies`` (optional, len == ``n_nodes``) makes the sub-cluster
+    *mixed*: entry ``i`` is a per-node multiplier on ``device.efficiency``
+    (1.0 = as-specced; 0.7 = a node running at 70% of its siblings).  The
+    joint planner exploits the mix with uneven intra-op shard ratios; the
+    inter-op-only planner is bottlenecked by the slowest node (``min``).
+    All bandwidths are bytes/s per direction.
+    """
     name: str
     n_nodes: int
     devices_per_node: int
     device: DeviceProfile
     intra_node_bw: float          # NVLink / intra-host ICI (bytes/s, per dir)
     inter_node_bw: float          # RDMA / pod fabric (bytes/s)
+    node_efficiencies: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        ne = self.node_efficiencies
+        if ne is not None:
+            if len(ne) != self.n_nodes:
+                raise ValueError(
+                    f"{self.name}: node_efficiencies has {len(ne)} entries "
+                    f"for {self.n_nodes} nodes")
+            if any(e <= 0 for e in ne):
+                raise ValueError("node efficiencies must be positive")
 
     @property
     def n_devices(self) -> int:
         return self.n_nodes * self.devices_per_node
+
+    def node_scales(self, n_nodes: Optional[int] = None) -> Tuple[float, ...]:
+        """Per-node efficiency multipliers for a submesh of ``n_nodes`` nodes
+        (all nodes when None).  Homogeneous -> all 1.0.  A partial submesh is
+        priced on the *slowest* nodes: the scheduler cannot promise the fast
+        ones, so plans must be robust to worst-case placement — recovering a
+        mixed fleet's capacity is the uneven intra-op sharding's job, not an
+        optimistic placement assumption's."""
+        n = self.n_nodes if n_nodes is None else n_nodes
+        if self.node_efficiencies is None:
+            return (1.0,) * n
+        return tuple(sorted(self.node_efficiencies)[:n])
 
     @property
     def peak_flops(self) -> float:
@@ -183,16 +214,23 @@ def remove_nodes(cluster: HeteroCluster, name: str, n: int = 1) -> HeteroCluster
             f"{name} has {sub.n_nodes} nodes, cannot remove {n}")
     if n == sub.n_nodes:
         return _replace_subcluster(cluster, name, None)
+    ne = sub.node_efficiencies
     return _replace_subcluster(
-        cluster, name, dataclasses.replace(sub, n_nodes=sub.n_nodes - n))
+        cluster, name, dataclasses.replace(
+            sub, n_nodes=sub.n_nodes - n,
+            node_efficiencies=None if ne is None else ne[:sub.n_nodes - n]))
 
 
 def add_nodes(cluster: HeteroCluster, name: str, n: int = 1) -> HeteroCluster:
-    """Node (re)join: ``name`` gains ``n`` nodes of its existing profile."""
+    """Node (re)join: ``name`` gains ``n`` nodes of its existing profile
+    (joining nodes start at nominal per-node efficiency 1.0)."""
     idx = subcluster_index(cluster, name)
     sub = cluster.subclusters[idx]
+    ne = sub.node_efficiencies
     return _replace_subcluster(
-        cluster, name, dataclasses.replace(sub, n_nodes=sub.n_nodes + n))
+        cluster, name, dataclasses.replace(
+            sub, n_nodes=sub.n_nodes + n,
+            node_efficiencies=None if ne is None else ne + (1.0,) * n))
 
 
 def with_cross_bw(cluster: HeteroCluster, cross_bw: float) -> HeteroCluster:
@@ -214,16 +252,31 @@ def set_efficiency(cluster: HeteroCluster, name: str,
         cluster, name, dataclasses.replace(sub, device=dev))
 
 
+def set_node_efficiencies(cluster: HeteroCluster, name: str,
+                          efficiencies: Optional[Sequence[float]]
+                          ) -> HeteroCluster:
+    """Per-node efficiency multipliers for one sub-cluster (length must equal
+    its node count; None restores homogeneity).  This is how a *mixed*
+    sub-cluster — some nodes throttled, some nominal — enters the planner."""
+    idx = subcluster_index(cluster, name)
+    sub = cluster.subclusters[idx]
+    ne = None if efficiencies is None else tuple(float(e) for e in efficiencies)
+    return _replace_subcluster(
+        cluster, name, dataclasses.replace(sub, node_efficiencies=ne))
+
+
 def cluster_fingerprint(cluster: HeteroCluster) -> str:
     """Stable identity of everything the planner's cost model reads — used to
     key plan caches (two clusters with equal fingerprints plan identically)."""
     parts = []
     for s in cluster.subclusters:
         d = s.device
+        ne = "" if s.node_efficiencies is None else \
+            ":" + ",".join(f"{e:.6g}" for e in s.node_efficiencies)
         parts.append(f"{s.name}:{s.n_nodes}x{s.devices_per_node}"
                      f":{d.name}:{d.peak_flops:.6g}:{d.mem_bytes:.6g}"
                      f":{d.base_mfu:.6g}:{d.efficiency:.6g}"
-                     f":{s.intra_node_bw:.6g}:{s.inter_node_bw:.6g}")
+                     f":{s.intra_node_bw:.6g}:{s.inter_node_bw:.6g}{ne}")
     parts.append(f"cross:{cluster.cross_bw:.6g}:{cluster.cross_latency:.6g}")
     return "|".join(parts)
 

@@ -2,11 +2,26 @@
 on-hardware profiler; structure documented in DESIGN.md §2).
 
 For a candidate stage (contiguous layer range) on a submesh (n nodes x m
-devices) of one homogeneous sub-cluster, a small intra-op planner tries the
-canonical (tp, dp) factorizations (TP confined to a node, Megatron-style
-all-reduces; DP across the rest) and returns the cheapest feasible
-:class:`StageCost`.  On real hardware, ``measure_fn`` replaces the analytic
-estimate per candidate without touching the surrounding planner.
+devices) of one sub-cluster, :func:`intra_op_candidates` enumerates the
+canonical intra-operator factorizations — TP confined to a node with
+Megatron-style all-reduces, DP across the rest — and prices each one as a
+:class:`StageCost` carrying its :class:`~repro.core.strategy.IntraOpPlan`:
+
+- *tensor axis* (tp > 1): per-microbatch ring all-reduce of the row-parallel
+  outputs over the sub-cluster's intra-node link, forward and backward;
+- *data axis* (dp > 1): per-step gradient all-reduce over the dp link,
+  amortized per microbatch when ``amortize_microbatches`` is set;
+- *uneven shard ratios*: in a **mixed** sub-cluster
+  (``SubCluster.node_efficiencies``) the data-parallel shards are sized
+  proportionally to per-node efficiency (HAP-style), so every node finishes
+  together; even sharding is instead bottlenecked by the slowest node.
+
+:func:`stage_cost` keeps the legacy single-result contract (cheapest
+candidate, even shards) for the inter-op-only path.  On real hardware,
+``measure_fn`` replaces the analytic estimate per candidate without touching
+the surrounding planner.
+
+Units: seconds, bytes, bytes/s, FLOP/s.
 """
 from __future__ import annotations
 
@@ -16,6 +31,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.cluster import HeteroCluster, SubCluster
 from repro.core.layering import Layer
+from repro.core.strategy import IntraOpPlan
 
 
 @dataclass(frozen=True)
@@ -31,13 +47,14 @@ class Submesh:
 
 @dataclass(frozen=True)
 class StageCost:
-    t_f: float            # forward per-microbatch (s)
-    t_b: float            # backward per-microbatch (s)
+    t_f: float            # forward per-microbatch (s), intra-op comm included
+    t_b: float            # backward per-microbatch (s), intra-op comm included
     mem_p: float          # per-device param+optimizer bytes
     mem_a: float          # per-device activation bytes per in-flight microbatch
     tp: int
     dp: int
     dp_sync: float        # per-step gradient sync (amortized over microbatches)
+    intra: Optional[IntraOpPlan] = None
 
     @property
     def t(self) -> float:
@@ -64,52 +81,104 @@ def _mfu(sub: SubCluster, tp: int, dp: int, cfgm: CostModelConfig) -> float:
     return eff
 
 
-def stage_cost(layers: Sequence[Layer], sub: SubCluster, mesh: Submesh,
-               mb_tokens: int, cfgm: CostModelConfig = CostModelConfig(),
-               measure_fn: Optional[Callable] = None) -> StageCost:
-    """Cheapest feasible intra-op strategy for this stage-mesh pair."""
-    if measure_fn is not None:
-        return measure_fn(layers, sub, mesh, mb_tokens)
+def _shard_ratios(scales: Sequence[float], per_node: int,
+                  uneven: bool) -> Tuple[float, ...]:
+    """Per-dp-shard microbatch fractions: each node contributes ``per_node``
+    shards at its efficiency scale.  Uneven -> proportional to scale (sums
+    to 1); even -> uniform."""
+    shard_scales = [s for s in scales for _ in range(per_node)]
+    dp = len(shard_scales)
+    if not uneven or dp == 0:
+        return (1.0 / max(dp, 1),) * max(dp, 1)
+    total = sum(shard_scales)
+    return tuple(s / total for s in shard_scales)
 
+
+def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
+                        mesh: Submesh, mb_tokens: int,
+                        cfgm: CostModelConfig = CostModelConfig(), *,
+                        uneven: bool = True,
+                        amortize_microbatches: int = 0,
+                        max_degree: int = 0) -> List[StageCost]:
+    """All candidate intra-op shardings of this stage on this submesh, one
+    per tensor-parallel width tp (powers of two dividing ``mesh.m``, capped
+    by ``max_degree`` when > 0).  Each result carries its IntraOpPlan; the
+    joint DP chooses among them per (stage-slice, t_max) instead of greedily
+    taking the cheapest."""
     flops = sum(l.flops_per_token for l in layers) * mb_tokens
     params = sum(l.param_bytes for l in layers)
     ar_bytes = sum(l.ar_bytes_per_token for l in layers) * mb_tokens
     act_bytes = sum(l.act_out_bytes_per_token for l in layers) * mb_tokens
     n, m = mesh.n, mesh.m
     dev = sub.device
+    scales = sub.node_scales(n)
 
-    best: Optional[StageCost] = None
+    out: List[StageCost] = []
     tp = 1
     while tp <= m:
-        dp = n * (m // tp)
-        if m % tp == 0:
-            eff = _mfu(sub, tp, dp, cfgm)
+        if m % tp == 0 and not (max_degree and tp > max_degree):
+            per_node = m // tp
+            dp = n * per_node
+            ratios = _shard_ratios(scales, per_node, uneven)
+            # uneven, efficiency-proportional shards let every node finish
+            # together (throughput = mean node scale); even shards wait for
+            # the slowest node (throughput = min node scale)
+            scale = (sum(scales) / len(scales)) if uneven else min(scales)
+            eff = _mfu(sub, tp, dp, cfgm) * scale
             t_comp_f = flops / (mesh.n_devices * dev.peak_flops * eff)
             # Megatron TP: all-reduce row-parallel outputs over NVLink/ICI.
             # ring all-reduce moves 2(tp-1)/tp of payload; fwd once, bwd once.
+            # The stage's critical path is the *largest* data shard's group,
+            # whose AR payload is max(ratios)*ar_bytes (= ar_bytes/dp even).
             if tp > 1:
-                t_ar = (ar_bytes / dp) * 2 * (tp - 1) / tp / sub.intra_node_bw
+                ar_shard = ar_bytes * max(ratios)
+                t_ar = ar_shard * 2 * (tp - 1) / tp / sub.intra_node_bw
+                ar_payload = 2 * ar_shard * 2 * (tp - 1) / tp
             else:
                 t_ar = 0.0
-            t_f = t_comp_f + t_ar
-            t_b = cfgm.bwd_flops_mult * t_comp_f + t_ar
-            # memory
-            shard = tp * (dp if cfgm.zero1 else 1)
-            mem_p = params * (1.0 + cfgm.opt_mult) / min(shard, mesh.n_devices)
-            act_stored = act_bytes if cfgm.remat else 3.0 * act_bytes
-            mem_a = act_stored / mesh.n_devices
-            # per-step dp grad sync (overlappable; charged once per step)
+                ar_payload = 0.0
+            # per-step dp grad sync; amortized per microbatch when the joint
+            # search prices the data axis (B = amortize_microbatches)
             if dp > 1:
                 bw = sub.inter_node_bw if n > 1 else sub.intra_node_bw
                 dp_sync = params * 2 * (dp - 1) / dp / bw
             else:
                 dp_sync = 0.0
-            cand = StageCost(t_f, t_b, mem_p, mem_a, tp, dp, dp_sync)
-            if best is None or cand.t < best.t:
-                best = cand
+            sync_mb = dp_sync / amortize_microbatches \
+                if amortize_microbatches else 0.0
+            sync_payload = (params * 2 * (dp - 1) / dp / amortize_microbatches
+                            if amortize_microbatches and dp > 1 else 0.0)
+            t_f = t_comp_f + t_ar
+            t_b = cfgm.bwd_flops_mult * t_comp_f + t_ar + sync_mb
+            # memory: weights/optimizer shard evenly; the activation bound is
+            # set by the *largest* data shard (the fastest node's devices)
+            shard = tp * (dp if cfgm.zero1 else 1)
+            mem_p = params * (1.0 + cfgm.opt_mult) / min(shard, mesh.n_devices)
+            act_stored = act_bytes if cfgm.remat else 3.0 * act_bytes
+            mem_a = act_stored * max(ratios) / tp
+            plan = IntraOpPlan(
+                axis="tensor" if tp > 1 else "data", tp=tp, dp=dp,
+                shard_ratios=ratios, comm_bytes=ar_payload + sync_payload,
+                comm_time_f=t_ar, comm_time_b=t_ar + sync_mb,
+                sync_time=sync_mb)
+            out.append(StageCost(t_f, t_b, mem_p, mem_a, tp, dp, dp_sync,
+                                 intra=plan))
         tp *= 2
-    assert best is not None
-    return best
+    return out
+
+
+def stage_cost(layers: Sequence[Layer], sub: SubCluster, mesh: Submesh,
+               mb_tokens: int, cfgm: CostModelConfig = CostModelConfig(),
+               measure_fn: Optional[Callable] = None) -> StageCost:
+    """Cheapest feasible intra-op strategy for this stage-mesh pair — the
+    inter-op-only (greedy) contract: even shards, fastest ``t = t_f + t_b``.
+    The joint search uses :func:`intra_op_candidates` instead."""
+    if measure_fn is not None:
+        return measure_fn(layers, sub, mesh, mb_tokens)
+    cands = intra_op_candidates(layers, sub, mesh, mb_tokens, cfgm,
+                                uneven=False)
+    assert cands, "no intra-op factorization for mesh"
+    return min(cands, key=lambda c: c.t)
 
 
 def cut_comm_bytes(layers: Sequence[Layer], cut_after: int, mb_tokens: int) -> float:

@@ -16,6 +16,15 @@ exact formulation): the paper's Eqs. 14/15 allocate cluster A fully before
 cluster B along the pipeline; tracking the next stage's cluster in the state
 removes that restriction at 2x state cost and can only find better strategies.
 
+**Joint inter+intra search** (profiler ``intra_op=True``): each table row is
+a (submesh, tensor-parallel width) *variant*, so the same DP jointly chooses
+the stage slicing, the placement, and the intra-op sharding degree — a
+variant's intra-op collective time raises its ``t`` while its leaner
+activation footprint relaxes the Eq. 18 bound, and the uneven
+efficiency-proportional shard ratios of a mixed sub-cluster lower its
+compute time.  The chosen :class:`~repro.core.strategy.IntraOpPlan` rides on
+each ``StageAssignment``.
+
 The paper's three search optimizations are implemented:
   - *sparsity index*: per (mesh, k), the feasible j-window under t_max is
     located by binary search over the monotone stage-cost row (precomputed
@@ -54,6 +63,9 @@ class SearchConfig:
     n_workers: int = 0                # 0 -> serial
     tmax_round_digits: int = 4        # dedupe candidates to this many sig digits
     max_candidates: int = 512
+    intra_overlap: float = 0.0        # fraction of intra-op collective time
+                                      # hidden under compute in the final
+                                      # pipesim validation (0 = fully exposed)
 
 
 class _DPContext:
@@ -307,7 +319,8 @@ def search(cluster: HeteroCluster, tables: ProfileTables, mb_tokens: int,
         stages.append(StageAssignment(
             layer_start=k, layer_end=j, cluster_idx=mesh.cluster_idx,
             mesh_n=mesh.n, mesh_m=mesh.m, tp=sc.tp, dp=sc.dp,
-            t_f=sc.t_f, t_b=sc.t_b, mem_p=sc.mem_p, mem_a=sc.mem_a))
+            t_f=sc.t_f, t_b=sc.t_b, mem_p=sc.mem_p, mem_a=sc.mem_a,
+            intra_op=sc.intra))
         if si < len(picks) - 1:
             nxt_cluster = tables.meshes[picks[si + 1][0]].cluster_idx
             c_links.append(
@@ -315,8 +328,20 @@ def search(cluster: HeteroCluster, tables: ProfileTables, mb_tokens: int,
 
     t_per_stage = [s.t for s in stages]
     counts = h1f1b_counts(t_per_stage, c_links, B)
-    res = simulate([s.t_f for s in stages], [s.t_b for s in stages],
-                   c_links, B, counts)
+    if cfg.intra_overlap > 0 and all(s.intra_op is not None for s in stages):
+        # validate with the intra-op collectives threaded separately through
+        # the simulator so a fraction can overlap with compute (the DP itself
+        # prices them fully exposed — a conservative upper bound)
+        res = simulate(
+            [s.t_f - s.intra_op.comm_time_f for s in stages],
+            [s.t_b - s.intra_op.comm_time_b for s in stages],
+            c_links, B, counts,
+            intra_f=[s.intra_op.comm_time_f for s in stages],
+            intra_b=[s.intra_op.comm_time_b for s in stages],
+            intra_overlap=cfg.intra_overlap)
+    else:
+        res = simulate([s.t_f for s in stages], [s.t_b for s in stages],
+                       c_links, B, counts)
     eta = eta_load_balance(
         res.stage_compute,
         [s.n_devices * cluster.subclusters[s.cluster_idx].device.peak_flops

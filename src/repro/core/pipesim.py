@@ -31,6 +31,9 @@ class SimResult:
     comm_total: float                 # total link-busy time (all links)
     comm_exposed: float               # comm time that delayed a compute op
     warmup_counts: List[int]
+    stage_intra_comm: List[float] = field(default_factory=list)
+    # exposed intra-op collective time per stage over the whole step (the
+    # non-overlapped share of TP all-reduce / DP sync inside each F/B op)
 
     @property
     def overlap_ratio(self) -> float:
@@ -63,11 +66,29 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
              c_links: Sequence[float], n_microbatches: int,
              warmup_counts: Sequence[int], *,
              no_overlap: bool = False,
-             c_links_bwd: Optional[Sequence[float]] = None) -> SimResult:
-    """Simulate one training step (B microbatches through S stages)."""
+             c_links_bwd: Optional[Sequence[float]] = None,
+             intra_f: Optional[Sequence[float]] = None,
+             intra_b: Optional[Sequence[float]] = None,
+             intra_overlap: float = 0.0) -> SimResult:
+    """Simulate one training step (B microbatches through S stages).
+
+    ``intra_f``/``intra_b`` (optional, per stage, seconds): intra-operator
+    collective time (TP all-reduce, amortized DP sync) *not* already folded
+    into ``t_f``/``t_b``.  A fraction ``intra_overlap`` in [0, 1] hides under
+    compute; the exposed remainder stretches every F/B op of that stage and
+    is reported per stage in ``SimResult.stage_intra_comm``.
+    """
     S, B = len(t_f), n_microbatches
     assert len(c_links) == S - 1 and len(warmup_counts) == S
     cb = list(c_links_bwd) if c_links_bwd is not None else list(c_links)
+    assert 0.0 <= intra_overlap <= 1.0
+    exposed_frac = 1.0 - intra_overlap
+    in_f = [exposed_frac * x for x in intra_f] if intra_f is not None \
+        else [0.0] * S
+    in_b = [exposed_frac * x for x in intra_b] if intra_b is not None \
+        else [0.0] * S
+    t_f = [t + x for t, x in zip(t_f, in_f)]
+    t_b = [t + x for t, x in zip(t_b, in_b)]
 
     dur: Dict[Node, float] = {}
     deps: Dict[Node, List[Node]] = {}
@@ -173,9 +194,13 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
                 comm_exposed += min(exposed, max(comm_ends) - (max(other_ends, default=0.0)))
     comm_exposed = min(comm_exposed, comm_total)
 
+    # per-stage exposed intra-op collective time: every F and B op of stage i
+    # carries its stretched share once per microbatch
+    stage_intra = [B * (in_f[i] + in_b[i]) for i in range(S)]
+
     return SimResult(makespan, start, dur, stage_compute, stage_comm_blocking,
                      stage_idle, comm_total, comm_exposed,
-                     list(warmup_counts))
+                     list(warmup_counts), stage_intra)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 """Logical-axis sharding rules -> PartitionSpecs for parameters, optimizer
-states, activations and KV caches.
+states, activations and KV caches — and the lowering of a planner
+:class:`~repro.core.strategy.IntraOpPlan` to an executable mesh.
 
 Parameter specs are derived from leaf *names* in the model pytree (every
 model family uses the same naming vocabulary), with trailing-dims matching:
@@ -9,13 +10,23 @@ stacks, expert dims handled explicitly, pipeline-stage dims) are padded with
 
 Axes of the production mesh: ``data`` (DP + FSDP), ``model`` (TP/SP),
 ``pod`` (pipeline, multi-pod only).
+
+Intra-op lowering (:func:`mesh_from_intra_op`, :func:`batch_shard_sizes`):
+one pipeline stage's plan becomes a ``(data=dp, model=tp)`` mesh over the
+stage's devices, and the plan's shard ratios become integer per-shard batch
+sizes (largest-remainder apportionment — sizes always sum to the batch).
+Invariants: ``shard_ratios`` sum to 1 (validated here, units dimensionless);
+the degenerate ``degree == 1`` plan lowers to a 1x1 mesh, i.e. a no-op.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.strategy import IntraOpPlan
 
 FSDP = "data"
 TP = "model"
@@ -176,6 +187,77 @@ def fitted_shardings(mesh, spec_tree, struct_tree) -> Any:
     return jax.tree.map(
         lambda sp, st: NamedSharding(mesh, fit_spec(mesh, sp, st.shape)),
         spec_tree, struct_tree)
+
+
+# ---------------------------------------------------------------------------
+# IntraOpPlan lowering: planner output -> executable mesh + shard sizes
+# ---------------------------------------------------------------------------
+
+
+def validate_intra_op_plan(plan: IntraOpPlan) -> None:
+    """Check the planner's invariants before lowering: ratios are positive,
+    one per data-parallel shard, and sum to 1; degrees are positive."""
+    if plan.tp < 1 or plan.dp < 1:
+        raise ValueError(f"degrees must be >= 1, got tp={plan.tp} dp={plan.dp}")
+    if len(plan.shard_ratios) != plan.dp:
+        raise ValueError(
+            f"{len(plan.shard_ratios)} shard ratios for dp={plan.dp}")
+    if any(r <= 0 for r in plan.shard_ratios):
+        raise ValueError(f"non-positive shard ratio in {plan.shard_ratios}")
+    total = sum(plan.shard_ratios)
+    if abs(total - 1.0) > 1e-6:
+        raise ValueError(f"shard ratios sum to {total}, expected 1")
+
+
+def intra_op_mesh_axes(plan: IntraOpPlan) -> Tuple[Tuple[str, int], ...]:
+    """Logical mesh layout for one stage: ``(("data", dp), ("model", tp))``.
+    Pure (no jax devices needed) — :func:`mesh_from_intra_op` materializes
+    it."""
+    validate_intra_op_plan(plan)
+    return (("data", plan.dp), ("model", plan.tp))
+
+
+def mesh_from_intra_op(plan: IntraOpPlan, devices: Optional[Sequence] = None
+                       ) -> Mesh:
+    """Materialize a stage's ``IntraOpPlan`` as a jax ``Mesh`` with axes
+    ``("data", "model")`` of shape ``(dp, tp)``.  ``devices`` defaults to
+    ``jax.devices()`` and must supply at least ``plan.n_devices`` entries;
+    the degenerate degree=1 plan yields a 1x1 mesh (single-device no-op
+    through which every PartitionSpec replicates).
+
+    CONTRACT for uneven plans: ``plan.shard_ratios`` are ordered slowest
+    node first (ascending ``SubCluster.node_scales``), and data-shard ``i``
+    runs on ``devices[i*tp:(i+1)*tp]`` — so the caller must order
+    ``devices`` by ascending node efficiency or the uneven shards land on
+    the wrong nodes and execute *slower* than even sharding."""
+    axes = intra_op_mesh_axes(plan)
+    if devices is None:
+        devices = jax.devices()
+    need = plan.n_devices
+    if len(devices) < need:
+        raise ValueError(
+            f"plan needs {need} devices (tp={plan.tp} x dp={plan.dp}), "
+            f"got {len(devices)}")
+    grid = np.asarray(devices[:need], dtype=object).reshape(
+        [size for _, size in axes])
+    return Mesh(grid, tuple(name for name, _ in axes))
+
+
+def batch_shard_sizes(plan: IntraOpPlan, batch: int) -> List[int]:
+    """Integer per-dp-shard batch sizes from the plan's (possibly uneven)
+    ratios, by largest-remainder apportionment.  Always sums to ``batch``;
+    even ratios reproduce the usual ``batch // dp`` split.  ``batch`` is a
+    sample/microbatch count, not bytes."""
+    validate_intra_op_plan(plan)
+    if batch < 0:
+        raise ValueError("batch must be non-negative")
+    quotas = [r * batch for r in plan.shard_ratios]
+    sizes = [int(q) for q in quotas]
+    rema = sorted(range(plan.dp), key=lambda i: quotas[i] - sizes[i],
+                  reverse=True)
+    for i in rema[: batch - sum(sizes)]:
+        sizes[i] += 1
+    return sizes
 
 
 def cache_pspecs(cache_tree, rules: Dict[str, Optional[object]]) -> Any:

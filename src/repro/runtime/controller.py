@@ -49,6 +49,9 @@ from repro.runtime.telemetry import StepObservation, TelemetryCalibrator
 
 @dataclass
 class ControllerConfig:
+    """Controller knobs.  Units: steps are training-step counts, times are
+    seconds, ``drift_threshold``/``replan_slowdown`` are dimensionless
+    ratios."""
     total_steps: int = 10_000          # training horizon (amortization window)
     seq_len: int = 1024
     global_batch: int = 1024
@@ -63,6 +66,9 @@ class ControllerConfig:
 
 @dataclass
 class ReplanDecision:
+    """One controller reaction.  All times are seconds; ``step_time_*`` are
+    per-training-step, ``search_time_s``/``migration_s`` are one-off
+    downtime charged to the wall clock at the decision step."""
     step: int
     action: str                        # none | warmup_only | incremental | full
     reason: str
@@ -89,6 +95,18 @@ class ReplanDecision:
 
 
 class ElasticController:
+    """Event -> cheapest-sufficient-replan state machine (module docstring).
+
+    Invariants: ``self.cluster`` is always the *true* fleet and
+    ``self.plan_cluster`` the fleet the adopted ``self.strategy`` was priced
+    on (telemetry anchors to the latter); layering is built once and reused
+    across every replan; ``profile_cache`` keys fingerprint everything the
+    cost model reads — including the intra-op sharding degree, so a
+    ``planner_cfg`` with ``intra_op=True`` re-searches the *joint*
+    inter+intra space incrementally on cluster events (only the changed
+    sub-cluster's variants miss).  All step times are seconds.
+    """
+
     def __init__(self, cluster: HeteroCluster,
                  arch: Union[str, ArchConfig],
                  planner_cfg: Optional[PlannerConfig] = None,
@@ -202,6 +220,9 @@ class ElasticController:
 
     def handle(self, event: ClusterEvent, *,
                step: Optional[int] = None) -> ReplanDecision:
+        """Fold one fleet event: apply it to the true cluster, then walk the
+        decision ladder (retune / incremental re-search / full replan /
+        keep).  Returns the decision, also appended to ``self.decisions``."""
         step = event.step if step is None else step
         new_cluster = apply_event(self.cluster, event)
         return self._react(new_cluster, step, event.describe(),

@@ -1,0 +1,270 @@
+"""Joint inter+intra-operator search (two-level planning) and the
+IntraOpPlan -> mesh lowering in parallel/sharding.py."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import HAPTPlanner, IntraOpPlan, PlannerConfig
+from repro.core.cluster import paper_case_study_cluster, set_node_efficiencies
+from repro.core.costmodel import Submesh, intra_op_candidates, stage_cost
+from repro.core.layering import build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.profiler import ZeroRedundantProfiler
+from repro.core.strategy import ParallelStrategy
+from repro.parallel.sharding import (
+    batch_shard_sizes, intra_op_mesh_axes, mesh_from_intra_op,
+    validate_intra_op_plan,
+)
+from repro.runtime.replay import sync_priced_step
+
+ARCH = "gpt-2b"
+
+
+def mixed_cluster(slow=0.6):
+    return set_node_efficiencies(
+        paper_case_study_cluster(), "meshA100", (1.0, slow))
+
+
+def make_layers(granularity=16, seq_len=512):
+    ops = build_op_sequence(get_config(ARCH), seq_len=seq_len)
+    return build_layers(ops, granularity)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_uneven_shards_beat_even_on_mixed_nodes():
+    cluster = mixed_cluster(0.5)
+    sub = cluster.subclusters[0]
+    layers = make_layers(8)
+    mesh = Submesh(0, 2, 2)       # spans both nodes
+    even = {c.tp: c for c in intra_op_candidates(
+        layers[:4], sub, mesh, 1024, uneven=False)}
+    uneven = {c.tp: c for c in intra_op_candidates(
+        layers[:4], sub, mesh, 1024, uneven=True)}
+    for tp in even:
+        # even shards wait for the 0.5-efficiency node; uneven shards
+        # (proportional to node efficiency) finish together
+        assert uneven[tp].t < even[tp].t
+        r = uneven[tp].intra.shard_ratios
+        assert abs(sum(r) - 1.0) < 1e-9
+        assert max(r) > min(r)    # genuinely uneven
+        # ratios ordered with node_scales (slowest node first)
+        assert r[0] < r[-1]
+
+
+def test_homogeneous_uneven_is_even():
+    cluster = paper_case_study_cluster()
+    sub = cluster.subclusters[0]
+    layers = make_layers(8)
+    mesh = Submesh(0, 2, 2)
+    for cand in intra_op_candidates(layers[:4], sub, mesh, 1024, uneven=True):
+        r = cand.intra.shard_ratios
+        assert max(r) - min(r) < 1e-12
+        assert abs(sum(r) - 1.0) < 1e-9
+
+
+def test_stage_cost_is_cheapest_candidate():
+    cluster = paper_case_study_cluster()
+    sub = cluster.subclusters[0]
+    layers = make_layers(8)
+    mesh = Submesh(0, 1, 2)
+    greedy = stage_cost(layers[:4], sub, mesh, 1024)
+    cands = intra_op_candidates(layers[:4], sub, mesh, 1024, uneven=False)
+    assert greedy.t == min(c.t for c in cands)
+    assert greedy.intra is not None and greedy.intra.n_devices == mesh.n_devices
+
+
+# ---------------------------------------------------------------------------
+# profiler: variant rows + degree-keyed cache
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_joint_emits_variant_rows():
+    cluster = paper_case_study_cluster()
+    layers = make_layers(8)
+    inter = ZeroRedundantProfiler(cluster, layers, 1024).profile()
+    joint = ZeroRedundantProfiler(cluster, layers, 1024, intra_op=True,
+                                  amortize_microbatches=16).profile()
+    assert len(joint.meshes) >= len(inter.meshes)
+    assert joint.variant_tp is not None
+    assert all(tp is not None for tp in joint.variant_tp)
+    # every surviving row's stage costs carry the matching intra plan
+    for (mid, i, j), sc in joint.stage_costs.items():
+        assert sc.intra is not None
+        assert sc.intra.tp == joint.variant_tp[mid]
+        assert sc.intra.n_devices == joint.meshes[mid].n_devices
+
+
+def test_profiler_cache_keys_include_degree():
+    cluster = paper_case_study_cluster()
+    layers = make_layers(8)
+    cache = {}
+    ZeroRedundantProfiler(cluster, layers, 1024, cost_cache=cache,
+                          intra_op=True, amortize_microbatches=16).profile()
+    degrees = {k[-1] for k in cache}
+    assert len(degrees) > 1           # several tp widths cached separately
+    n_joint = len(cache)
+    # inter-only entries (degree None) do not collide with joint entries
+    ZeroRedundantProfiler(cluster, layers, 1024, cost_cache=cache).profile()
+    assert None in {k[-1] for k in cache}
+    assert len(cache) > n_joint
+    # re-profiling joint on a warm cache adds nothing
+    n_all = len(cache)
+    t = ZeroRedundantProfiler(cluster, layers, 1024, cost_cache=cache,
+                              intra_op=True, amortize_microbatches=16).profile()
+    assert len(cache) == n_all
+    assert t.stats.n_unique_profiled == 0
+
+
+def test_intra_op_max_degree_prunes():
+    cluster = paper_case_study_cluster()
+    layers = make_layers(8)
+    capped = ZeroRedundantProfiler(cluster, layers, 1024, intra_op=True,
+                                   intra_op_max_degree=1).profile()
+    assert all(tp == 1 for tp in capped.variant_tp)
+
+
+# ---------------------------------------------------------------------------
+# joint search end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_joint_beats_inter_only_on_mixed_cluster():
+    """The acceptance property: on a mixed-efficiency sub-cluster, the joint
+    search finds a strictly better plan than inter-op-only planning when both
+    are referee-priced identically (sync charged to both)."""
+    cluster = mixed_cluster(0.6)
+    layers = make_layers(16, seq_len=1024)
+    pcfg = PlannerConfig(granularity=16, n_microbatches=16)
+    planner = HAPTPlanner(cluster, pcfg)
+    arch = get_config(ARCH)
+    s_inter = planner.plan(arch, seq_len=1024, global_batch=16, layers=layers)
+    s_joint = planner.plan(arch, seq_len=1024, global_batch=16, layers=layers,
+                           intra_op=True)
+    t_inter = sync_priced_step(s_inter, cluster, layers).makespan
+    t_joint = sync_priced_step(s_joint, cluster, layers).makespan
+    assert t_joint < t_inter
+    assert s_joint.planner_meta["intra_op"] is True
+    assert any(s.intra_op is not None and s.intra_op.is_uneven
+               for s in s_joint.stages)
+
+
+def test_joint_no_worse_on_homogeneous_cluster():
+    cluster = paper_case_study_cluster()
+    layers = make_layers(16)
+    pcfg = PlannerConfig(granularity=16, n_microbatches=16)
+    planner = HAPTPlanner(cluster, pcfg)
+    arch = get_config(ARCH)
+    s_inter = planner.plan(arch, seq_len=512, global_batch=16, layers=layers)
+    s_joint = planner.plan(arch, seq_len=512, global_batch=16, layers=layers,
+                           intra_op=True)
+    t_inter = sync_priced_step(s_inter, cluster, layers).makespan
+    t_joint = sync_priced_step(s_joint, cluster, layers).makespan
+    assert t_joint <= t_inter * (1 + 1e-9)
+
+
+def test_joint_strategy_respects_search_invariants():
+    cluster = mixed_cluster()
+    layers = make_layers(16)
+    strat = HAPTPlanner(cluster, PlannerConfig(
+        granularity=16, n_microbatches=16)).plan(
+            get_config(ARCH), seq_len=512, global_batch=16, layers=layers,
+            intra_op=True)
+    pos = 0
+    for s in strat.stages:
+        assert s.layer_start == pos
+        pos = s.layer_end
+        assert s.t <= strat.t_max * (1 + 1e-9)
+        plan = s.intra_op
+        assert plan is not None
+        assert plan.tp * plan.dp == s.n_devices
+        assert len(plan.shard_ratios) == plan.dp
+        assert abs(sum(plan.shard_ratios) - 1.0) < 1e-9
+    assert pos == len(layers)
+    for ci, sub in enumerate(cluster.subclusters):
+        used = sum(s.n_devices for s in strat.stages if s.cluster_idx == ci)
+        assert used <= sub.n_devices
+
+
+def test_strategy_json_round_trip_with_intra_op():
+    cluster = mixed_cluster()
+    layers = make_layers(16)
+    strat = HAPTPlanner(cluster, PlannerConfig(
+        granularity=16, n_microbatches=16)).plan(
+            get_config(ARCH), seq_len=512, global_batch=16, layers=layers,
+            intra_op=True)
+    rt = ParallelStrategy.from_json(strat.to_json())
+    assert rt.to_json() == strat.to_json()
+    for a, b in zip(rt.stages, strat.stages):
+        assert a == b                      # frozen dataclasses, deep equality
+        assert isinstance(a.intra_op, IntraOpPlan)
+        assert isinstance(a.intra_op.shard_ratios, tuple)
+
+
+# ---------------------------------------------------------------------------
+# sharding lowering
+# ---------------------------------------------------------------------------
+
+
+def plan_of(tp=1, dp=1, ratios=None):
+    ratios = tuple(ratios) if ratios is not None else (1.0 / dp,) * dp
+    return IntraOpPlan(axis="tensor" if tp > 1 else "data", tp=tp, dp=dp,
+                       shard_ratios=ratios, comm_bytes=0.0,
+                       comm_time_f=0.0, comm_time_b=0.0)
+
+
+def test_validate_rejects_bad_ratios():
+    with pytest.raises(ValueError):
+        validate_intra_op_plan(plan_of(dp=2, ratios=(0.5, 0.6)))
+    with pytest.raises(ValueError):
+        validate_intra_op_plan(plan_of(dp=2, ratios=(1.0,)))
+    with pytest.raises(ValueError):
+        validate_intra_op_plan(plan_of(dp=2, ratios=(-0.5, 1.5)))
+
+
+def test_mesh_axes_shape():
+    assert intra_op_mesh_axes(plan_of(tp=4, dp=2, ratios=(0.4, 0.6))) == \
+        (("data", 2), ("model", 4))
+
+
+def test_degenerate_degree_one_is_noop():
+    plan = plan_of()
+    assert plan.degree == 1 and plan.n_devices == 1
+    mesh = mesh_from_intra_op(plan)          # single CPU device suffices
+    assert dict(zip(mesh.axis_names, mesh.devices.shape)) == \
+        {"data": 1, "model": 1}
+    assert batch_shard_sizes(plan, 32) == [32]
+
+
+def test_mesh_requires_enough_devices():
+    with pytest.raises(ValueError):
+        mesh_from_intra_op(plan_of(tp=2, dp=4, ratios=(0.25,) * 4))
+
+
+def test_batch_shard_sizes_sum_and_apportion():
+    p = plan_of(dp=4, ratios=(0.1, 0.2, 0.3, 0.4))
+    for batch in (1, 7, 16, 33, 1024):
+        sizes = batch_shard_sizes(p, batch)
+        assert sum(sizes) == batch
+        assert all(s >= 0 for s in sizes)
+        # monotone with the ratios (largest ratio never gets fewer samples)
+        assert sorted(sizes) == sizes
+    even = plan_of(dp=4)
+    assert batch_shard_sizes(even, 32) == [8, 8, 8, 8]
+
+
+def test_search_ratios_lower_to_exact_batch():
+    """End-to-end: every searched stage's ratios apportion a real microbatch
+    exactly (uneven shards sum to the batch, nothing lost or invented)."""
+    cluster = mixed_cluster()
+    layers = make_layers(16)
+    strat = HAPTPlanner(cluster, PlannerConfig(
+        granularity=16, n_microbatches=16)).plan(
+            get_config(ARCH), seq_len=512, global_batch=16, layers=layers,
+            intra_op=True)
+    for s in strat.stages:
+        sizes = batch_shard_sizes(s.intra_op, 64)
+        assert sum(sizes) == 64
+        assert len(sizes) == s.intra_op.dp
