@@ -10,11 +10,11 @@ from typing import Callable, Dict, List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import get_config                                  # noqa: E402
+from repro import api                                                 # noqa: E402
 from repro.core.cluster import (                                      # noqa: E402
     A100_40G, GBPS, HeteroCluster, SubCluster, V100_32G,
 )
-from repro.core.planner import HAPTPlanner, PlannerConfig             # noqa: E402
+from repro.core.planner import PlannerConfig                          # noqa: E402
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench_cache")
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -65,21 +65,21 @@ def cached(name: str, fn: Callable[[], Dict]) -> Dict:
 
 def plan_hapt(cluster: HeteroCluster, arch: str, granularity: int = 96,
               n_microbatches: int = N_MICROBATCHES,
-              n_workers: int = 6, min_submesh: int = 2):
+              n_workers: int = 6, min_submesh: int = 2, intra_op: bool = False):
     pcfg = PlannerConfig(granularity=granularity,
                          n_microbatches=n_microbatches,
-                         min_submesh_devices=min_submesh)
+                         min_submesh_devices=min_submesh, intra_op=intra_op)
     pcfg.search.n_workers = n_workers
     # the paper's setting: every device participates (idle-devices-allowed is
     # this repo's extension; measured separately in EXPERIMENTS.md)
     pcfg.search.require_all_devices = True
+    cfg = api.HarpConfig(seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+                         planner=pcfg)
     try:
-        return HAPTPlanner(cluster, pcfg).plan(
-            get_config(arch), seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH)
+        return api.plan(arch, cluster, cfg).strategy
     except (RuntimeError, AssertionError):
         pcfg.search.require_all_devices = False
-        return HAPTPlanner(cluster, pcfg).plan(
-            get_config(arch), seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH)
+        return api.plan(arch, cluster, cfg).strategy
 
 
 def strategy_row(label: str, strat) -> Dict:

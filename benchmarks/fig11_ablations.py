@@ -12,6 +12,7 @@ from benchmarks.common import (
     GLOBAL_BATCH, N_MICROBATCHES, SEQ_LEN, cached, emit_csv, hetero_cluster,
     plan_hapt,
 )
+from repro import api
 from repro.configs import get_config
 from repro.core.cluster import set_node_efficiencies
 from repro.core.dp_search import SearchConfig, search
@@ -19,7 +20,7 @@ from repro.core.h1f1b import h1f1b_counts
 from repro.core.layering import build_layers
 from repro.core.opgraph import build_op_sequence
 from repro.core.pipesim import simulate
-from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.core.planner import PlannerConfig
 from repro.core.profiler import ZeroRedundantProfiler
 from repro.runtime.replay import sync_priced_step
 
@@ -102,12 +103,14 @@ def run():
         pcfg = PlannerConfig(granularity=INTRA_GRAN, n_microbatches=INTRA_B,
                              min_submesh_devices=2)
         pcfg.search.n_workers = 6
-        planner = HAPTPlanner(cl, pcfg)
-        s_inter = planner.plan(arch, seq_len=SEQ_LEN,
-                               global_batch=GLOBAL_BATCH, layers=layers)
-        s_joint = planner.plan(arch, seq_len=SEQ_LEN,
-                               global_batch=GLOBAL_BATCH, layers=layers,
-                               intra_op=True)
+        hc = api.HarpConfig(seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+                            planner=pcfg)
+        s_inter = api.plan(arch, cl, hc).strategy
+        import dataclasses
+        hc_joint = api.HarpConfig(
+            seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+            planner=dataclasses.replace(pcfg, intra_op=True))
+        s_joint = api.plan(arch, cl, hc_joint).strategy
         t_inter = sync_priced_step(s_inter, cl, layers).makespan
         t_joint = sync_priced_step(s_joint, cl, layers).makespan
         tokens = s_joint.tokens_per_step()

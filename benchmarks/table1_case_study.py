@@ -8,11 +8,11 @@ schedule (Fig. 3d)."""
 from __future__ import annotations
 
 from benchmarks.common import cached, emit_csv, strategy_row
-from repro.configs import get_config
+from repro import api
 from repro.core import paper_case_study_cluster
 from repro.core.h1f1b import classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts
 from repro.core.pipesim import ascii_timeline, simulate
-from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.core.planner import PlannerConfig
 
 ARCH = "gpt-2b"   # the 6-GPU case-study cluster bounds the model scale
 B = 128
@@ -25,8 +25,8 @@ def _plan(granularity: int):
     pcfg = PlannerConfig(granularity=granularity, n_microbatches=B,
                          min_submesh_devices=2, max_submesh_devices=2)
     pcfg.search.n_workers = 4
-    return HAPTPlanner(cluster, pcfg).plan(
-        get_config(ARCH), seq_len=1024, global_batch=B)
+    cfg = api.HarpConfig(seq_len=1024, global_batch=B, planner=pcfg)
+    return api.plan(ARCH, cluster, cfg).strategy
 
 
 def run():

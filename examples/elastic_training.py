@@ -1,13 +1,17 @@
-"""Elastic runtime tour: the planner closed into an event-driven loop.
+"""Elastic runtime tour, driven through the `repro.api` facade.
 
-Part 1 replays a scripted disruption (node failure -> cross-link congestion
--> recovery) through the ElasticController and prints the throughput
+Part 1 compiles a plan once (`api.compile`), attaches the ElasticController
+(`Executable.attach_elastic`), and replays a scripted disruption (node
+failure -> cross-link congestion -> recovery), printing the throughput
 timeline with every replan decision — warm-up-only retunes vs. incremental
 re-searches (warm profiler tables) vs. full replans.
 
-Part 2 wires the controller's telemetry hooks into the real Trainer loop
-(toy model, synthetic clock): a simulated straggler period triggers
-``on_straggler`` -> EWMA recalibration -> an amortization-gated replan.
+Part 2 replays the same executable under a seeded random fleet.
+
+Part 3 wires the controller's telemetry hooks into the real Trainer loop via
+`Executable.fit` (toy step function, synthetic clock): a simulated straggler
+period triggers ``on_straggler`` -> EWMA recalibration -> an
+amortization-gated replan.
 
   PYTHONPATH=src python examples/elastic_training.py
 """
@@ -16,37 +20,34 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import paper_case_study_cluster                        # noqa: E402
-from repro.core.planner import PlannerConfig                           # noqa: E402
-from repro.runtime import (                                            # noqa: E402
-    ControllerConfig, ElasticController, paper_trace, random_trace,
-    run_replay,
-)
+from repro import api                                                  # noqa: E402
+from repro.core import PlannerConfig, paper_case_study_cluster         # noqa: E402
+from repro.train.trainer import TrainerConfig                          # noqa: E402
 
 N_STEPS = 120
 
 
-def make_controller():
+def compile_executable():
     cluster = paper_case_study_cluster()      # 2x2 A100 + 1x2 V100, 5 Gbps
-    pcfg = PlannerConfig(granularity=16, n_microbatches=16,
-                         min_submesh_devices=2)
-    ccfg = ControllerConfig(total_steps=N_STEPS, seq_len=512, global_batch=64)
-    return cluster, ElasticController(cluster, "gpt-2b",
-                                      planner_cfg=pcfg, cfg=ccfg)
+    cfg = api.HarpConfig(
+        seq_len=512, global_batch=64,
+        planner=PlannerConfig(granularity=16, n_microbatches=16,
+                              min_submesh_devices=2),
+        trainer=TrainerConfig(total_steps=N_STEPS, ckpt_every=1000,
+                              log_every=1000,
+                              ckpt_dir="/tmp/elastic_example_ckpt"))
+    return cluster, api.compile("gpt-2b", cluster, cfg)
 
 
 # --- part 1: scripted trace replay -----------------------------------------
 
-cluster, ctrl = make_controller()
-ctrl.bootstrap()
-trace = paper_trace(cluster, fail_step=30, bw_step=55, recover_step=85,
-                    degraded_gbps=2.0)
+cluster, exe = compile_executable()
 print(f"cluster: {cluster.describe()}")
-print(f"trace:   {trace.describe()}\n")
 
-res = run_replay(trace, N_STEPS, controller=ctrl)
+res = exe.replay("paper", N_STEPS, fail_step=30, bw_step=55,
+                 recover_step=85, degraded_gbps=2.0)
 print("replan decisions:")
-for d in ctrl.decisions:
+for d in exe.controller.decisions:
     print(f"  {d.describe()}")
 
 print("\nthroughput timeline (tokens/s, 10-step buckets):")
@@ -57,35 +58,34 @@ for s0 in range(0, N_STEPS, 10):
 print(f"\noverall: {res.throughput():,.0f} tok/s, "
       f"{res.stalled_steps} stalled steps")
 
-# --- part 2: the same controller under a seeded random fleet ---------------
+# --- part 2: the same compiled plan under a seeded random fleet -------------
 
-cluster, ctrl2 = make_controller()
-ctrl2.bootstrap()
-rnd = random_trace(cluster, N_STEPS, seed=7, p_failure=0.01, p_bw_shift=0.02)
-print(f"\nseeded trace (seed=7): {rnd.describe() or '(quiet fleet)'}")
-res2 = run_replay(rnd, N_STEPS, controller=ctrl2)
-print(f"elastic under random dynamics: {res2.throughput():,.0f} tok/s, "
-      f"{len([d for d in ctrl2.decisions if d.action != 'none'])} responses")
+cluster, exe2 = compile_executable()
+res2 = exe2.replay("random", N_STEPS, seed=7, p_failure=0.01, p_bw_shift=0.02)
+print(f"\nelastic under random dynamics (seed=7): "
+      f"{res2.throughput():,.0f} tok/s, "
+      f"{len([d for d in exe2.controller.decisions if d.action != 'none'])} "
+      f"responses")
 
 # --- part 3: Trainer wiring (telemetry -> controller) ----------------------
 # A toy jax train loop with a synthetic clock: steps 20-39 run 1.8x slow
 # (thermal straggler), which trips the Trainer's EWMA watch; the controller
 # hook recalibrates efficiency and decides whether replanning amortizes.
 
-import jax                                                             # noqa: E402
 import jax.numpy as jnp                                                # noqa: E402
 
 from repro.data.pipeline import DataConfig                             # noqa: E402
-from repro.train.trainer import Trainer, TrainerConfig                 # noqa: E402
 
-cluster, ctrl3 = make_controller()
-ctrl3.bootstrap()
+cluster, exe3 = compile_executable()
+exe3.config.trainer.total_steps = 60     # part 3 runs a shorter horizon —
+ctrl3 = exe3.attach_elastic()            # set BEFORE attaching so the
+                                         # amortization window matches
 
 def train_step(w, batch):
     loss = jnp.mean((w - 0.1) ** 2)
     return w - 0.01 * (w - 0.1), {"loss": loss}
 
-NOMINAL = ctrl3.strategy.est_step_time    # the fleet runs exactly as planned
+NOMINAL = exe3.strategy.est_step_time     # the fleet runs exactly as planned
 _t = [0.0]
 _step = [0]
 
@@ -96,22 +96,15 @@ def synthetic_clock():
     _t[0] += NOMINAL * slow
     return _t[0]
 
-class StepCounter:
-    def __call__(self, step, dt):
-        _step[0] = step
-        return ctrl3.on_step_time(step, dt)
+def on_step_time(step, dt):
+    _step[0] = step
+    return ctrl3.on_step_time(step, dt)
 
-trainer = Trainer(
-    TrainerConfig(total_steps=60, ckpt_every=1000, log_every=30,
-                  ckpt_dir="/tmp/elastic_example_ckpt"),
-    DataConfig(vocab_size=64, seq_len=8, global_batch=4),
-    train_step, {"w": jnp.zeros(4)},
-    log_fn=lambda m: None,
-    clock=synthetic_clock,
-    on_step_time=StepCounter(),
-    **{"on_straggler": ctrl3.on_straggler})
+exe3.fit(train_step=train_step, state={"w": jnp.zeros(4)},
+         data_cfg=DataConfig(vocab_size=64, seq_len=8, global_batch=4),
+         log_fn=lambda m: None, clock=synthetic_clock,
+         on_step_time=on_step_time, start_step=0)
 
-trainer.run(start_step=0)
 print("\ntrainer-driven telemetry decisions:")
 for d in ctrl3.decisions[1:]:
     print(f"  {d.describe()}")

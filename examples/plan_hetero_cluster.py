@@ -11,20 +11,21 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import get_config
-from repro.core import HAPTPlanner, PlannerConfig
+from repro import api
+from repro.core import PlannerConfig
 from repro.core.cluster import (
     heterogeneous_tpu_cluster, paper_case_study_cluster, paper_eval_cluster,
     set_node_efficiencies,
 )
 
 
-def plan(cluster, arch="gpt-15b", granularity=64, B=64, min_sub=2):
+def plan(cluster, arch="gpt-15b", granularity=64, B=64, min_sub=2,
+         intra_op=False):
     pcfg = PlannerConfig(granularity=granularity, n_microbatches=B,
-                         min_submesh_devices=min_sub)
+                         min_submesh_devices=min_sub, intra_op=intra_op)
     pcfg.search.n_workers = 4
-    return HAPTPlanner(cluster, pcfg).plan(
-        get_config(arch), seq_len=1024, global_batch=B)
+    cfg = api.HarpConfig(seq_len=1024, global_batch=B, planner=pcfg)
+    return api.plan(arch, cluster, cfg).strategy
 
 
 def show(tag, strat):
@@ -64,10 +65,8 @@ print(f"  -> layers per stage before/after degradation: {moved}")
 #    efficiency-proportional data shards instead of waiting on the slow node
 mixed = set_node_efficiencies(paper_case_study_cluster(), "meshA100",
                               (1.0, 0.6))
-pcfg = PlannerConfig(granularity=16, n_microbatches=16)
-planner = HAPTPlanner(mixed, pcfg)
-sj = planner.plan(get_config("gpt-2b"), seq_len=1024, global_batch=16,
-                  intra_op=True)
+sj = plan(mixed, arch="gpt-2b", granularity=16, B=16, min_sub=1,
+          intra_op=True)
 show("mixed A100 nodes (1.0/0.6), joint inter+intra search", sj)
 for i, st in enumerate(sj.stages):
     if st.intra_op is not None and st.intra_op.is_uneven:

@@ -1,44 +1,46 @@
-"""Quickstart: plan a heterogeneous training strategy with HAPT and inspect
-the schedule — runs in ~10 s on a laptop CPU.
+"""Quickstart: compile a heterogeneous training strategy through the
+`repro.api` facade and inspect every staged artifact — runs in ~10 s on a
+laptop CPU.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Equivalent CLI:  python -m repro plan --arch gpt-2b --cluster paper_case_study
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import get_config
-from repro.core import (
-    HAPTPlanner, PlannerConfig, ascii_timeline, paper_case_study_cluster,
-    simulate,
-)
+from repro import api
+from repro.core import ascii_timeline, paper_case_study_cluster
+from repro.core.planner import PlannerConfig
 
 # 1. describe the cluster: 2x2 A100 + 1x2 V100, 5 Gbps cross-link (the
 #    paper's §2.2.2 case study; swap in tpu_multipod_cluster() for pods)
 cluster = paper_case_study_cluster(cross_gbps=5.0)
 print("cluster:", cluster.describe())
 
-# 2. pick a model and plan
-arch = get_config("gpt-2b")
-planner = HAPTPlanner(cluster, PlannerConfig(granularity=64,
-                                             n_microbatches=32))
-strategy = planner.plan(arch, seq_len=1024, global_batch=64)
-print("\n=== HAPT strategy ===")
-print(strategy.describe())
+# 2. one facade call: plan (HAPT search) -> lower (meshes + schedule) ->
+#    Executable.  HarpConfig unifies the planner/trainer/data knobs.
+cfg = api.HarpConfig(
+    seq_len=1024, global_batch=64,
+    planner=PlannerConfig(granularity=64, n_microbatches=32))
+exe = api.compile("gpt-2b", cluster, cfg)
+print("\n=== compiled strategy ===")
+print(exe.describe())
 
-# 3. inspect the H-1F1B schedule in the pipeline simulator
-res = simulate([s.t_f for s in strategy.stages],
-               [s.t_b for s in strategy.stages],
-               strategy.c_links, strategy.n_microbatches,
-               strategy.warmup_counts)
+# 3. referee-priced discrete-event simulation of one training step
+res = exe.simulate()
 print(f"\nsimulated step: {res.makespan * 1e3:.1f} ms, "
       f"comm overlap {res.overlap_ratio * 100:.0f}%")
 print("\ntimeline (f=forward, B=backward):")
-print(ascii_timeline(res, width=96))
+print(ascii_timeline(exe.simulate(priced=False), width=96))
 
-# 4. strategies serialize for the launcher
-path = "/tmp/hapt_strategy.json"
+# 4. every staged artifact JSON round-trips — plan here, execute elsewhere
+path = "/tmp/hapt_plan.json"
 with open(path, "w") as f:
-    f.write(strategy.to_json())
-print(f"\nstrategy written to {path}")
+    f.write(exe.plan.to_json())
+reloaded = api.compile(plan_artifact=api.Plan.from_json(open(path).read()))
+assert reloaded.plan.to_json() == exe.plan.to_json()   # bit-identical
+print(f"\nplan written to {path} (reload + re-lower verified);")
+print("continue with:  python -m repro simulate --plan", path)

@@ -13,14 +13,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-
+from repro import api
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
 from repro.train.optimizer import OptimizerConfig
-from repro.train.step import make_train_step
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.trainer import TrainerConfig
 
 
 def main() -> None:
@@ -48,22 +45,20 @@ def main() -> None:
             n_heads=8, n_kv_heads=1 if cfg.n_kv_heads == 1 else 4,
             d_ff=4 * args.width, vocab_size=8192)
 
-    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=20,
-                              total_steps=args.steps)
-    train_step, model, opt_init = make_train_step(cfg, opt_cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    n = sum(x.size for x in jax.tree.leaves(params))
+    n = cfg.param_count()
     print(f"[train_lm] {cfg.arch_id}: {n / 1e6:.1f}M params, "
           f"batch {args.batch}x{args.seq}, {args.steps} steps")
 
-    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                          global_batch=args.batch, kind="markov")
-    trainer = Trainer(
-        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=max(50, args.steps // 4), log_every=10),
-        data_cfg, jax.jit(train_step),
-        {"params": params, "opt_state": opt_init(params)})
-    out = trainer.run()
+    harp_cfg = api.HarpConfig(
+        seq_len=args.seq, global_batch=args.batch,
+        trainer=TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                              ckpt_every=max(50, args.steps // 4),
+                              log_every=10),
+        data=DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch, kind="markov"))
+    out = api.fit(cfg, harp_cfg,
+                  optimizer=OptimizerConfig(lr=args.lr, warmup_steps=20,
+                                            total_steps=args.steps))
     h = out["history"]
     if h:
         print(f"[train_lm] loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}, "

@@ -1,0 +1,4 @@
+"""``python -m repro`` entry point (see repro/api/cli.py)."""
+from repro.api.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""``repro.api`` — the staged plan -> lower -> execute compile pipeline.
+
+One facade over the whole system (see docs/api.md for the walkthrough):
+
+    from repro import api
+    from repro.core import paper_case_study_cluster
+
+    exe = api.compile("gpt-2b", paper_case_study_cluster(),
+                      api.HarpConfig(global_batch=64))
+    print(exe.describe())
+    res = exe.simulate()              # referee-priced discrete-event step
+    exe.attach_elastic()              # elastic controller + telemetry hooks
+    exe.fit()                         # fault-tolerant training loop
+
+Every stage artifact (:class:`Plan`, :class:`LoweredPlan`) JSON round-trips
+bit-identically, so ``python -m repro plan`` on one machine feeds
+``python -m repro train`` on another.  Pluggable components (schedulers,
+cost models, event sources, canonical clusters) are selected by name through
+:mod:`repro.api.registry`.
+"""
+from repro.api.artifacts import (
+    LoweredPlan, Plan, StageLowering, cluster_from_dict, cluster_to_dict,
+    sim_summary,
+)
+from repro.api.config import HarpConfig
+from repro.api.facade import (
+    Executable, compile, fit, lower, plan, warn_deprecated,
+)
+from repro.api import registry
+
+__all__ = [
+    "HarpConfig", "Plan", "LoweredPlan", "StageLowering", "Executable",
+    "compile", "plan", "lower", "fit",
+    "cluster_to_dict", "cluster_from_dict", "sim_summary",
+    "registry", "warn_deprecated",
+]

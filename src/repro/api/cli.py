@@ -1,0 +1,268 @@
+"""``python -m repro`` — the command-line face of the compile pipeline.
+
+Subcommands round-trip the :class:`~repro.api.artifacts.Plan` JSON artifact:
+
+    python -m repro plan --arch gpt-2b --cluster paper_case_study \\
+        --global-batch 64 --microbatches 32 -o plan.json
+    python -m repro simulate --plan plan.json --timeline
+    python -m repro train --plan plan.json --smoke --steps 20
+    python -m repro replay --plan plan.json --trace paper --steps 120
+    python -m repro dryrun --arch minitron-8b --shape train_4k
+
+``plan`` on a planning box, ``simulate``/``train``/``replay`` anywhere —
+the artifact carries the cluster spec and config with it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+
+def _parse_kw(pairs: List[str]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for p in pairs:
+        if "=" not in p:
+            raise SystemExit(f"--cluster-kw expects key=value, got {p!r}")
+        k, v = p.split("=", 1)
+        try:
+            out[k] = json.loads(v)
+        except json.JSONDecodeError:
+            out[k] = v
+    return out
+
+
+def _load_cluster(args):
+    from repro.api import cluster_from_dict, registry
+    if args.cluster_file:
+        with open(args.cluster_file) as f:
+            return cluster_from_dict(json.load(f))
+    return registry.resolve("cluster", args.cluster)(
+        **_parse_kw(args.cluster_kw))
+
+
+def _load_plan(path: str):
+    from repro.api import Plan
+    with open(path) as f:
+        return Plan.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# Subcommands
+# ---------------------------------------------------------------------------
+
+
+def cmd_plan(args) -> int:
+    import dataclasses
+
+    from repro.api import HarpConfig, plan
+    from repro.core.planner import PlannerConfig
+
+    pcfg = PlannerConfig(
+        granularity=args.granularity, n_microbatches=args.microbatches,
+        min_submesh_devices=args.min_submesh,
+        max_submesh_devices=args.max_submesh, intra_op=args.intra_op)
+    if args.workers:
+        pcfg.search = dataclasses.replace(pcfg.search, n_workers=args.workers)
+    cfg = HarpConfig(seq_len=args.seq_len, global_batch=args.global_batch,
+                     scheduler=args.scheduler, planner=pcfg)
+    cluster = _load_cluster(args)
+    artifact = plan(args.arch, cluster, cfg, verbose=args.verbose)
+    with open(args.out, "w") as f:
+        f.write(artifact.to_json())
+    print(artifact.describe())
+    print(f"\nplan written to {args.out}")
+    return 0
+
+
+def cmd_simulate(args) -> int:
+    from repro.api import compile as api_compile
+    from repro.core.pipesim import ascii_timeline
+
+    exe = api_compile(plan_artifact=_load_plan(args.plan))
+    res = exe.simulate(priced=not args.raw, no_overlap=args.no_overlap)
+    tok = exe.strategy.tokens_per_step()
+    print(exe.lowered.describe())
+    print(f"\nsimulated step: {res.makespan * 1e3:.2f} ms "
+          f"({'referee-priced' if not args.raw else 'raw schedule'}), "
+          f"{tok / res.makespan:,.0f} tokens/s, "
+          f"comm overlap {res.overlap_ratio * 100:.0f}%")
+    if args.timeline:
+        print(ascii_timeline(res, width=96))
+    return 0
+
+
+def cmd_train(args) -> int:
+    from repro.api import HarpConfig, compile as api_compile, fit
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.train.trainer import TrainerConfig
+
+    hooks: Dict[str, Any] = {}
+    # CLI flags default to None so a Plan's own workload config wins unless
+    # explicitly overridden
+    seq, batch, steps = args.seq, args.batch, args.steps
+    if args.plan:
+        exe = api_compile(plan_artifact=_load_plan(args.plan))
+        arch_cfg = exe.arch
+        seq = seq if seq is not None else exe.config.seq_len
+        batch = batch if batch is not None else exe.config.global_batch
+        steps = steps if steps is not None \
+            else exe.config.trainer.total_steps
+        if args.smoke:
+            # the reduced stand-in arch runs nothing like the planned model;
+            # anchoring the controller's telemetry to the plan's predictions
+            # would produce bogus drift/replan decisions
+            print("[train] --smoke: elastic controller NOT attached "
+                  "(reduced arch is not the planned workload)")
+        elif seq == exe.config.seq_len and batch == exe.config.global_batch:
+            from repro.runtime.controller import ControllerConfig
+            # the amortization horizon must be the steps actually run, not
+            # the plan's default training horizon
+            ctrl = exe.attach_elastic(ControllerConfig(
+                total_steps=steps, seq_len=seq, global_batch=batch))
+            hooks = {"on_step_time": ctrl.on_step_time,
+                     "on_straggler": ctrl.on_straggler}
+        else:
+            print("[train] workload overridden vs. the plan: elastic "
+                  "controller NOT attached (telemetry would anchor to the "
+                  "wrong prediction)")
+    else:
+        if not args.arch:
+            raise SystemExit("train needs --plan or --arch")
+        arch_cfg = get_config(args.arch)
+    seq = 128 if seq is None else seq
+    batch = 8 if batch is None else batch
+    steps = 200 if steps is None else steps
+    if args.smoke:
+        arch_cfg = arch_cfg.reduced()
+    cfg = HarpConfig(
+        seq_len=seq, global_batch=batch,
+        trainer=TrainerConfig(total_steps=steps, ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every),
+        data=DataConfig(vocab_size=arch_cfg.vocab_size, seq_len=seq,
+                        global_batch=batch, seed=args.seed,
+                        kind=args.data_kind))
+    out = fit(arch_cfg, cfg, n_microbatches=args.microbatches,
+              seed=args.seed, **hooks)
+    hist = out["history"]
+    if hist:
+        print(f"[train] loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+              f"over {out['final_step']} steps")
+    return 0
+
+
+def cmd_replay(args) -> int:
+    from repro.api import compile as api_compile
+
+    exe = api_compile(plan_artifact=_load_plan(args.plan))
+    kw: Dict[str, Any] = {}
+    if args.trace == "random":
+        kw["seed"] = args.seed
+    res = exe.replay(args.trace, args.steps, elastic=not args.static, **kw)
+    if exe.controller is not None:
+        print("replan decisions:")
+        for d in exe.controller.decisions:
+            print(f"  {d.describe()}")
+    bucket = max(1, args.steps // 12)
+    print("\nthroughput timeline (tokens/s):")
+    for s0 in range(0, args.steps, bucket):
+        tput = res.throughput_between(s0, s0 + bucket)
+        print(f"  steps {s0:4d}-{s0 + bucket:4d}: {tput:12,.0f}")
+    print(f"\noverall: {res.throughput():,.0f} tokens/s, "
+          f"{res.stalled_steps} stalled steps")
+    return 0
+
+
+def cmd_dryrun(args, extra: List[str]) -> int:
+    # delegate to the launcher (it owns the XLA device-count env dance)
+    from repro.launch import dryrun
+    sys.argv = ["repro.launch.dryrun"] + extra
+    dryrun.main()
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="HARP compile pipeline: plan / simulate / train / replay")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="HAPT search -> Plan JSON artifact")
+    p.add_argument("--arch", required=True)
+    p.add_argument("--cluster", default="paper_case_study",
+                   help="registered cluster name (see repro.api.registry)")
+    p.add_argument("--cluster-kw", action="append", default=[],
+                   metavar="K=V", help="cluster factory kwarg, repeatable "
+                   "(e.g. --cluster-kw cross_gbps=10)")
+    p.add_argument("--cluster-file",
+                   help="cluster spec JSON (api.cluster_to_dict format)")
+    p.add_argument("--seq-len", type=int, default=1024)
+    p.add_argument("--global-batch", type=int, default=64)
+    p.add_argument("--granularity", type=int, default=64)
+    p.add_argument("--microbatches", type=int, default=32)
+    p.add_argument("--min-submesh", type=int, default=1)
+    p.add_argument("--max-submesh", type=int, default=0)
+    p.add_argument("--intra-op", action="store_true",
+                   help="joint inter+intra-operator search")
+    p.add_argument("--scheduler", default="h1f1b")
+    p.add_argument("--workers", type=int, default=0)
+    p.add_argument("-o", "--out", default="plan.json")
+    p.add_argument("--verbose", action="store_true")
+
+    p = sub.add_parser("simulate", help="simulate one step of a Plan")
+    p.add_argument("--plan", required=True)
+    p.add_argument("--raw", action="store_true",
+                   help="raw lowered schedule (default: referee-priced)")
+    p.add_argument("--no-overlap", action="store_true")
+    p.add_argument("--timeline", action="store_true")
+
+    p = sub.add_parser("train", help="training loop (plan-driven or ad hoc)")
+    p.add_argument("--plan", help="Plan JSON (wires the elastic controller)")
+    p.add_argument("--arch", help="arch id (when no --plan)")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced same-family config (CPU)")
+    p.add_argument("--steps", type=int, default=None,
+                   help="default: plan's total_steps, else 200")
+    p.add_argument("--batch", type=int, default=None,
+                   help="default: plan's global_batch, else 8")
+    p.add_argument("--seq", type=int, default=None,
+                   help="default: plan's seq_len, else 128")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--ckpt-dir", default="checkpoints")
+    p.add_argument("--ckpt-every", type=int, default=100)
+    p.add_argument("--data-kind", default="markov",
+                   choices=["markov", "zipf", "uniform"])
+    p.add_argument("--seed", type=int, default=0)
+
+    p = sub.add_parser("replay", help="fleet-dynamics replay of a Plan")
+    p.add_argument("--plan", required=True)
+    p.add_argument("--trace", default="paper",
+                   help="registered event source (paper / random / none)")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--static", action="store_true",
+                   help="keep the plan fixed (checkpoint-restart baseline)")
+
+    sub.add_parser("dryrun", add_help=False,
+                   help="forward to repro.launch.dryrun (own flags)")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "dryrun":
+        return cmd_dryrun(None, argv[1:])
+    args = build_parser().parse_args(argv)
+    return {"plan": cmd_plan, "simulate": cmd_simulate,
+            "train": cmd_train, "replay": cmd_replay}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,157 @@
+"""HarpConfig: the one config object the compile pipeline reads.
+
+Unifies the per-subsystem configs that callers previously wired by hand —
+``PlannerConfig`` (search), ``TrainerConfig`` (execution loop), ``DataConfig``
+(input pipeline, optional: derived from the arch when absent) and
+``ControllerConfig`` (elastic runtime, optional) — plus the workload shape
+(``seq_len``/``global_batch``, token/sample counts) and the *names* of
+pluggable components (``scheduler``/``cost_model``, resolved through
+:mod:`repro.api.registry`).
+
+``validate()`` is called by the facade before planning; ``to_json`` /
+``from_json`` round-trip everything except ``planner.measure_fn`` (a
+callable — plans built for on-hardware profiling cannot be shipped as JSON,
+so serializing one raises).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.core.costmodel import CostModelConfig
+from repro.core.dp_search import SearchConfig
+from repro.core.planner import PlannerConfig
+from repro.data.pipeline import DataConfig
+from repro.runtime.controller import ControllerConfig
+from repro.train.trainer import TrainerConfig
+
+from repro.api import registry
+
+
+@dataclass
+class HarpConfig:
+    """Everything ``api.compile`` reads.  Units: ``seq_len`` is tokens per
+    sample, ``global_batch`` is samples per step; all times priced downstream
+    are seconds."""
+    seq_len: int = 1024
+    global_batch: int = 1024
+    scheduler: str = "h1f1b"          # registry: warm-up-count policy
+    cost_model: str = "analytic"      # registry: CostModelConfig factory
+    # (intra-op collective overlap lives in planner.search.intra_overlap —
+    # the search's final pipesim validation reads it there)
+    planner: PlannerConfig = field(default_factory=PlannerConfig)
+    trainer: TrainerConfig = field(default_factory=TrainerConfig)
+    data: Optional[DataConfig] = None       # None -> derived from the arch
+    elastic: Optional[ControllerConfig] = None  # None -> derived on attach
+
+    def __post_init__(self):
+        # the named cost model materializes into the planner config unless
+        # the caller already customized it away from the default; unknown
+        # names are left for validate() to report (uniform ValueError path)
+        if self.cost_model != "analytic" \
+                and self.cost_model in registry.available("cost_model") \
+                and self.planner.cost == CostModelConfig():
+            self.planner = dataclasses.replace(
+                self.planner, cost=registry.resolve(
+                    "cost_model", self.cost_model)())
+        # ergonomics: a planner left at the DEFAULT microbatch count follows
+        # the workload (`HarpConfig(global_batch=64)` just works — B=64, one
+        # sample per microbatch); an explicitly-set count is the caller's
+        # contract and validate() enforces divisibility strictly
+        if self.planner.n_microbatches == PlannerConfig().n_microbatches \
+                and self.global_batch > 0 \
+                and self.global_batch % self.planner.n_microbatches != 0:
+            self.planner = dataclasses.replace(
+                self.planner, n_microbatches=self.global_batch)
+
+    # -- validation ----------------------------------------------------------
+
+    def validate(self) -> "HarpConfig":
+        """Raise ``ValueError`` on inconsistent knobs; returns self so the
+        facade can chain ``cfg.validate()``."""
+        errs = []
+        if self.seq_len <= 0:
+            errs.append(f"seq_len must be positive, got {self.seq_len}")
+        if self.global_batch <= 0:
+            errs.append(f"global_batch must be positive, "
+                        f"got {self.global_batch}")
+        p = self.planner
+        if not 0.0 <= p.search.intra_overlap <= 1.0:
+            errs.append(f"planner.search.intra_overlap must be in [0, 1], "
+                        f"got {p.search.intra_overlap}")
+        if self.global_batch % p.n_microbatches != 0:
+            errs.append(
+                f"global_batch ({self.global_batch}) must be a multiple of "
+                f"planner.n_microbatches ({p.n_microbatches}) — otherwise "
+                f"the per-microbatch sample apportionment drops samples")
+        if p.granularity <= 0:
+            errs.append(f"planner.granularity must be positive, "
+                        f"got {p.granularity}")
+        if p.n_microbatches <= 0:
+            errs.append(f"planner.n_microbatches must be positive, "
+                        f"got {p.n_microbatches}")
+        if p.rho <= 1.0:
+            errs.append(f"planner.rho must exceed 1 (imbalance-pruning "
+                        f"ratio), got {p.rho}")
+        if self.trainer.total_steps <= 0:
+            errs.append(f"trainer.total_steps must be positive, "
+                        f"got {self.trainer.total_steps}")
+        for kind, name in (("scheduler", self.scheduler),
+                           ("cost_model", self.cost_model)):
+            if name not in registry.available(kind):
+                errs.append(f"unknown {kind} {name!r}; available: "
+                            f"{registry.available(kind)}")
+        if self.data is not None and self.data.seq_len != self.seq_len:
+            errs.append(f"data.seq_len ({self.data.seq_len}) disagrees with "
+                        f"seq_len ({self.seq_len})")
+        e = self.elastic
+        if e is not None:
+            de = ControllerConfig()
+            # class-default workload fields count as "unset" (attach_elastic
+            # backfills them from this config); explicit disagreement is an
+            # error — the controller would replan a different workload
+            if e.seq_len not in (de.seq_len, self.seq_len):
+                errs.append(f"elastic.seq_len ({e.seq_len}) disagrees with "
+                            f"seq_len ({self.seq_len})")
+            if e.global_batch not in (de.global_batch, self.global_batch):
+                errs.append(f"elastic.global_batch ({e.global_batch}) "
+                            f"disagrees with global_batch "
+                            f"({self.global_batch})")
+        if errs:
+            raise ValueError("invalid HarpConfig: " + "; ".join(errs))
+        return self
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        if self.planner.measure_fn is not None:
+            raise ValueError(
+                "HarpConfig with planner.measure_fn (a callable) cannot be "
+                "serialized — on-hardware-profiled plans are machine-bound")
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "HarpConfig":
+        d = dict(d)
+        pd = dict(d.pop("planner"))
+        pd.pop("measure_fn", None)
+        planner = PlannerConfig(
+            cost=CostModelConfig(**pd.pop("cost")),
+            search=SearchConfig(**pd.pop("search")), **pd)
+        trainer = TrainerConfig(**d.pop("trainer"))
+        data = d.pop("data", None)
+        elastic = d.pop("elastic", None)
+        return HarpConfig(
+            planner=planner, trainer=trainer,
+            data=None if data is None else DataConfig(**data),
+            elastic=None if elastic is None else ControllerConfig(**elastic),
+            **d)
+
+    @staticmethod
+    def from_json(s: str) -> "HarpConfig":
+        return HarpConfig.from_dict(json.loads(s))

@@ -1,0 +1,391 @@
+"""The one public entry point: ``compile(arch, cluster, config) -> Executable``.
+
+Staged exactly like a compiler — every stage's artifact is inspectable and
+JSON-serializable, so planning and execution can run on different machines:
+
+    plan(arch, cluster, cfg)   -> Plan         (HAPT search + provenance)
+    lower(plan)                -> LoweredPlan  (meshes, apportionment,
+                                                schedule, collective plan)
+    compile(arch, cluster, cfg) -> Executable  (both stages + .fit() /
+                                                .simulate() / .describe() /
+                                                .attach_elastic())
+
+``fit`` is also exposed at module level for cluster-less local training (the
+execution half without a planner run); ``Executable.fit`` delegates to it and
+wires the elastic controller's telemetry hooks automatically.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core.cluster import HeteroCluster, cluster_fingerprint
+from repro.core.layering import Layer, build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.pipesim import SimResult, ascii_timeline, simulate
+from repro.core.planner import HAPTPlanner
+from repro.core.strategy import IntraOpPlan, ParallelStrategy
+from repro.data.pipeline import DataConfig
+from repro.parallel.sharding import batch_shard_sizes, intra_op_mesh_axes
+from repro.runtime.controller import (
+    ControllerConfig, ElasticController, ReplanDecision,
+)
+from repro.runtime.events import EventTrace
+from repro.runtime.replay import ReplayResult, run_replay, sync_priced_step
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer
+
+from repro.api import registry
+from repro.api.artifacts import (
+    LoweredPlan, Plan, StageLowering, cluster_to_dict, sim_summary,
+)
+from repro.api.config import HarpConfig
+
+_DEPRECATION_WARNED: set = set()
+
+
+def warn_deprecated(key: str, message: str) -> None:
+    """Warn-once deprecation shim used by the legacy call paths."""
+    if key in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def _resolve_arch(arch: Union[str, ArchConfig]) -> ArchConfig:
+    return get_config(arch) if isinstance(arch, str) else arch
+
+
+def _build_layers(arch: ArchConfig, cfg: HarpConfig) -> List[Layer]:
+    ops = build_op_sequence(arch, seq_len=cfg.seq_len)
+    return build_layers(ops, cfg.planner.granularity, z=cfg.planner.z_heavy)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: plan
+# ---------------------------------------------------------------------------
+
+
+def plan(arch: Union[str, ArchConfig], cluster: HeteroCluster,
+         config: Optional[HarpConfig] = None, *,
+         verbose: bool = False) -> Plan:
+    """Run the HAPT search and wrap the result with provenance.
+
+    The returned :class:`Plan` is self-contained: it embeds the serialized
+    cluster spec, the exact config, and the predicted step simulation under
+    the *named* scheduler, so ``lower()``/``compile(plan=...)`` reproduce the
+    same execution on any machine."""
+    cfg = (config if config is not None else HarpConfig()).validate()
+    arch_cfg = _resolve_arch(arch)
+    strategy = HAPTPlanner(cluster, cfg.planner).plan(
+        arch_cfg, seq_len=cfg.seq_len, global_batch=cfg.global_batch,
+        verbose=verbose)
+    sched = registry.resolve("scheduler", cfg.scheduler)
+    counts = sched([s.t for s in strategy.stages], strategy.c_links,
+                   strategy.n_microbatches)
+    res = simulate([s.t_f for s in strategy.stages],
+                   [s.t_b for s in strategy.stages],
+                   strategy.c_links, strategy.n_microbatches, counts)
+    return Plan(
+        arch=arch_cfg.arch_id, strategy=strategy, config=cfg,
+        cluster=cluster_to_dict(cluster),
+        cluster_fingerprint=cluster_fingerprint(cluster),
+        predicted=sim_summary(res, strategy.tokens_per_step()))
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: lower
+# ---------------------------------------------------------------------------
+
+
+def _stage_intra_plan(s) -> IntraOpPlan:
+    """The stage's intra-op plan, or the even degenerate one for strategies
+    from the inter-op-only search (tp/dp still factorize the submesh)."""
+    if s.intra_op is not None:
+        return s.intra_op
+    dp = max(1, s.dp)
+    return IntraOpPlan(axis="data" if dp >= max(1, s.tp) else "tensor",
+                       tp=max(1, s.tp), dp=dp,
+                       shard_ratios=(1.0 / dp,) * dp,
+                       comm_bytes=0.0, comm_time_f=0.0, comm_time_b=0.0)
+
+
+def lower(plan_artifact: Plan, *,
+          layers: Optional[Sequence[Layer]] = None) -> LoweredPlan:
+    """Lower a :class:`Plan` to executable form: per-stage logical meshes
+    (via ``parallel.sharding.intra_op_mesh_axes``), integer microbatch
+    apportionment, warm-up counts from the config's named scheduler, and the
+    collective plan (per-link activation bytes over the plan's layering)."""
+    cfg = plan_artifact.config
+    strategy = plan_artifact.strategy
+    cluster = plan_artifact.to_cluster()
+    arch_cfg = _resolve_arch(plan_artifact.arch)
+    if layers is None:
+        layers = _build_layers(arch_cfg, cfg)
+    B = strategy.n_microbatches
+    # exact by HarpConfig.validate() (global_batch % n_microbatches == 0)
+    mb_samples = cfg.global_batch // B
+
+    sched = registry.resolve("scheduler", cfg.scheduler)
+    counts = [int(c) for c in
+              sched([s.t for s in strategy.stages], strategy.c_links, B)]
+    res = simulate([s.t_f for s in strategy.stages],
+                   [s.t_b for s in strategy.stages],
+                   strategy.c_links, B, counts)
+
+    stages = []
+    for i, s in enumerate(strategy.stages):
+        io = _stage_intra_plan(s)
+        axes = [[name, size] for name, size in intra_op_mesh_axes(io)]
+        stages.append(StageLowering(
+            stage=i,
+            subcluster=cluster.subclusters[s.cluster_idx].name,
+            layer_start=s.layer_start, layer_end=s.layer_end,
+            mesh_axes=axes, n_devices=s.n_devices,
+            microbatch_shards=batch_shard_sizes(io, mb_samples),
+            intra_comm_bytes=io.comm_bytes,
+            intra_comm_time_s=io.comm_time))
+
+    link_bytes = [
+        layers[strategy.stages[i].layer_end - 1].act_out_bytes_per_token
+        * strategy.mb_tokens
+        for i in range(strategy.n_stages - 1)]
+
+    return LoweredPlan(
+        scheduler=cfg.scheduler, n_microbatches=B,
+        microbatch_samples=mb_samples, warmup_counts=counts,
+        c_links_s=[float(c) for c in strategy.c_links],
+        link_bytes=link_bytes, stages=stages,
+        est_step_time_s=res.makespan)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: Executable
+# ---------------------------------------------------------------------------
+
+
+class Executable:
+    """A compiled (plan, lowering) pair bound to a concrete cluster.
+
+    ``simulate()`` referee-prices the plan exactly like
+    ``runtime.replay.sync_priced_step`` (amortized DP gradient sync charged
+    identically to joint and inter-only plans), so numbers from the facade
+    are comparable across search modes; ``simulate(priced=False)`` is the
+    raw pipeline-DAG simulation of the lowered schedule."""
+
+    def __init__(self, plan_artifact: Plan, lowered: LoweredPlan,
+                 cluster: HeteroCluster, arch: ArchConfig,
+                 layers: Sequence[Layer]):
+        self.plan = plan_artifact
+        self.lowered = lowered
+        self.cluster = cluster
+        self.arch = arch
+        self.layers = list(layers)
+        self.controller: Optional[ElasticController] = None
+
+    @property
+    def strategy(self) -> ParallelStrategy:
+        return self.plan.strategy
+
+    @property
+    def config(self) -> HarpConfig:
+        return self.plan.config
+
+    # -- inspection ----------------------------------------------------------
+
+    def describe(self, *, timeline: bool = False) -> str:
+        lines = [self.plan.describe(), self.lowered.describe()]
+        if timeline:
+            lines.append(ascii_timeline(self.simulate(priced=False)))
+        return "\n".join(lines)
+
+    # -- simulation ----------------------------------------------------------
+
+    def simulate(self, *, priced: bool = True,
+                 no_overlap: bool = False) -> SimResult:
+        """One-step discrete-event simulation.  ``priced=True`` (default) is
+        the referee accounting (== ``sync_priced_step``); ``priced=False``
+        simulates the lowered schedule as-is."""
+        if priced:
+            return sync_priced_step(
+                self.strategy, self.cluster, self.layers,
+                no_overlap=no_overlap,
+                counts_fn=registry.resolve("scheduler",
+                                           self.config.scheduler))
+        strat = self.strategy
+        return simulate([s.t_f for s in strat.stages],
+                        [s.t_b for s in strat.stages],
+                        strat.c_links, strat.n_microbatches,
+                        self.lowered.warmup_counts, no_overlap=no_overlap)
+
+    def throughput(self, *, priced: bool = True) -> float:
+        res = self.simulate(priced=priced)
+        return self.strategy.tokens_per_step() / res.makespan
+
+    def stage_mesh(self, stage: int, devices=None):
+        """Materialize stage ``stage``'s logical mesh as a jax ``Mesh``
+        (see ``parallel.sharding.mesh_from_intra_op`` for the device-order
+        contract on uneven plans)."""
+        from repro.parallel.sharding import mesh_from_intra_op
+        return mesh_from_intra_op(
+            _stage_intra_plan(self.strategy.stages[stage]), devices)
+
+    # -- elastic runtime -----------------------------------------------------
+
+    def attach_elastic(self, controller_cfg: Optional[ControllerConfig] = None,
+                       telemetry=None) -> ElasticController:
+        """Wire an :class:`ElasticController` around this executable, seeded
+        with the compiled plan (no bootstrap re-search).  The controller's
+        trainer hooks are then wired automatically by :meth:`fit`.
+
+        Workload fields of a supplied ``ControllerConfig`` that are still at
+        their class defaults are backfilled from this executable's config
+        (so ``ControllerConfig(drift_threshold=0.1)`` tweaks one knob
+        without re-stating the workload); an explicitly different workload
+        raises — the controller would replan for the wrong shape."""
+        import dataclasses
+
+        cfg = self.config
+        ccfg = controller_cfg or cfg.elastic or ControllerConfig(
+            total_steps=cfg.trainer.total_steps, seq_len=cfg.seq_len,
+            global_batch=cfg.global_batch)
+        d = ControllerConfig()
+        fill = {}
+        for fld, want in (("seq_len", cfg.seq_len),
+                          ("global_batch", cfg.global_batch),
+                          ("total_steps", cfg.trainer.total_steps)):
+            have = getattr(ccfg, fld)
+            if have == getattr(d, fld) and have != want:
+                fill[fld] = want
+            elif fld != "total_steps" and have != want:
+                raise ValueError(
+                    f"attach_elastic: controller {fld}={have} disagrees "
+                    f"with the compiled plan's {fld}={want}")
+        if fill:
+            ccfg = dataclasses.replace(ccfg, **fill)
+        ctrl = ElasticController(self.cluster, self.arch,
+                                 planner_cfg=cfg.planner, cfg=ccfg,
+                                 telemetry=telemetry)
+        # seed with a copy — the controller retunes its strategy in place,
+        # which must not mutate the immutable Plan artifact
+        ctrl.strategy = ParallelStrategy.from_json(self.strategy.to_json())
+        ctrl.plan_cluster = self.cluster
+        ctrl.decisions.append(ReplanDecision(
+            step=0, action="none", reason="seeded from compiled plan",
+            step_time_after=ctrl.strategy.est_step_time))
+        self.controller = ctrl
+        return ctrl
+
+    def replay(self, trace: Union[str, EventTrace], n_steps: int, *,
+               elastic: bool = True, **trace_kw) -> ReplayResult:
+        """Replay a fleet-dynamics trace against this executable.  ``trace``
+        is an :class:`EventTrace` or a registered event-source name
+        (``"paper"``, ``"random"``, ...); elastic mode routes events through
+        the attached (or newly attached) controller, static mode keeps the
+        compiled plan and stalls through infeasible periods."""
+        if isinstance(trace, str):
+            trace = registry.resolve("event_source", trace)(
+                self.cluster, n_steps, **trace_kw)
+        if elastic:
+            ctrl = self.controller or self.attach_elastic()
+            return run_replay(trace, n_steps, controller=ctrl)
+        return run_replay(trace, n_steps, strategy=self.strategy,
+                          plan_cluster=self.cluster, layers=self.layers)
+
+    # -- training ------------------------------------------------------------
+
+    def fit(self, **kwargs) -> Dict[str, Any]:
+        """Train under this executable's config.  An attached elastic
+        controller's telemetry hooks are wired in unless the caller passes
+        explicit hooks."""
+        if self.controller is not None:
+            kwargs.setdefault("on_step_time", self.controller.on_step_time)
+            kwargs.setdefault("on_straggler", self.controller.on_straggler)
+        return fit(self.arch, self.config, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+def compile(arch: Union[str, ArchConfig, None] = None,
+            cluster: Optional[HeteroCluster] = None,
+            config: Optional[HarpConfig] = None, *,
+            plan_artifact: Optional[Plan] = None,
+            verbose: bool = False) -> Executable:
+    """Plan -> lower -> executable, in one call.
+
+    Either pass ``(arch, cluster[, config])`` to search from scratch, or
+    ``plan_artifact=Plan.from_json(...)`` to lower a previously-searched plan
+    (optionally overriding ``cluster`` with the live fleet; a fingerprint
+    mismatch warns — the plan was priced for a different fleet)."""
+    if plan_artifact is None:
+        if arch is None or cluster is None:
+            raise TypeError("compile() needs (arch, cluster) or plan_artifact")
+        plan_artifact = plan(arch, cluster, config, verbose=verbose)
+    if cluster is None:
+        cluster = plan_artifact.to_cluster()
+    elif cluster_fingerprint(cluster) != plan_artifact.cluster_fingerprint:
+        warnings.warn(
+            "compile(): cluster fingerprint differs from the plan's — the "
+            "strategy was priced for a different fleet; predicted times are "
+            "not transferable (attach_elastic() to replan on drift)",
+            stacklevel=2)
+    arch_cfg = _resolve_arch(plan_artifact.arch)
+    layers = _build_layers(arch_cfg, plan_artifact.config)
+    lowered = lower(plan_artifact, layers=layers)
+    return Executable(plan_artifact, lowered, cluster, arch_cfg, layers)
+
+
+def fit(arch: Union[str, ArchConfig],
+        config: Optional[HarpConfig] = None, *,
+        train_step: Optional[Callable] = None,
+        state: Optional[Dict[str, Any]] = None,
+        data_cfg: Optional[DataConfig] = None,
+        optimizer: Optional[OptimizerConfig] = None,
+        n_microbatches: int = 1,
+        on_step_time: Optional[Callable] = None,
+        on_straggler: Optional[Callable] = None,
+        log_fn: Callable = print,
+        clock: Optional[Callable[[], float]] = None,
+        start_step: Optional[int] = None,
+        seed: int = 0,
+        jit: bool = True) -> Dict[str, Any]:
+    """The execution half of the pipeline: config -> model -> optimizer ->
+    fault-tolerant :class:`~repro.train.trainer.Trainer` loop.
+
+    Pass ``train_step`` + ``state`` to run a custom step function (toy
+    models, synthetic clocks); otherwise the arch's model and an AdamW
+    optimizer are built.  ``config.data`` (or a ``DataConfig`` derived from
+    the arch) feeds the deterministic synthetic pipeline."""
+    import jax
+
+    cfg = config if config is not None else HarpConfig()
+    arch_cfg = _resolve_arch(arch)
+    if train_step is None:
+        opt_cfg = optimizer or OptimizerConfig(
+            warmup_steps=min(20, cfg.trainer.total_steps),
+            total_steps=cfg.trainer.total_steps)
+        step_fn, model, opt_init = make_train_step(
+            arch_cfg, opt_cfg, n_microbatches=n_microbatches)
+        params = model.init(jax.random.PRNGKey(seed))
+        state = {"params": params, "opt_state": opt_init(params)}
+        if jit:
+            step_fn = jax.jit(step_fn)
+    else:
+        if state is None:
+            raise TypeError("fit(train_step=...) also needs state=...")
+        step_fn = train_step
+    data = data_cfg or cfg.data or DataConfig(
+        vocab_size=arch_cfg.vocab_size, seq_len=cfg.seq_len,
+        global_batch=cfg.global_batch, seed=seed)
+    trainer = Trainer(cfg.trainer, data, step_fn, state,
+                      on_straggler=on_straggler, on_step_time=on_step_time,
+                      log_fn=log_fn,
+                      clock=clock if clock is not None else time.perf_counter)
+    return trainer.run(start_step)

@@ -1,0 +1,98 @@
+"""Named-component registry for the compile pipeline.
+
+Cost models, pipeline schedulers and event sources are selected *by name*
+in :class:`~repro.api.config.HarpConfig`, so a plan artifact can say
+``"scheduler": "h1f1b"`` instead of embedding a callable — and third-party
+code can plug in alternatives without touching the facade:
+
+    from repro.api import registry
+
+    @registry.scheduler("my_sched")
+    def my_counts(t_per_stage, c_links, n_microbatches):
+        return [1] * len(t_per_stage)
+
+Registered kinds and their contracts (all times seconds):
+
+- ``scheduler``: ``fn(t_per_stage, c_links, n_microbatches) -> List[int]``
+  (per-stage warm-up counts, the 1F1B family's only degree of freedom).
+- ``cost_model``: ``fn() -> CostModelConfig`` (factory, so each plan gets a
+  fresh value).
+- ``event_source``: ``fn(cluster, n_steps, **kw) -> EventTrace``.
+- ``cluster``: ``fn(**kw) -> HeteroCluster`` (the canonical fleets, for the
+  CLI and config files).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+from repro.core import cluster as _cluster_lib
+from repro.core.costmodel import CostModelConfig
+from repro.core.h1f1b import (
+    classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts,
+)
+from repro.runtime.events import EventTrace, paper_trace, random_trace
+
+KINDS = ("scheduler", "cost_model", "event_source", "cluster")
+
+_REGISTRY: Dict[str, Dict[str, Any]] = {k: {} for k in KINDS}
+
+
+def register(kind: str, name: str, obj: Any, *, overwrite: bool = False) -> Any:
+    """Register ``obj`` under (kind, name).  Returns ``obj`` so it can be
+    used as a decorator body.  Re-registration requires ``overwrite=True`` —
+    silent shadowing of a built-in would be a debugging trap."""
+    if kind not in _REGISTRY:
+        raise KeyError(f"unknown registry kind {kind!r}; kinds: {KINDS}")
+    if name in _REGISTRY[kind] and not overwrite:
+        raise ValueError(
+            f"{kind} {name!r} already registered (pass overwrite=True)")
+    _REGISTRY[kind][name] = obj
+    return obj
+
+
+def resolve(kind: str, name: str) -> Any:
+    if kind not in _REGISTRY:
+        raise KeyError(f"unknown registry kind {kind!r}; kinds: {KINDS}")
+    try:
+        return _REGISTRY[kind][name]
+    except KeyError:
+        raise KeyError(
+            f"unknown {kind} {name!r}; available: {available(kind)}") from None
+
+
+def available(kind: str) -> List[str]:
+    return sorted(_REGISTRY[kind])
+
+
+def scheduler(name: str) -> Callable:
+    """Decorator: ``@registry.scheduler("name")`` registers a warm-up-count
+    function."""
+    return lambda fn: register("scheduler", name, fn)
+
+
+def event_source(name: str) -> Callable:
+    return lambda fn: register("event_source", name, fn)
+
+
+# ---------------------------------------------------------------------------
+# Built-ins
+# ---------------------------------------------------------------------------
+
+register("scheduler", "h1f1b", h1f1b_counts)
+register("scheduler", "classic_1f1b",
+         lambda t, c, B: classic_1f1b_counts(len(t), B))
+register("scheduler", "eager_1f1b",
+         lambda t, c, B: eager_1f1b_counts(len(t), B))
+
+register("cost_model", "analytic", CostModelConfig)
+
+register("event_source", "paper",
+         lambda cluster, n_steps=0, **kw: paper_trace(cluster, **kw))
+register("event_source", "random", random_trace)
+register("event_source", "none", lambda cluster, n_steps=0, **kw: EventTrace([]))
+
+register("cluster", "paper_case_study", _cluster_lib.paper_case_study_cluster)
+register("cluster", "paper_eval", _cluster_lib.paper_eval_cluster)
+register("cluster", "homogeneous", _cluster_lib.homogeneous_cluster)
+register("cluster", "tpu_multipod", _cluster_lib.tpu_multipod_cluster)
+register("cluster", "heterogeneous_tpu", _cluster_lib.heterogeneous_tpu_cluster)

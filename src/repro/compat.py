@@ -1,0 +1,76 @@
+"""One home for every jax-version compatibility shim.
+
+The container pins jax 0.4.37; newer APIs the codebase targets are shimmed
+here and nowhere else (previously the same shims drifted apart between
+``models/common.py`` and ``kernels/compat.py``).  Import from this module;
+the old locations re-export for backward compatibility.
+
+Shims:
+
+- :func:`ambient_mesh` — ``jax.sharding.get_abstract_mesh`` vs. the 0.4.x
+  thread-resources physical mesh.
+- :func:`set_mesh` — ``jax.set_mesh`` vs. the classic ``with mesh:`` context.
+- :func:`shard_map` — first-class ``jax.shard_map`` (manual ``axis_names``)
+  vs. the experimental API (complement ``auto`` set, ``check_rep=False``).
+- :func:`pcast_varying` — ``jax.lax.pcast(..., to="varying")`` vs. identity.
+- :func:`compiler_params` — Pallas-TPU ``pltpu.CompilerParams`` vs. the old
+  ``pltpu.TPUCompilerParams`` name.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def ambient_mesh():
+    """Ambient mesh across jax versions: ``jax.sharding.get_abstract_mesh``
+    where available, else the thread-resources physical mesh set by a
+    ``with Mesh(...)`` context."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` across versions: the ambient-mesh setter where it
+    exists, else the classic ``with mesh:`` context manager (jax 0.4.x)."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
+def pcast_varying(x, axis_name):
+    """``jax.lax.pcast(..., to="varying")`` across versions: marks a
+    replicated value as device-varying for the new rep-checker; on 0.4.x
+    (where shard_map runs with check_rep=False) it is the identity."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is not None:
+        return pcast(x, (axis_name,), to="varying")
+    return x
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """``jax.shard_map`` across versions.  ``axis_names`` is the *manual*
+    axis set; on 0.4.x it maps to the experimental API's complement
+    ``auto`` set (check_rep off — required with auto axes there)."""
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   axis_names=axis_names)
+    from jax.experimental.shard_map import shard_map as _old
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                auto=auto, check_rep=False)
+
+
+def compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the ``TPUCompilerParams`` ->
+    ``CompilerParams`` rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -65,9 +65,10 @@ class HAPTPlanner:
     runtime relies on this to probe candidate fleets.
     """
 
-    def __init__(self, cluster: HeteroCluster, cfg: PlannerConfig = None):
+    def __init__(self, cluster: HeteroCluster,
+                 cfg: Optional[PlannerConfig] = None):
         self.cluster = cluster
-        self.cfg = cfg or PlannerConfig()
+        self.cfg = cfg if cfg is not None else PlannerConfig()
 
     def plan(self, arch: ArchConfig, *, seq_len: int = 1024,
              global_batch: int = 1024, verbose: bool = False,

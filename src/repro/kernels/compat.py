@@ -1,13 +1,6 @@
-"""Pallas-TPU API compatibility across jax versions.
-
-jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
-container's 0.4.x has only the old name.  Kernels call this helper instead of
-either class so they run on both."""
+"""Deprecated location: the Pallas-TPU compiler-params shim moved to
+``repro.compat`` (one home for every jax-version shim).  This module
+re-exports it so existing kernel call sites keep working."""
 from __future__ import annotations
 
-
-def compiler_params(**kwargs):
-    from jax.experimental.pallas import tpu as pltpu
-    cls = getattr(pltpu, "CompilerParams", None) \
-        or getattr(pltpu, "TPUCompilerParams")
-    return cls(**kwargs)
+from repro.compat import compiler_params  # noqa: F401  (re-export)

@@ -260,6 +260,7 @@ def _combine(base: Dict[str, Any], per_mb: Dict[str, Any], n_units: float
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              out_dir: str = "results/dryrun",
              skip_analysis: bool = False) -> Dict[str, Any]:
+    from repro import compat
     from repro.models import common as mcommon
     multi_pod = mesh_kind == "multi"
     cfg = get_config(arch)
@@ -270,7 +271,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     try:
         # --- pass 1: production (scanned) — the compile proof + memory ------
         fn, args, in_sh, mesh, donate = build_case(arch, shape_name, multi_pod)
-        with mcommon.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh,
                               donate_argnums=donate).lower(*args)
             rec["lower_s"] = round(time.time() - t0, 2)
@@ -337,11 +338,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
 
 def _cell_analysis(arch, shape_name, multi_pod, n_mb, global_batch):
+    from repro import compat
     from repro.models import common as mcommon
     fn, args, in_sh, mesh, donate = build_case(
         arch, shape_name, multi_pod, n_microbatches=n_mb,
         global_batch_override=global_batch)
-    with mcommon.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=in_sh,
                            donate_argnums=donate).lower(*args).compile()
     return _analyze(compiled)

@@ -1,30 +1,30 @@
-"""Training launcher.
+"""Training launcher (deprecated shim).
 
-  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \\
+This entry point predates the ``repro.api`` facade; it now delegates to the
+same code path as
+
+  PYTHONPATH=src python -m repro train --arch gemma-2b --smoke \\
       --steps 200 --batch 8 --seq 128
 
-``--smoke`` uses the reduced same-family config (CPU-runnable); otherwise the
-full config is built (real hardware).  The launcher wires: config -> model ->
-optimizer -> (optional HAPT plan for the cluster) -> jitted train step ->
-fault-tolerant Trainer loop (auto-resume, atomic checkpoints).
+and warns once.  ``--smoke`` uses the reduced same-family config
+(CPU-runnable); otherwise the full config is built (real hardware).
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
-import jax
-import jax.numpy as jnp
-
+from repro import api
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
 from repro.train.optimizer import OptimizerConfig
-from repro.train.step import make_train_step
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.trainer import TrainerConfig
 
 
 def main() -> None:
+    api.warn_deprecated(
+        "launch.train",
+        "repro.launch.train is deprecated: use `python -m repro train` "
+        "(the repro.api facade) instead")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
@@ -44,27 +44,20 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
-
-    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=20,
-                              total_steps=args.steps)
-    train_step, model, opt_init = make_train_step(
-        cfg, opt_cfg, n_microbatches=args.microbatches)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    opt_state = opt_init(params)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"[train] {cfg.arch_id}: {n_params/1e6:.1f}M params, "
+    print(f"[train] {cfg.arch_id}: {cfg.param_count() / 1e6:.1f}M params, "
           f"{args.steps} steps, batch {args.batch}x{args.seq}")
 
-    step_fn = jax.jit(train_step)
-    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                          global_batch=args.batch, seed=args.seed,
-                          kind=args.data_kind)
-    trainer = Trainer(
-        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=args.ckpt_every),
-        data_cfg, step_fn,
-        {"params": params, "opt_state": opt_state})
-    out = trainer.run()
+    harp_cfg = api.HarpConfig(
+        seq_len=args.seq, global_batch=args.batch,
+        trainer=TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every),
+        data=DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch, seed=args.seed,
+                        kind=args.data_kind))
+    out = api.fit(cfg, harp_cfg, n_microbatches=args.microbatches,
+                  seed=args.seed,
+                  optimizer=OptimizerConfig(lr=args.lr, warmup_steps=20,
+                                            total_steps=args.steps))
     hist = out["history"]
     if hist:
         print(f"[train] loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "

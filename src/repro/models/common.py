@@ -44,50 +44,11 @@ def activation_sharding(rules: Dict[str, Optional[object]]):
         _CTX.val = prev
 
 
-def _ambient_mesh():
-    """Ambient mesh across jax versions: ``jax.sharding.get_abstract_mesh``
-    where available, else the thread-resources physical mesh set by a
-    ``with Mesh(...)`` context."""
-    get = getattr(jax.sharding, "get_abstract_mesh", None)
-    if get is not None:
-        return get()
-    try:
-        from jax._src import mesh as _mesh_lib
-        m = _mesh_lib.thread_resources.env.physical_mesh
-        return None if m.empty else m
-    except Exception:
-        return None
-
-
-def set_mesh(mesh):
-    """``jax.set_mesh`` across versions: the ambient-mesh setter where it
-    exists, else the classic ``with mesh:`` context manager (jax 0.4.x)."""
-    setter = getattr(jax, "set_mesh", None)
-    return setter(mesh) if setter is not None else mesh
-
-
-def pcast_varying(x, axis_name):
-    """``jax.lax.pcast(..., to="varying")`` across versions: marks a
-    replicated value as device-varying for the new rep-checker; on 0.4.x
-    (where shard_map runs with check_rep=False) it is the identity."""
-    pcast = getattr(jax.lax, "pcast", None)
-    if pcast is not None:
-        return pcast(x, (axis_name,), to="varying")
-    return x
-
-
-def shard_map(f, mesh, in_specs, out_specs, axis_names):
-    """``jax.shard_map`` across versions.  ``axis_names`` is the *manual*
-    axis set; on 0.4.x it maps to the experimental API's complement
-    ``auto`` set (check_rep off — required with auto axes there)."""
-    new = getattr(jax, "shard_map", None)
-    if new is not None:
-        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   axis_names=axis_names)
-    from jax.experimental.shard_map import shard_map as _old
-    auto = frozenset(mesh.axis_names) - set(axis_names)
-    return _old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                auto=auto, check_rep=False)
+# jax-version shims live in repro.compat; re-exported here because model and
+# launch code historically imported them from this module
+from repro.compat import (  # noqa: F401  (re-export)
+    ambient_mesh as _ambient_mesh, pcast_varying, set_mesh, shard_map,
+)
 
 
 def shard_act(x: jnp.ndarray, names: Sequence[Optional[str]]) -> jnp.ndarray:

@@ -17,7 +17,7 @@ to recover — the standard non-elastic baseline).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cluster import HeteroCluster, cluster_fingerprint
 from repro.core.h1f1b import h1f1b_counts
@@ -86,7 +86,8 @@ def project_step(strategy: ParallelStrategy, plan_cluster: HeteroCluster,
 
 def sync_priced_step(strategy: ParallelStrategy, cluster: HeteroCluster,
                      layers: Sequence[Layer], *,
-                     no_overlap: bool = False) -> SimResult:
+                     no_overlap: bool = False,
+                     counts_fn: Optional[Callable] = None) -> SimResult:
     """Referee pricing for planner ablations: simulate one step with the
     per-step data-parallel gradient sync charged (amortized per microbatch)
     to every stage's backward time.
@@ -96,6 +97,10 @@ def sync_priced_step(strategy: ParallelStrategy, cluster: HeteroCluster,
     from the inter-op-only search get the recomputed charge added, so both
     search modes are compared under the SAME cost accounting (the analogue
     of Fig. 11b's plan-blind-evaluate-real methodology).
+
+    ``counts_fn(t_per_stage, c_links, B) -> warm-up counts`` selects the
+    schedule under referee pricing (default H-1F1B) — the api facade passes
+    its config's named scheduler here so priced numbers match the lowering.
     """
     B = strategy.n_microbatches
     t_b = []
@@ -111,8 +116,8 @@ def sync_priced_step(strategy: ParallelStrategy, cluster: HeteroCluster,
         already = s.intra_op.sync_time if s.intra_op is not None else 0.0
         t_b.append(s.t_b + max(0.0, sync_mb - already))
     t_f = [s.t_f for s in strategy.stages]
-    counts = h1f1b_counts([f + b for f, b in zip(t_f, t_b)],
-                          strategy.c_links, B)
+    counts = (counts_fn or h1f1b_counts)(
+        [f + b for f, b in zip(t_f, t_b)], strategy.c_links, B)
     return simulate(t_f, t_b, strategy.c_links, B, counts,
                     no_overlap=no_overlap)
 

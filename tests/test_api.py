@@ -1,0 +1,308 @@
+"""repro.api: staged plan -> lower -> execute pipeline.
+
+Covers the facade contract (ISSUE 3 acceptance): bit-identical Plan JSON
+round-trip, golden-file schema pinning (loud failure on accidental drift),
+simulate() parity with the pipesim/replay referees, registry pluggability,
+HarpConfig validation, and the CLI plan/simulate artifact round-trip.
+"""
+import json
+import os
+
+import pytest
+
+from repro import api
+from repro.core import paper_case_study_cluster
+from repro.core.cluster import cluster_fingerprint, set_node_efficiencies
+from repro.core.layering import build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.pipesim import simulate as pipesim_simulate
+from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.runtime.events import BandwidthShift
+from repro.runtime.replay import sync_priced_step
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "api_artifact_schema.json")
+
+
+def small_cfg(**kw):
+    return api.HarpConfig(
+        seq_len=512, global_batch=16,
+        planner=PlannerConfig(granularity=16, n_microbatches=16, **kw))
+
+
+@pytest.fixture(scope="module")
+def exe_case():
+    """Inter-op-only compile on the paper's §2.2.2 case-study cluster."""
+    return api.compile("gpt-2b", paper_case_study_cluster(), small_cfg())
+
+
+@pytest.fixture(scope="module")
+def exe_mixed():
+    """Joint inter+intra compile on the fig11-style mixed fleet (one A100
+    node throttled to 60%)."""
+    cluster = set_node_efficiencies(paper_case_study_cluster(), "meshA100",
+                                    (1.0, 0.6))
+    return api.compile("gpt-2b", cluster, small_cfg(intra_op=True))
+
+
+# ---------------------------------------------------------------------------
+# JSON round trips
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_round_trip_bit_identical(exe_case):
+    j = exe_case.plan.to_json()
+    assert api.Plan.from_json(j).to_json() == j
+
+
+def test_plan_json_round_trip_with_intra_op(exe_mixed):
+    j = exe_mixed.plan.to_json()
+    assert api.Plan.from_json(j).to_json() == j
+
+
+def test_lowered_json_round_trip(exe_mixed):
+    j = exe_mixed.lowered.to_json()
+    assert api.LoweredPlan.from_json(j).to_json() == j
+
+
+def test_cluster_dict_round_trip(exe_mixed):
+    cl = exe_mixed.cluster
+    rebuilt = api.cluster_from_dict(api.cluster_to_dict(cl))
+    assert cluster_fingerprint(rebuilt) == cluster_fingerprint(cl)
+    assert rebuilt == cl
+
+
+def test_config_json_round_trip():
+    cfg = small_cfg(intra_op=True)
+    assert api.HarpConfig.from_json(cfg.to_json()).to_json() == cfg.to_json()
+
+
+def test_config_with_measure_fn_refuses_serialization():
+    cfg = api.HarpConfig(planner=PlannerConfig(measure_fn=lambda *a: 0.0))
+    with pytest.raises(ValueError, match="measure_fn"):
+        cfg.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Golden schema (fails loudly on accidental artifact drift)
+# ---------------------------------------------------------------------------
+
+
+def _schema(obj):
+    """Key-tree + JSON-type skeleton of an artifact dict."""
+    if isinstance(obj, dict):
+        return {k: _schema(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, list):
+        return [_schema(obj[0])] if obj else []
+    if isinstance(obj, bool):
+        return "bool"
+    if isinstance(obj, int):
+        return "int"
+    if isinstance(obj, float):
+        return "float"
+    if isinstance(obj, str):
+        return "str"
+    assert obj is None, f"unexpected JSON type {type(obj)}"
+    return "null"
+
+
+def test_artifact_schema_matches_golden(exe_case):
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = {"plan": _schema(exe_case.plan.to_dict()),
+           "lowered": _schema(exe_case.lowered.to_dict())}
+    assert got == golden, (
+        "Plan/LoweredPlan JSON schema drifted from tests/golden/"
+        "api_artifact_schema.json.  If the change is INTENTIONAL, bump "
+        "repro.api.artifacts.SCHEMA_VERSION and regenerate the golden file "
+        "(see its header comment); otherwise you broke the cross-machine "
+        "plan hand-off contract.")
+
+
+# ---------------------------------------------------------------------------
+# Facade semantics
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_raw_equals_direct_pipesim(exe_case):
+    strat = exe_case.strategy
+    direct = pipesim_simulate(
+        [s.t_f for s in strat.stages], [s.t_b for s in strat.stages],
+        strat.c_links, strat.n_microbatches, strat.warmup_counts)
+    assert exe_case.simulate(priced=False).makespan == direct.makespan
+
+
+def test_simulate_priced_equals_referee_on_mixed_fleet(exe_mixed):
+    """Acceptance: Executable.simulate() == referee-priced sync_priced_step
+    throughput on the mixed fleet (identical accounting for joint plans)."""
+    cfg = exe_mixed.config
+    ops = build_op_sequence(exe_mixed.arch, seq_len=cfg.seq_len)
+    layers = build_layers(ops, cfg.planner.granularity,
+                          z=cfg.planner.z_heavy)
+    ref = sync_priced_step(exe_mixed.strategy, exe_mixed.cluster, layers)
+    res = exe_mixed.simulate()
+    assert res.makespan == ref.makespan
+    tok = exe_mixed.strategy.tokens_per_step()
+    assert exe_mixed.throughput() == tok / ref.makespan
+
+
+def test_lowered_schedule_matches_strategy_warmups(exe_case):
+    # default scheduler is h1f1b — lowering must reproduce the plan's counts
+    assert exe_case.lowered.warmup_counts == exe_case.strategy.warmup_counts
+
+
+def test_lowered_apportionment_sums_to_microbatch(exe_mixed):
+    low = exe_mixed.lowered
+    for st in low.stages:
+        assert sum(st.microbatch_shards) == low.microbatch_samples
+        dp = dict(tuple(a) for a in st.mesh_axes)["data"]
+        assert len(st.microbatch_shards) == dp
+
+
+def test_compile_from_plan_artifact_rebuilds_cluster(exe_case):
+    plan2 = api.Plan.from_json(exe_case.plan.to_json())
+    exe2 = api.compile(plan_artifact=plan2)   # no cluster: rebuilt from JSON
+    assert cluster_fingerprint(exe2.cluster) == plan2.cluster_fingerprint
+    assert exe2.lowered.to_json() == exe_case.lowered.to_json()
+
+
+def test_compile_warns_on_fingerprint_mismatch(exe_case):
+    other = paper_case_study_cluster(cross_gbps=50.0)
+    with pytest.warns(UserWarning, match="fingerprint"):
+        api.compile(plan_artifact=exe_case.plan, cluster=other)
+
+
+def test_attach_elastic_is_seeded_not_researched(exe_case):
+    ctrl = exe_case.attach_elastic()
+    assert ctrl.strategy is not None
+    assert ctrl.decisions[0].reason == "seeded from compiled plan"
+    # and it reacts to events without a bootstrap() call
+    d = ctrl.handle(BandwidthShift(step=5, cross_bw=exe_case.cluster.cross_bw
+                                   * 0.5))
+    assert d.action in ("warmup_only", "incremental", "full", "none")
+    # seeding must not alias the immutable Plan artifact's strategy
+    assert ctrl.strategy is not exe_case.strategy
+
+
+def test_describe_mentions_every_stage(exe_case):
+    text = exe_case.describe()
+    for i in range(exe_case.strategy.n_stages):
+        assert f"stage{i}" in text
+
+
+# ---------------------------------------------------------------------------
+# HarpConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_bad_values():
+    with pytest.raises(ValueError, match="seq_len"):
+        api.HarpConfig(seq_len=0).validate()
+    with pytest.raises(ValueError, match="scheduler"):
+        api.HarpConfig(scheduler="nope").validate()
+    with pytest.raises(ValueError, match="granularity"):
+        api.HarpConfig(planner=PlannerConfig(granularity=-1)).validate()
+
+
+def test_validate_rejects_disagreeing_data_cfg():
+    from repro.data.pipeline import DataConfig
+    with pytest.raises(ValueError, match="data.seq_len"):
+        api.HarpConfig(
+            seq_len=128,
+            data=DataConfig(vocab_size=64, seq_len=64,
+                            global_batch=4)).validate()
+
+
+def test_validate_rejects_nondivisible_batch():
+    with pytest.raises(ValueError, match="multiple"):
+        api.HarpConfig(global_batch=100,
+                       planner=PlannerConfig(n_microbatches=32)).validate()
+
+
+def test_default_microbatches_follow_global_batch():
+    # README one-liner ergonomics: an untouched planner config follows the
+    # workload instead of failing divisibility against the default B=128
+    cfg = api.HarpConfig(global_batch=64)
+    assert cfg.planner.n_microbatches == 64
+    cfg.validate()
+
+
+def test_elastic_cfg_backfill_and_mismatch_guard(exe_case):
+    from repro.runtime.controller import ControllerConfig
+    ctrl = exe_case.attach_elastic(ControllerConfig(drift_threshold=0.1))
+    assert ctrl.cfg.seq_len == exe_case.config.seq_len
+    assert ctrl.cfg.global_batch == exe_case.config.global_batch
+    assert ctrl.cfg.drift_threshold == 0.1
+    with pytest.raises(ValueError, match="disagrees"):
+        exe_case.attach_elastic(ControllerConfig(seq_len=999))
+    with pytest.raises(ValueError, match="elastic.seq_len"):
+        api.HarpConfig(seq_len=512,
+                       elastic=ControllerConfig(seq_len=999)).validate()
+
+
+def test_planner_accepts_missing_config():
+    # satellite: HAPTPlanner(cfg) is Optional with an explicit default
+    p = HAPTPlanner(paper_case_study_cluster())
+    assert isinstance(p.cfg, PlannerConfig)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_resolve_and_errors():
+    from repro.api import registry
+    assert registry.resolve("scheduler", "h1f1b") is not None
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        registry.resolve("scheduler", "nope")
+    with pytest.raises(KeyError, match="registry kind"):
+        registry.resolve("fruit", "apple")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("scheduler", "h1f1b", lambda *a: [])
+
+
+def test_registry_third_party_scheduler_changes_lowering(exe_case):
+    from repro.api import registry
+
+    name = "_test_all_ones"
+    if name not in registry.available("scheduler"):
+        registry.register("scheduler", name,
+                          lambda t, c, B: [1] * len(t))
+    import dataclasses
+    plan2 = dataclasses.replace(exe_case.plan,
+                                config=dataclasses.replace(
+                                    exe_case.plan.config, scheduler=name))
+    lowered = api.lower(plan2)
+    assert lowered.warmup_counts == [1] * exe_case.strategy.n_stages
+
+
+def test_classic_scheduler_selection(exe_case):
+    import dataclasses
+    plan2 = dataclasses.replace(
+        exe_case.plan, config=dataclasses.replace(exe_case.plan.config,
+                                                  scheduler="classic_1f1b"))
+    S = exe_case.strategy.n_stages
+    assert api.lower(plan2).warmup_counts == list(range(S, 0, -1))
+
+
+# ---------------------------------------------------------------------------
+# CLI round trip
+# ---------------------------------------------------------------------------
+
+
+def test_cli_plan_simulate_round_trip(tmp_path, capsys):
+    from repro.api.cli import main
+    out = tmp_path / "plan.json"
+    rc = main(["plan", "--arch", "gpt-2b", "--cluster", "paper_case_study",
+               "--granularity", "16", "--microbatches", "16",
+               "--global-batch", "16", "--seq-len", "512",
+               "-o", str(out)])
+    assert rc == 0 and out.exists()
+    plan = api.Plan.from_json(out.read_text())
+    assert plan.arch == "gpt-2b"
+    # the artifact on disk is bit-stable
+    assert plan.to_json() == out.read_text()
+    rc = main(["simulate", "--plan", str(out)])
+    assert rc == 0
+    assert "tokens/s" in capsys.readouterr().out

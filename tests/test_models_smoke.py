@@ -11,6 +11,10 @@ from repro.configs import get_config, list_archs
 from repro.models import build_model
 from repro.models.prefill import prefill
 
+# full per-arch forward+train sweeps take minutes on CPU — tier-1 fast job
+# deselects these with -m "not slow" (see pytest.ini / CI)
+pytestmark = pytest.mark.slow
+
 ARCHS = list_archs(assigned_only=True)
 
 

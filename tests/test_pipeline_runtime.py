@@ -16,10 +16,14 @@ import pytest
 # data/model) and reads axis_index inside it.  jax 0.4.x's SPMD partitioner
 # rejects the resulting PartitionId op ("meaning is ambiguous"); the program
 # is only expressible on jax versions with the first-class jax.shard_map API.
-pytestmark = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="partial-auto shard_map pipeline needs jax.shard_map (new jax); "
-           "0.4.x SPMD partitioning rejects PartitionId in partial-manual bodies")
+pytestmark = [
+    pytest.mark.slow,   # several minutes per arch — tier-1 fast job skips
+    pytest.mark.skipif(
+        not hasattr(jax, "shard_map"),
+        reason="partial-auto shard_map pipeline needs jax.shard_map (new "
+               "jax); 0.4.x SPMD partitioning rejects PartitionId in "
+               "partial-manual bodies"),
+]
 
 SCRIPT = r"""
 import os
@@ -49,7 +53,7 @@ ref_gn = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(ref_g))))
 
 st = build_staging(cfg, 2, params, act_dtype=jnp.float32)
 loss_fn = pipeline_loss_fn(st, mesh, n_microbatches=4)
-from repro.models.common import set_mesh
+from repro.compat import set_mesh
 with set_mesh(mesh):
     loss, _ = jax.jit(loss_fn)(st.staged, st.shared, st.consts, batch)
     g = jax.jit(jax.grad(lambda s, sh: loss_fn(s, sh, st.consts, batch)[0],

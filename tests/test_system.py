@@ -18,6 +18,11 @@ from repro.train.optimizer import OptimizerConfig
 from repro.train.step import make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 
+# end-to-end planning + training loops run minutes on CPU — deselected in
+# the tier-1 fast job with -m "not slow" (see pytest.ini / CI)
+pytestmark = pytest.mark.slow
+
+
 
 @pytest.fixture(scope="module")
 def hapt_strategy():
