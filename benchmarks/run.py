@@ -15,7 +15,8 @@ MODULES = [
     "benchmarks.fig9_homo_vs_hetero",  # Fig. 9 / §6.2
     "benchmarks.fig10_bandwidth",      # Fig. 10 bandwidth sensitivity
     "benchmarks.fig11_ablations",      # Fig. 11 granularity + joint opt
-    "benchmarks.search_overhead",      # §6.6 planning overhead
+    "benchmarks.search_overhead",      # §6.6 planning overhead; appends a
+                                       # run to BENCH_search.json (repo root)
     "benchmarks.roofline",             # repo-specific: dry-run roofline
 ]
 

@@ -31,7 +31,7 @@ from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2   # v2: SearchConfig gained engine/batch_size knobs
 
 
 # ---------------------------------------------------------------------------

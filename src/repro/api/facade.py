@@ -205,11 +205,23 @@ class Executable:
 
     # -- simulation ----------------------------------------------------------
 
+    def sim_cache_stats(self) -> Dict[str, int]:
+        """Counters of the process-wide pipesim memo (``core.pipesim``):
+        repeated ``simulate()`` calls — warm elastic re-plans, repeated
+        ``describe()``/``throughput()`` queries — are served from cache
+        instead of re-solving the schedule."""
+        from repro.core.pipesim import sim_memo_stats
+        s = sim_memo_stats()
+        return {"hits": s.hits, "misses": s.misses,
+                "fast_path": s.fast_path, "graph_path": s.graph_path}
+
     def simulate(self, *, priced: bool = True,
                  no_overlap: bool = False) -> SimResult:
-        """One-step discrete-event simulation.  ``priced=True`` (default) is
-        the referee accounting (== ``sync_priced_step``); ``priced=False``
-        simulates the lowered schedule as-is."""
+        """One-step discrete-event simulation, served from the pipesim memo
+        on repeat signatures (treat the result as immutable).
+        ``priced=True`` (default) is the referee accounting
+        (== ``sync_priced_step``); ``priced=False`` simulates the lowered
+        schedule as-is."""
         if priced:
             return sync_priced_step(
                 self.strategy, self.cluster, self.layers,

@@ -6,6 +6,23 @@ per-link in-order transmission (full duplex), and microbatch data
 dependencies.  Start times solve the longest-path recurrence
 ``s(v) >= s(u) + d(u)`` exactly — no sampling.
 
+Two engines produce bit-identical results:
+
+- **closed-form fast path** (default when eligible): the 1F1B grid is
+  static, so start times are filled by an index-based recurrence over
+  (stage, microbatch) — no node dicts, no Kahn sort.  Eligible whenever the
+  warm-up counts are non-increasing along the pipeline (every H-1F1B /
+  classic / eager schedule qualifies) and sends overlap compute;
+- **graph simulator** (fallback): the original explicit-DAG longest-path
+  solve, kept as the reference oracle and for irregular schedules
+  (``no_overlap`` synchronous sends, warm-up vectors that grow downstream).
+
+Repeated calls are served from a bounded memo keyed on the full input
+signature ``(t_f, t_b, comm, counts, intra)`` — warm elastic re-plans and
+``api.Executable.simulate()`` hit cache instead of re-solving; counters are
+exposed via :func:`sim_memo_stats`.  Treat returned :class:`SimResult`
+objects as immutable (cache entries are shared).
+
 Supports classic 1F1B / Eager-1F1B / H-1F1B (any warm-up count vector) and a
 ``no_overlap`` mode (HexiScale-like synchronous sends that block compute).
 
@@ -14,6 +31,7 @@ ratio, and the eta load-balance metric (Eq. 19).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -62,34 +80,181 @@ def _stage_order(i: int, S: int, B: int, N_i: int) -> List[Tuple[str, int]]:
     return order
 
 
-def simulate(t_f: Sequence[float], t_b: Sequence[float],
-             c_links: Sequence[float], n_microbatches: int,
-             warmup_counts: Sequence[int], *,
-             no_overlap: bool = False,
-             c_links_bwd: Optional[Sequence[float]] = None,
-             intra_f: Optional[Sequence[float]] = None,
-             intra_b: Optional[Sequence[float]] = None,
-             intra_overlap: float = 0.0) -> SimResult:
-    """Simulate one training step (B microbatches through S stages).
+def fast_path_eligible(warmup_counts: Sequence[int],
+                       no_overlap: bool = False) -> bool:
+    """Can the closed-form recurrence evaluate this schedule?
 
-    ``intra_f``/``intra_b`` (optional, per stage, seconds): intra-operator
-    collective time (TP all-reduce, amortized DP sync) *not* already folded
-    into ``t_f``/``t_b``.  A fraction ``intra_overlap`` in [0, 1] hides under
-    compute; the exposed remainder stretches every F/B op of that stage and
-    is reported per stage in ``SimResult.stage_intra_comm``.
+    True iff sends overlap compute and the warm-up counts are non-increasing
+    along the pipeline with every stage launching at least one warm-up
+    forward.  (The recurrence processes ops in issue-order position; the
+    monotone counts guarantee every cross-stage dependency lands at an
+    earlier — or tie-broken earlier — position, which is exactly the shape
+    of every H-1F1B / classic-1F1B / eager-1F1B schedule.)"""
+    if no_overlap:
+        return False
+    prev: Optional[int] = None
+    for c in warmup_counts:
+        if c < 1:
+            return False
+        if prev is not None and c > prev:
+            return False
+        prev = c
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Closed-form fast path
+# ---------------------------------------------------------------------------
+
+
+def _simulate_fast(t_f: List[float], t_b: List[float],
+                   c_links: Sequence[float], B: int,
+                   warmup_counts: Sequence[int],
+                   cb: List[float]) -> Tuple:
+    """Index-based recurrence over (stage, microbatch) start times.
+
+    Processes ops in increasing issue-order position; at each position all
+    forwards run in ascending stage order, then all backwards in descending
+    stage order — a topological order of the 1F1B DAG whenever the warm-up
+    counts are non-increasing (see :func:`fast_path_eligible`).  Every float
+    expression mirrors the graph simulator's, so results are bit-identical.
+
+    Returns (f_start, f_end, b_start, b_end, cf_start, cf_end, cb_start,
+    cb_end, exposed) — per-(stage, microbatch) grids as nested lists plus the
+    per-(stage, order-position) exposed-comm contributions.
     """
-    S, B = len(t_f), n_microbatches
-    assert len(c_links) == S - 1 and len(warmup_counts) == S
-    cb = list(c_links_bwd) if c_links_bwd is not None else list(c_links)
-    assert 0.0 <= intra_overlap <= 1.0
-    exposed_frac = 1.0 - intra_overlap
-    in_f = [exposed_frac * x for x in intra_f] if intra_f is not None \
-        else [0.0] * S
-    in_b = [exposed_frac * x for x in intra_b] if intra_b is not None \
-        else [0.0] * S
-    t_f = [t + x for t, x in zip(t_f, in_f)]
-    t_b = [t + x for t, x in zip(t_b, in_b)]
+    S = len(t_f)
+    orders = [_stage_order(i, S, B, warmup_counts[i]) for i in range(S)]
+    # per issue position: which (stage, microbatch) forwards/backwards run
+    f_at: List[List[Tuple[int, int]]] = [[] for _ in range(2 * B)]
+    b_at: List[List[Tuple[int, int]]] = [[] for _ in range(2 * B)]
+    for i in range(S):
+        for p, (kind, j) in enumerate(orders[i]):
+            (f_at if kind == "F" else b_at)[p].append((i, j))
+    f_start = [[0.0] * B for _ in range(S)]
+    f_end = [[0.0] * B for _ in range(S)]
+    b_start = [[0.0] * B for _ in range(S)]
+    b_end = [[0.0] * B for _ in range(S)]
+    cf_start = [[0.0] * B for _ in range(S - 1)]
+    cf_end = [[0.0] * B for _ in range(S - 1)]
+    cb_start = [[0.0] * B for _ in range(S - 1)]
+    cb_end = [[0.0] * B for _ in range(S - 1)]
+    exposed = [[0.0] * (2 * B) for _ in range(S)]
+    prev_end: List[Optional[float]] = [None] * S
 
+    for p in range(2 * B):
+        # forwards at this position, upstream first (CF arrivals are ready)
+        for i, j in f_at[p]:
+            pe = prev_end[i]
+            if i > 0:
+                arrive = cf_end[i - 1][j]
+                s0 = arrive if pe is None else max(pe, arrive)
+                ex = arrive - (0.0 if pe is None else pe)
+                if ex > 1e-12:
+                    exposed[i][p] = ex
+            else:
+                s0 = 0.0 if pe is None else pe
+            e = s0 + t_f[i]
+            f_start[i][j] = s0
+            f_end[i][j] = e
+            prev_end[i] = e
+            if i < S - 1:
+                cs = e if j == 0 else max(e, cf_end[i][j - 1])
+                cf_start[i][j] = cs
+                cf_end[i][j] = cs + c_links[i]
+        # backwards at this position, downstream first (CB arrivals are ready)
+        for i, j in reversed(b_at[p]):
+            pe = prev_end[i]
+            if i < S - 1:
+                arrive = cb_end[i][j]
+                s0 = arrive if pe is None else max(pe, arrive)
+                ex = arrive - (0.0 if pe is None else pe)
+                if ex > 1e-12:
+                    exposed[i][p] = ex
+            else:
+                # last stage: data dep is its own forward (not a comm node)
+                arrive = f_end[i][j]
+                s0 = arrive if pe is None else max(pe, arrive)
+            e = s0 + t_b[i]
+            b_start[i][j] = s0
+            b_end[i][j] = e
+            prev_end[i] = e
+            if i > 0:
+                cs = e if j == 0 else max(e, cb_end[i - 1][j - 1])
+                cb_start[i - 1][j] = cs
+                cb_end[i - 1][j] = cs + cb[i - 1]
+    return (f_start, f_end, b_start, b_end, cf_start, cf_end,
+            cb_start, cb_end, exposed, orders)
+
+
+def _fast_result(t_f, t_b, c_links, B, warmup_counts, cb, in_f, in_b
+                 ) -> SimResult:
+    """Assemble a SimResult from the fast-path grids, accumulating every
+    reduction in the same element order as the graph simulator (so sums and
+    maxima are bit-identical, not merely close)."""
+    S = len(t_f)
+    (f_start, f_end, b_start, b_end, cf_start, cf_end, cb_start, cb_end,
+     exposed, orders) = _simulate_fast(t_f, t_b, c_links, B, warmup_counts, cb)
+
+    start: Dict[Node, float] = {}
+    dur: Dict[Node, float] = {}
+    stage_compute = [0.0] * S
+    for i in range(S):
+        row_f, row_b = f_start[i], b_start[i]
+        start.update({("F", j, i): row_f[j] for j in range(B)})
+        start.update({("B", j, i): row_b[j] for j in range(B)})
+        tfi, tbi = t_f[i], t_b[i]
+        dur.update({("F", j, i): tfi for j in range(B)})
+        dur.update({("B", j, i): tbi for j in range(B)})
+        # stage busy time accumulated in issue order ([F]*n_w, [B,F]*(B-n_w),
+        # [B]*n_w) so the float sum matches the graph engine's bit for bit
+        n_w = min(warmup_counts[i], B)
+        acc = 0.0
+        for _ in range(n_w):
+            acc += tfi
+        for _ in range(B - n_w):
+            acc += tbi
+            acc += tfi
+        for _ in range(n_w):
+            acc += tbi
+        stage_compute[i] = acc
+    comm_total = 0.0
+    for i in range(S - 1):
+        row_cf, row_cb = cf_start[i], cb_start[i]
+        start.update({("CF", j, i): row_cf[j] for j in range(B)})
+        start.update({("CB", j, i): row_cb[j] for j in range(B)})
+        ci, cbi = c_links[i], cb[i]
+        dur.update({("CF", j, i): ci for j in range(B)})
+        dur.update({("CB", j, i): cbi for j in range(B)})
+        for _ in range(B):
+            comm_total += ci
+            comm_total += cbi
+    makespan = max(max(row) for row in (f_end + b_end + cf_end + cb_end))
+
+    comm_exposed = 0.0
+    for row in exposed:
+        for x in row:
+            if x > 1e-12:
+                comm_exposed += x
+    comm_exposed = min(comm_exposed, comm_total)
+
+    stage_comm_blocking = [0.0] * S
+    stage_idle = [makespan - stage_compute[i] - stage_comm_blocking[i]
+                  for i in range(S)]
+    stage_intra = [B * (in_f[i] + in_b[i]) for i in range(S)]
+    return SimResult(makespan, start, dur, stage_compute, stage_comm_blocking,
+                     stage_idle, comm_total, comm_exposed,
+                     list(warmup_counts), stage_intra)
+
+
+# ---------------------------------------------------------------------------
+# Reference graph simulator
+# ---------------------------------------------------------------------------
+
+
+def _simulate_graph(t_f, t_b, c_links, B, warmup_counts, cb, in_f, in_b, *,
+                    no_overlap: bool) -> SimResult:
+    S = len(t_f)
     dur: Dict[Node, float] = {}
     deps: Dict[Node, List[Node]] = {}
 
@@ -201,6 +366,115 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
     return SimResult(makespan, start, dur, stage_compute, stage_comm_blocking,
                      stage_idle, comm_total, comm_exposed,
                      list(warmup_counts), stage_intra)
+
+
+# ---------------------------------------------------------------------------
+# Memoized front door
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SimMemoStats:
+    """Counters for the simulate() memo + engine dispatch."""
+    hits: int = 0
+    misses: int = 0
+    fast_path: int = 0       # misses solved by the closed-form recurrence
+    graph_path: int = 0      # misses solved by the reference graph engine
+
+    def snapshot(self) -> "SimMemoStats":
+        return SimMemoStats(self.hits, self.misses,
+                            self.fast_path, self.graph_path)
+
+
+SIM_MEMO_MAXSIZE = 64
+_SIM_MEMO: "OrderedDict[tuple, SimResult]" = OrderedDict()
+_SIM_STATS = SimMemoStats()
+
+
+def sim_memo_stats() -> SimMemoStats:
+    """Live counters of the simulate() memo (shared across all callers)."""
+    return _SIM_STATS
+
+
+def clear_sim_memo() -> None:
+    _SIM_MEMO.clear()
+
+
+def simulate(t_f: Sequence[float], t_b: Sequence[float],
+             c_links: Sequence[float], n_microbatches: int,
+             warmup_counts: Sequence[int], *,
+             no_overlap: bool = False,
+             c_links_bwd: Optional[Sequence[float]] = None,
+             intra_f: Optional[Sequence[float]] = None,
+             intra_b: Optional[Sequence[float]] = None,
+             intra_overlap: float = 0.0,
+             fast: Optional[bool] = None,
+             cache: bool = True) -> SimResult:
+    """Simulate one training step (B microbatches through S stages).
+
+    ``intra_f``/``intra_b`` (optional, per stage, seconds): intra-operator
+    collective time (TP all-reduce, amortized DP sync) *not* already folded
+    into ``t_f``/``t_b``.  A fraction ``intra_overlap`` in [0, 1] hides under
+    compute; the exposed remainder stretches every F/B op of that stage and
+    is reported per stage in ``SimResult.stage_intra_comm``.
+
+    ``fast``: None (default) auto-selects the closed-form recurrence when
+    :func:`fast_path_eligible`; True forces it (ValueError when ineligible);
+    False forces the reference graph engine.  Both engines are bit-identical
+    on every eligible schedule.
+
+    ``cache``: serve repeated signatures from a bounded memo (the returned
+    SimResult is shared — treat it as immutable).  Pass False to bypass
+    (e.g. when benchmarking the engines themselves).
+    """
+    S, B = len(t_f), int(n_microbatches)
+    assert len(c_links) == S - 1 and len(warmup_counts) == S
+    key = None
+    if cache:
+        key = (tuple(float(x) for x in t_f), tuple(float(x) for x in t_b),
+               tuple(float(x) for x in c_links), B,
+               tuple(int(c) for c in warmup_counts), bool(no_overlap),
+               None if c_links_bwd is None else
+               tuple(float(x) for x in c_links_bwd),
+               None if intra_f is None else tuple(float(x) for x in intra_f),
+               None if intra_b is None else tuple(float(x) for x in intra_b),
+               float(intra_overlap), fast)
+        hit = _SIM_MEMO.get(key)
+        if hit is not None:
+            _SIM_STATS.hits += 1
+            _SIM_MEMO.move_to_end(key)
+            return hit
+        _SIM_STATS.misses += 1
+
+    cb = list(c_links_bwd) if c_links_bwd is not None else list(c_links)
+    assert 0.0 <= intra_overlap <= 1.0
+    exposed_frac = 1.0 - intra_overlap
+    in_f = [exposed_frac * x for x in intra_f] if intra_f is not None \
+        else [0.0] * S
+    in_b = [exposed_frac * x for x in intra_b] if intra_b is not None \
+        else [0.0] * S
+    tf = [t + x for t, x in zip(t_f, in_f)]
+    tb = [t + x for t, x in zip(t_b, in_b)]
+
+    eligible = fast_path_eligible(warmup_counts, no_overlap)
+    if fast is True and not eligible:
+        raise ValueError(
+            "fast=True but the schedule is not closed-form eligible "
+            f"(no_overlap={no_overlap}, counts={list(warmup_counts)})")
+    use_fast = eligible if fast is None else fast
+    if use_fast:
+        _SIM_STATS.fast_path += 1
+        res = _fast_result(tf, tb, list(c_links), B, warmup_counts,
+                           cb, in_f, in_b)
+    else:
+        _SIM_STATS.graph_path += 1
+        res = _simulate_graph(tf, tb, list(c_links), B, warmup_counts,
+                              cb, in_f, in_b, no_overlap=no_overlap)
+    if cache:
+        _SIM_MEMO[key] = res
+        if len(_SIM_MEMO) > SIM_MEMO_MAXSIZE:
+            _SIM_MEMO.popitem(last=False)
+    return res
 
 
 # ---------------------------------------------------------------------------

@@ -82,10 +82,16 @@ class ProfileTables:
     stats: ProfilerStats
     stage_costs: Dict[Tuple[int, int, int], StageCost] = field(default_factory=dict)
     variant_tp: Optional[List[Optional[int]]] = None
+    _t_cache: Optional[np.ndarray] = field(default=None, init=False,
+                                           repr=False, compare=False)
 
     @property
     def t(self) -> np.ndarray:
-        return self.t_f + self.t_b
+        """Per-stage f+b time, computed once (the planner's hot-path input —
+        ``_DPContext`` reads it for every candidate row)."""
+        if self._t_cache is None:
+            self._t_cache = self.t_f + self.t_b
+        return self._t_cache
 
 
 class ZeroRedundantProfiler:

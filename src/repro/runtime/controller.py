@@ -39,7 +39,7 @@ from repro.core.cluster import HeteroCluster, cluster_fingerprint
 from repro.core.h1f1b import h1f1b_counts
 from repro.core.layering import Layer, build_layers
 from repro.core.opgraph import build_op_sequence
-from repro.core.pipesim import eta_load_balance, simulate
+from repro.core.pipesim import eta_load_balance, sim_memo_stats, simulate
 from repro.core.planner import HAPTPlanner, PlannerConfig
 from repro.core.strategy import ParallelStrategy
 from repro.runtime.events import BandwidthShift, ClusterEvent, apply_event
@@ -79,6 +79,8 @@ class ReplanDecision:
     migration_s: float = 0.0
     plan_cache_hit: bool = False
     profile_cache_hits: int = 0
+    sim_memo_hits: int = 0      # pipesim memo hits while handling this event
+    sim_memo_misses: int = 0    # (hits > 0 on a warm re-plan = cache-served)
 
     @property
     def downtime_s(self) -> float:
@@ -91,6 +93,9 @@ class ReplanDecision:
                          f" -> {self.step_time_after * 1e3:.0f}ms")
         if self.downtime_s:
             parts.append(f"downtime {self.downtime_s:.2f}s")
+        if self.sim_memo_hits or self.sim_memo_misses:
+            parts.append(f"sim-cache {self.sim_memo_hits}h"
+                         f"/{self.sim_memo_misses}m")
         return " ".join(parts)
 
 
@@ -139,7 +144,10 @@ class ElasticController:
         fn = pc.pop("measure_fn", None)
         pc["measure_fn_id"] = None if fn is None else \
             getattr(fn, "__qualname__", repr(fn))
-        pc["search"].pop("n_workers", None)     # parallelism doesn't alter plans
+        # execution knobs don't alter plans: worker parallelism, and the
+        # search engine/batching (oracle and vectorized are bit-identical)
+        for knob in ("n_workers", "engine", "batch_size"):
+            pc["search"].pop(knob, None)
         # search() overwrites its n_microbatches from the planner config at
         # plan time; normalize so keys match before and after the first plan
         pc["search"]["n_microbatches"] = self.planner_cfg.n_microbatches
@@ -202,16 +210,20 @@ class ElasticController:
 
     def bootstrap(self) -> ParallelStrategy:
         """Initial plan on the current fleet."""
+        snap = sim_memo_stats().snapshot()
         strategy, dt, cache_hit, hits = self._plan(self.cluster)
         if strategy is None:
             raise RuntimeError("bootstrap planning failed: no feasible plan")
         self.strategy = strategy
         self.plan_cluster = self.cluster
+        live = sim_memo_stats()
         self.decisions.append(ReplanDecision(
             step=0, action="incremental" if (cache_hit or hits) else "full",
             reason="bootstrap", step_time_after=strategy.est_step_time,
             search_time_s=dt, plan_cache_hit=cache_hit,
-            profile_cache_hits=hits))
+            profile_cache_hits=hits,
+            sim_memo_hits=live.hits - snap.hits,
+            sim_memo_misses=live.misses - snap.misses))
         return strategy
 
     # ------------------------------------------------------------------
@@ -283,6 +295,7 @@ class ElasticController:
     def _react(self, new_cluster: HeteroCluster, step: int, why: str,
                bandwidth_only: bool) -> ReplanDecision:
         assert self.strategy is not None, "call bootstrap() first"
+        self._memo_snap = sim_memo_stats().snapshot()
         old_est = self.strategy.est_step_time
         res = project_step(self.strategy, self.plan_cluster, new_cluster,
                            self.layers)
@@ -353,6 +366,15 @@ class ElasticController:
 
     def _commit(self, decision: ReplanDecision, new_cluster: HeteroCluster,
                 adopted: Optional[ParallelStrategy]) -> ReplanDecision:
+        # pipesim-memo traffic while this decision was being made: a warm
+        # re-plan whose simulations were all cache-served shows hits with
+        # zero misses in the decision log (and replay traces)
+        snap = getattr(self, "_memo_snap", None)
+        if snap is not None:
+            live = sim_memo_stats()
+            decision.sim_memo_hits = live.hits - snap.hits
+            decision.sim_memo_misses = live.misses - snap.misses
+            self._memo_snap = None
         # a committed efficiency change (event or calibration) supersedes the
         # EWMA history for that sub-cluster — keeping the stale estimate would
         # read as spurious drift against the new model and churn replans

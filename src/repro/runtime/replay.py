@@ -163,6 +163,16 @@ class ReplayResult:
     wall_total_s: float
     decisions: List = field(default_factory=list)   # ReplanDecision records
     stalled_steps: int = 0
+    sim_memo_hits: int = 0      # pipesim-memo traffic across all replans:
+    sim_memo_misses: int = 0    # hits/misses summed over `decisions`
+
+    @property
+    def cache_served_replans(self) -> int:
+        """Decisions whose simulations were answered entirely from the
+        pipesim memo (warm re-plans that never re-solved a schedule)."""
+        return sum(1 for d in self.decisions
+                   if getattr(d, "sim_memo_hits", 0) > 0
+                   and getattr(d, "sim_memo_misses", 0) == 0)
 
     def throughput(self) -> float:
         return self.tokens_total / self.wall_total_s if self.wall_total_s else 0.0
@@ -280,4 +290,8 @@ def run_replay(trace: EventTrace, n_steps: int, *,
                 decisions.append(d)
                 wall += d.downtime_s
 
-    return ReplayResult(samples, tokens_total, wall, decisions, stalled_steps)
+    return ReplayResult(
+        samples, tokens_total, wall, decisions, stalled_steps,
+        sim_memo_hits=sum(getattr(d, "sim_memo_hits", 0) for d in decisions),
+        sim_memo_misses=sum(getattr(d, "sim_memo_misses", 0)
+                            for d in decisions))

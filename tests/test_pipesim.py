@@ -1,10 +1,18 @@
 """Pipeline-DAG simulator: ``no_overlap`` mode (HexiScale-like synchronous
-sends) and the eta load-balance metric's edge cases — the surfaces the
-elastic replay harness builds on."""
+sends), the eta load-balance metric's edge cases, and the closed-form fast
+path's bit-exact equivalence with the reference graph engine — the surfaces
+the elastic replay harness builds on."""
+import random
+
 import pytest
 
-from repro.core.h1f1b import h1f1b_counts
-from repro.core.pipesim import eta_load_balance, simulate
+from repro.core.h1f1b import (
+    classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts,
+)
+from repro.core.pipesim import (
+    clear_sim_memo, eta_load_balance, fast_path_eligible, sim_memo_stats,
+    simulate,
+)
 
 
 def test_no_overlap_never_faster():
@@ -49,6 +57,97 @@ def test_no_overlap_busy_idle_accounting():
         total = (sync.stage_compute[i] + sync.stage_comm_blocking[i]
                  + sync.stage_idle[i])
         assert total == pytest.approx(sync.makespan)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form fast path == graph engine (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+def _assert_same(a, b):
+    assert a.makespan == b.makespan          # exact, not approx
+    assert a.start == b.start and a.dur == b.dur
+    assert a.stage_compute == b.stage_compute
+    assert a.stage_idle == b.stage_idle
+    assert a.comm_total == b.comm_total
+    assert a.comm_exposed == b.comm_exposed
+    assert a.stage_intra_comm == b.stage_intra_comm
+    assert a.warmup_counts == b.warmup_counts
+
+
+@pytest.mark.parametrize("sched", ["h1f1b", "h1f1b_banded", "classic",
+                                   "eager"])
+@pytest.mark.parametrize("seed", range(4))
+def test_fast_path_matches_graph_all_schedules(sched, seed):
+    rng = random.Random(hash((sched, seed)))
+    S = rng.randint(1, 6)
+    B = rng.randint(1, 16)
+    t_f = [rng.uniform(0.1, 2.0) for _ in range(S)]
+    t_b = [rng.uniform(0.1, 3.0) for _ in range(S)]
+    c = [rng.choice([0.0, rng.uniform(0.0, 1.5)]) for _ in range(S - 1)]
+    if sched == "classic":
+        counts = classic_1f1b_counts(S, B)
+    elif sched == "eager":
+        counts = eager_1f1b_counts(S, B)
+    else:
+        counts = h1f1b_counts([f + b for f, b in zip(t_f, t_b)], c, B,
+                              banded=(sched == "h1f1b_banded"))
+    assert fast_path_eligible(counts)
+    fast = simulate(t_f, t_b, c, B, counts, fast=True, cache=False)
+    graph = simulate(t_f, t_b, c, B, counts, fast=False, cache=False)
+    _assert_same(fast, graph)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_fast_path_matches_graph_with_intra_and_bwd_links(seed):
+    rng = random.Random(seed)
+    S, B = rng.randint(2, 5), rng.randint(2, 10)
+    t_f = [rng.uniform(0.1, 2.0) for _ in range(S)]
+    t_b = [rng.uniform(0.1, 3.0) for _ in range(S)]
+    c = [rng.uniform(0.0, 1.0) for _ in range(S - 1)]
+    cb = [x * rng.uniform(0.5, 1.5) for x in c]
+    intra_f = [rng.uniform(0.0, 0.3) for _ in range(S)]
+    intra_b = [rng.uniform(0.0, 0.3) for _ in range(S)]
+    counts = h1f1b_counts([f + b for f, b in zip(t_f, t_b)], c, B)
+    kw = dict(c_links_bwd=cb, intra_f=intra_f, intra_b=intra_b,
+              intra_overlap=rng.uniform(0.0, 1.0), cache=False)
+    _assert_same(simulate(t_f, t_b, c, B, counts, fast=True, **kw),
+                 simulate(t_f, t_b, c, B, counts, fast=False, **kw))
+
+
+def test_fast_path_ineligible_schedules():
+    # growing warm-up counts downstream break the recurrence's issue order
+    assert not fast_path_eligible([1, 2, 3])
+    assert not fast_path_eligible([2, 0, 1])
+    assert not fast_path_eligible([3, 2, 1], no_overlap=True)
+    with pytest.raises(ValueError, match="not closed-form eligible"):
+        simulate([1.0, 1.0], [1.0, 1.0], [0.1], 4, [1, 2], fast=True)
+    # auto mode falls back to the graph engine, which diagnoses the
+    # growing-counts schedule as what it is: a deadlocked pipeline
+    with pytest.raises(AssertionError, match="cycle"):
+        simulate([1.0, 1.0], [1.0, 1.0], [0.1], 4, [1, 2], cache=False)
+
+
+def test_no_overlap_uses_graph_engine():
+    s0 = sim_memo_stats().graph_path
+    simulate([1.0, 1.0], [1.0, 1.0], [0.3], 4, [2, 1], no_overlap=True,
+             cache=False)
+    assert sim_memo_stats().graph_path == s0 + 1
+
+
+def test_sim_memo_hits_and_misses():
+    clear_sim_memo()
+    args = ([1.0, 1.5], [2.0, 2.5], [0.25], 8, [2, 1])
+    s0 = sim_memo_stats().snapshot()
+    r1 = simulate(*args)
+    r2 = simulate(*args)
+    live = sim_memo_stats()
+    assert live.misses - s0.misses == 1
+    assert live.hits - s0.hits == 1
+    assert r1 is r2                       # served from cache, same object
+    # different signature -> miss
+    simulate(*args, no_overlap=True)
+    assert sim_memo_stats().misses - s0.misses == 2
 
 
 def test_eta_zero_compute():

@@ -1,0 +1,242 @@
+"""Vectorized planning hot path (ISSUE 4): the array-program DP engine must
+be *bit-identical* to the scalar oracle — same fill costs, same F/N tables,
+same chosen ``ParallelStrategy`` JSON — on the paper's clusters and on
+randomized small cases; the search must degrade cleanly where fork-based
+workers are unavailable; and the pipesim memo must surface hit/miss
+counters through the elastic controller's decision log."""
+import json
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import (
+    A100_40G, GBPS, V100_32G, DeviceProfile, HeteroCluster, SubCluster,
+    paper_case_study_cluster, set_node_efficiencies,
+)
+from repro.core import dp_search
+from repro.core.dp_search import (
+    SearchConfig, SearchStats, _DPContext, _dp_eval, _dp_eval_batch,
+    _dp_eval_vec, instrumented_search, search,
+)
+from repro.core.layering import build_layers
+from repro.core.opgraph import build_op_sequence
+from repro.core.pipesim import sim_memo_stats
+from repro.core.profiler import ZeroRedundantProfiler
+from repro.runtime.controller import ControllerConfig, ElasticController
+from repro.runtime.events import BandwidthShift
+
+GB = 1024 ** 3
+
+
+def tiny_cluster(mem_gb_a=40.0, mem_gb_b=32.0):
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A", 1, 2, DeviceProfile("fast", 300e12, mem_gb_a * GB,
+                                                1.5e12), 300e9, 25e9),
+            SubCluster("B", 1, 2, DeviceProfile("slow", 120e12, mem_gb_b * GB,
+                                                0.9e12), 150e9, 25e9),
+        ),
+        cross_bw=0.625e9)
+
+
+def fig11_mixed_cluster(slow=0.6):
+    """Table-1/fig-11 style: case-study fleet with one throttled node."""
+    return set_node_efficiencies(paper_case_study_cluster(), "meshA100",
+                                 (slow, 1.0))
+
+
+def make_tables(cluster, arch="gpt-2b", granularity=12, mb_tokens=1024, **kw):
+    ops = build_op_sequence(get_config(arch), seq_len=1024)
+    layers = build_layers(ops, granularity)
+    prof = ZeroRedundantProfiler(cluster, layers, mb_tokens, **kw)
+    return layers, prof.profile()
+
+
+CASES = {
+    "tiny": lambda: (tiny_cluster(), {}),
+    "table1_case_study": lambda: (paper_case_study_cluster(), {}),
+    "fig11_mixed_joint": lambda: (fig11_mixed_cluster(),
+                                  dict(intra_op=True,
+                                       amortize_microbatches=16)),
+    # 12 GB / 10 GB: small enough that the Eq. 18 bound genuinely binds
+    # (K thresholds reach 1) while strategies stay feasible
+    "memory_bound": lambda: (tiny_cluster(12.0, 10.0),
+                             dict(mb_tokens=8192)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("monotone", [False, True])
+def test_dp_tables_bit_identical(case, monotone):
+    """F and N tables — not just the final fill — must match exactly for
+    every t_max, including infeasible ones."""
+    cluster, kw = CASES[case]()
+    _, tables = make_tables(cluster, **kw)
+    cfg = SearchConfig(n_microbatches=16, monotone_clusters=monotone)
+    ctx = _DPContext(cluster, tables, cfg)
+    vals = np.unique(ctx.t_tab[tables.feasible])
+    assert len(vals), "case produced no feasible candidates"
+    ts = vals[:: max(1, len(vals) // 10)][:10].astype(float)
+    for t in ts:
+        fo, Fo, No = _dp_eval(ctx, float(t), want_tables=True)
+        fv, Fv, Nv = _dp_eval_vec(ctx, float(t), want_tables=True)
+        assert (fo == fv) or (np.isinf(fo) and np.isinf(fv))
+        assert np.array_equal(Fo, Fv)
+        assert np.array_equal(No, Nv)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_batched_eval_matches_singles(case):
+    cluster, kw = CASES[case]()
+    _, tables = make_tables(cluster, **kw)
+    ctx = _DPContext(cluster, tables, SearchConfig(n_microbatches=16))
+    vals = np.unique(ctx.t_tab[tables.feasible])
+    ts = vals[:: max(1, len(vals) // 12)][:12].astype(float)
+    fills = _dp_eval_batch(ctx, ts)
+    for t, f in zip(ts, fills):
+        fo = _dp_eval(ctx, float(t))[0]
+        assert (fo == f) or (np.isinf(fo) and np.isinf(f))
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_search_strategy_json_bit_identical(case):
+    """The acceptance criterion: identical ParallelStrategy JSON from both
+    engines (same fill cost, same stages, same warm-up counts, same meta)."""
+    cluster, kw = CASES[case]()
+    _, tables = make_tables(cluster, granularity=16, **kw)
+    try:
+        s_oracle = search(cluster, tables, 1024,
+                          SearchConfig(n_microbatches=16, engine="oracle"))
+    except RuntimeError:
+        # infeasible case: both engines must agree on that too
+        with pytest.raises(RuntimeError):
+            search(cluster, tables, 1024,
+                   SearchConfig(n_microbatches=16, engine="vectorized"))
+        return
+    s_vec, stats = instrumented_search(
+        cluster, tables, 1024, SearchConfig(n_microbatches=16))
+    assert s_oracle.to_json() == s_vec.to_json()
+    assert stats.engine == "vectorized"
+    assert stats.oracle_fallbacks == 0
+    assert stats.n_evaluated > 0 and stats.best_t_max == s_vec.t_max
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_randomized_clusters_bit_identical(seed):
+    """Randomized small fleets: device speeds, memory, bandwidths, B."""
+    rng = random.Random(seed)
+    cluster = HeteroCluster(
+        subclusters=(
+            SubCluster("A", 1, rng.choice([1, 2, 4]),
+                       DeviceProfile("a", rng.uniform(100e12, 400e12),
+                                     rng.uniform(8, 40) * GB, 1.5e12),
+                       300e9, 25e9),
+            SubCluster("B", rng.choice([1, 2]), 2,
+                       DeviceProfile("b", rng.uniform(80e12, 200e12),
+                                     rng.uniform(8, 32) * GB, 0.9e12),
+                       150e9, 25e9),
+        ),
+        cross_bw=rng.uniform(0.3e9, 3e9))
+    B = rng.choice([4, 8, 32])
+    _, tables = make_tables(cluster, granularity=rng.choice([6, 10]),
+                            mb_tokens=rng.choice([1024, 4096]))
+    cfg_o = SearchConfig(n_microbatches=B, engine="oracle",
+                         require_all_devices=rng.random() < 0.3)
+    cfg_v = SearchConfig(n_microbatches=B, engine="vectorized",
+                         require_all_devices=cfg_o.require_all_devices)
+    try:
+        s_o = search(cluster, tables, 1024, cfg_o)
+    except RuntimeError:
+        with pytest.raises(RuntimeError):
+            search(cluster, tables, 1024, cfg_v)
+        return
+    s_v = search(cluster, tables, 1024, cfg_v)
+    assert s_o.to_json() == s_v.to_json()
+
+
+def test_four_subclusters_vectorized_only():
+    """The scale case the scalar DP cannot represent: four sub-clusters.
+    The vectorized engine plans it; the oracle refuses loudly."""
+    cluster = HeteroCluster(
+        subclusters=(
+            SubCluster("A100-a", 1, 2, A100_40G, 300e9, 200 * GBPS),
+            SubCluster("A100-b", 1, 2, A100_40G, 300e9, 200 * GBPS),
+            SubCluster("V100-a", 1, 2, V100_32G, 150e9, 200 * GBPS),
+            SubCluster("V100-b", 1, 2, V100_32G, 150e9, 200 * GBPS),
+        ),
+        cross_bw=5.0 * GBPS)
+    layers, tables = make_tables(cluster, granularity=12)
+    strat, stats = instrumented_search(
+        cluster, tables, 1024, SearchConfig(n_microbatches=16))
+    assert stats.engine == "vectorized" and stats.n_subclusters == 4
+    # structural invariants on the multi-pool plan
+    pos = 0
+    for s in strat.stages:
+        assert s.layer_start == pos
+        pos = s.layer_end
+        assert s.t <= strat.t_max * (1 + 1e-9)
+    assert pos == len(layers)
+    for ci, sub in enumerate(cluster.subclusters):
+        used = sum(s.n_devices for s in strat.stages if s.cluster_idx == ci)
+        assert used <= sub.n_devices
+    with pytest.raises(ValueError, match="at most 2 sub-clusters"):
+        instrumented_search(cluster, tables, 1024,
+                            SearchConfig(n_microbatches=16, engine="oracle"))
+
+
+def test_worker_pool_unavailable_falls_back_to_serial(monkeypatch):
+    """Non-fork start methods (or sandboxed fork) must degrade to serial
+    evaluation, not crash with a None _WORKER_CTX."""
+    monkeypatch.setattr(dp_search, "_fork_pool", lambda n: None)
+    cluster = paper_case_study_cluster()
+    _, tables = make_tables(cluster, granularity=16)
+    cfg = SearchConfig(n_microbatches=16, n_workers=4)
+    s_par = search(cluster, tables, 1024, cfg)
+    s_ser = search(cluster, tables, 1024,
+                   SearchConfig(n_microbatches=16, n_workers=0))
+    assert s_par.to_json() == s_ser.to_json()
+
+
+def test_instrumented_search_public_stats():
+    """The benchmark-facing hook: stats describe the run without touching
+    any private symbol, and serialize cleanly."""
+    cluster = tiny_cluster()
+    _, tables = make_tables(cluster)
+    strat, stats = instrumented_search(cluster, tables, 1024,
+                                       SearchConfig(n_microbatches=8))
+    assert isinstance(stats, SearchStats)
+    assert stats.n_evaluated + stats.n_cache_served > 0
+    assert stats.n_tmax_candidates >= stats.n_evaluated
+    assert stats.prune_evals > 0
+    assert stats.t_S <= stats.best_t_max <= stats.t_E * (1 + 1e-12)
+    assert stats.total_seconds > 0
+    d = json.loads(json.dumps(stats.asdict()))
+    assert d["engine"] == "vectorized"
+    # search() returns the same strategy
+    assert search(cluster, tables, 1024,
+                  SearchConfig(n_microbatches=8)).to_json() == strat.to_json()
+
+
+def test_controller_decisions_record_sim_memo_counters():
+    """Satellite: replay traces must show when a re-plan was cache-served —
+    decisions carry the pipesim-memo hit/miss delta."""
+    from repro.core.planner import PlannerConfig
+    ctrl = ElasticController(
+        paper_case_study_cluster(), "gpt-2b",
+        planner_cfg=PlannerConfig(granularity=12, n_microbatches=16),
+        cfg=ControllerConfig(total_steps=2000, seq_len=512, global_batch=16,
+                             amortize=False))
+    ctrl.bootstrap()
+    d0 = ctrl.decisions[0]
+    assert d0.sim_memo_misses + d0.sim_memo_hits > 0, \
+        "bootstrap ran simulations but recorded no memo traffic"
+    # same-signature replan path: the bandwidth retune re-simulates the
+    # same schedule shape; counters must be populated either way
+    d1 = ctrl.handle(BandwidthShift(step=10, cross_bw=4.0 * GBPS))
+    assert (d1.sim_memo_hits, d1.sim_memo_misses) != (0, 0)
+    assert f"sim-cache {d1.sim_memo_hits}h" in d1.describe()
+    # an identical second event is served from warm caches: hits, no misses
+    d2 = ctrl.handle(BandwidthShift(step=20, cross_bw=4.0 * GBPS))
+    assert d2.sim_memo_hits > 0 and d2.sim_memo_misses == 0
