@@ -1,0 +1,189 @@
+"""Comm-subsystem trajectory benchmark -> ``BENCH_comm.json`` at repo root.
+
+One entry per run (same append-style as ``BENCH_search.json``), recording
+what the comm pricing buys on the fig10 knee case and what the contention
+simulator measures:
+
+- **selection**: joint planning on the fig10 fleet at 3 Gbps cross, with the
+  auto-selected collective algorithms vs. the forced flat ring — the
+  acceptance case (auto picks the two-level hierarchical gradient sync and
+  its plan's simulated step beats the ring plan's);
+- **compression**: the cross-cluster sync priced plain vs. int8-compressed;
+- **contention**: one lowered plan's step simulated with the fair-share
+  netsim (shared-WAN occupancy + explicit grad-sync transfers) vs. the
+  uncontended scalars, plus the netsim's own wall-clock cost.
+
+``--tiny`` shrinks granularity/microbatches to CI size (seconds).
+``--fail-on-regression`` exits 1 when the auto selection fails to pick the
+hierarchy or fails to beat the forced ring — CI runs this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit_csv, hetero_cluster       # noqa: E402
+
+from repro import api                                        # noqa: E402
+from repro.comm.selector import CommConfig, CommModel        # noqa: E402
+from repro.core.planner import PlannerConfig                 # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_comm.json")
+
+ARCH = "gpt-30b"
+DIMS = (2, 8, 2, 8)
+CROSS_GBPS = 3.0         # the fig10 knee
+
+
+def _harp_cfg(tiny: bool, comm: Optional[CommConfig]) -> api.HarpConfig:
+    gran, B, batch = (24, 32, 256) if tiny else (64, 128, 1024)
+    return api.HarpConfig(
+        seq_len=1024, global_batch=batch,
+        planner=PlannerConfig(granularity=gran, n_microbatches=B,
+                              intra_op=True, min_submesh_devices=2,
+                              comm=comm))
+
+
+def run(tiny: bool = False, label: Optional[str] = None) -> Dict:
+    cluster = hetero_cluster(*DIMS, cross_gbps=CROSS_GBPS)
+
+    t0 = time.perf_counter()
+    auto = api.compile(ARCH, cluster, _harp_cfg(tiny, CommConfig()))
+    t_auto = time.perf_counter() - t0
+    ring = api.compile(ARCH, cluster,
+                       _harp_cfg(tiny, CommConfig(algorithms=("ring",))))
+
+    sync_algos = sorted({s.sync_algorithm or "ring*"
+                         for s in auto.lowered.stages
+                         if s.sync_time_s > 0})
+    auto_step = auto.strategy.est_step_time
+    ring_step = ring.strategy.est_step_time
+
+    # compression: the cross-cluster sync priced plain vs. int8
+    payload = 512e6
+    plain = CommModel(cluster).cross_sync(0, DIMS[0], DIMS[1], 2, payload)
+    comp = CommModel(cluster, CommConfig(compressed=True)).cross_sync(
+        0, DIMS[0], DIMS[1], 2, payload)
+
+    # contention: fair-share netsim with shared physical links vs. the SAME
+    # simulation on private links — isolates the sharing cost from the
+    # injected sync work — plus the raw uncontended scalars for reference
+    t1 = time.perf_counter()
+    contended = auto.simulate(contention=True)
+    netsim_s = time.perf_counter() - t1
+    no_sharing = auto.simulate(contention=True, share_links=False)
+    raw = auto.simulate(priced=False)
+
+    case = {
+        "cluster": cluster.describe(),
+        "arch": ARCH,
+        "granularity": auto.config.planner.granularity,
+        "n_microbatches": auto.strategy.n_microbatches,
+        "auto_step_s": auto_step,
+        "ring_step_s": ring_step,
+        "auto_vs_ring_speedup": round(ring_step / auto_step, 4),
+        "sync_algorithms": sync_algos,
+        "hierarchical_selected": "hierarchical" in sync_algos,
+        "auto_beats_ring": auto_step < ring_step,
+        "plan_seconds": round(t_auto, 3),
+        "compress_plain_s": plain.seconds,
+        "compress_int8_s": comp.seconds,
+        "compress_wire_ratio": round(comp.wire_bytes / payload, 4),
+        "contended_step_s": contended.makespan,
+        "no_sharing_step_s": no_sharing.makespan,
+        "uncontended_step_s": raw.makespan,
+        "contention_stretch": round(contended.makespan / no_sharing.makespan,
+                                    4),
+        "contended_links": auto.lowered.contended_links,
+        "netsim_seconds": round(netsim_s, 3),
+    }
+    return {"label": label or "HEAD",
+            "mode": "tiny" if tiny else "full",
+            "cases": {"fig10_bw3": case}}
+
+
+def extend_trajectory(entry: Dict, path: str = BENCH_PATH) -> Dict:
+    """Append one run to the comm trajectory (creates the file on first
+    use)."""
+    doc = {"schema": 1,
+           "description": "Comm-subsystem trajectory; one entry per "
+                          "benchmarks/comm_bench.py run — see docs/comm.md.",
+           "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["runs"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def rows_from_entry(entry: Dict) -> List[Dict]:
+    rows = []
+    for name, c in entry["cases"].items():
+        rows.append({
+            "label": f"{name}.selection",
+            "step_time_s": c["auto_step_s"],
+            "derived": f"ring={c['ring_step_s']:.3f}s;"
+                       f"speedup={c['auto_vs_ring_speedup']}x;"
+                       f"algos={'+'.join(c['sync_algorithms'])}"})
+        rows.append({
+            "label": f"{name}.compression",
+            "step_time_s": c["compress_int8_s"],
+            "derived": f"plain={c['compress_plain_s']:.3f}s;"
+                       f"wire_ratio={c['compress_wire_ratio']}"})
+        rows.append({
+            "label": f"{name}.contention",
+            "step_time_s": c["contended_step_s"],
+            "derived": f"no_sharing={c['no_sharing_step_s']:.3f}s;"
+                       f"stretch={c['contention_stretch']}x;"
+                       f"netsim={c['netsim_seconds']}s"})
+    return rows
+
+
+def main() -> None:
+    """benchmarks/run.py contract: full measurement, CSV on stdout, one
+    trajectory entry appended to BENCH_comm.json."""
+    entry = run(tiny=False)
+    extend_trajectory(entry)
+    emit_csv(rows_from_entry(entry))
+
+
+def cli(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized configs (seconds, not minutes)")
+    ap.add_argument("--label", default=None,
+                    help="trajectory entry label (default HEAD)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="trajectory JSON path (default repo root)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 unless the hierarchy is auto-selected AND "
+                         "the auto plan beats the forced ring")
+    args = ap.parse_args(argv)
+
+    entry = run(tiny=args.tiny, label=args.label)
+    extend_trajectory(entry, args.out)
+    emit_csv(rows_from_entry(entry))
+    print(f"# trajectory entry appended to {os.path.abspath(args.out)}",
+          file=sys.stderr)
+
+    bad = [name for name, c in entry["cases"].items()
+           if not (c["hierarchical_selected"] and c["auto_beats_ring"])]
+    if bad:
+        print(f"# comm selection regressed on: {bad}", file=sys.stderr)
+        if args.fail_on_regression:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

@@ -65,10 +65,15 @@ def cached(name: str, fn: Callable[[], Dict]) -> Dict:
 
 def plan_hapt(cluster: HeteroCluster, arch: str, granularity: int = 96,
               n_microbatches: int = N_MICROBATCHES,
-              n_workers: int = 6, min_submesh: int = 2, intra_op: bool = False):
+              n_workers: int = 6, min_submesh: int = 2, intra_op: bool = False,
+              comm=None):
+    """``comm``: None = legacy scalar pricing; a
+    ``repro.comm.selector.CommConfig`` = heterogeneity-aware collective
+    pricing (the fig10/comm benchmarks pass auto vs. forced-ring configs)."""
     pcfg = PlannerConfig(granularity=granularity,
                          n_microbatches=n_microbatches,
-                         min_submesh_devices=min_submesh, intra_op=intra_op)
+                         min_submesh_devices=min_submesh, intra_op=intra_op,
+                         comm=comm)
     pcfg.search.n_workers = n_workers
     # the paper's setting: every device participates (idle-devices-allowed is
     # this repo's extension; measured separately in EXPERIMENTS.md)

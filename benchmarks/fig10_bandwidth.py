@@ -1,19 +1,33 @@
 """Paper Fig. 10: sensitivity to cross-cluster bandwidth (3-10 Gbps).
 
 HAPT's step time should stay ~flat until c approaches t_max (paper: knee at
-~3 Gbps), while the no-overlap baseline degrades ~1/bandwidth."""
+~3 Gbps), while the no-overlap baseline degrades ~1/bandwidth.
+
+Comm-aware rows (``hapt_comm`` / ``hapt_comm_ring``) re-run the joint search
+under ``repro.comm``'s selected-algorithm pricing vs. a forced flat ring:
+at the 3 Gbps knee the auto-selected two-level hierarchical gradient sync is
+the acceptance case — the selected plan must beat the forced ring's.
+(Results are cached; delete results/bench_cache/fig10_* to regenerate on the
+current pricing.)"""
 from __future__ import annotations
 
 from benchmarks.common import (
     CASE_MODEL, GLOBAL_BATCH, N_MICROBATCHES, SEQ_LEN, cached, emit_csv,
     hetero_cluster, plan_hapt,
 )
+from repro.comm.selector import CommConfig
 from repro.configs import get_config
 from repro.core.baselines import plan_coarse, plan_coarse_sync
 
 ARCH = "gpt-30b"
 DIMS = (2, 8, 2, 8)
 BWS = [3, 4, 5, 7, 10]
+
+
+def _sync_algos(strategy) -> str:
+    algos = {s.intra_op.sync_algo for s in strategy.stages
+             if s.intra_op is not None and s.dp > 1}
+    return "+".join(sorted(a or "ring*" for a in algos)) or "-"
 
 
 def run():
@@ -23,6 +37,9 @@ def run():
 
         def bench(bw=bw, cluster=cluster):
             h = plan_hapt(cluster, ARCH)
+            hc = plan_hapt(cluster, ARCH, intra_op=True, comm=CommConfig())
+            hr = plan_hapt(cluster, ARCH, intra_op=True,
+                           comm=CommConfig(algorithms=("ring",)))
             cs = plan_coarse_sync(cluster, get_config(ARCH), seq_len=SEQ_LEN,
                                   global_batch=GLOBAL_BATCH,
                                   n_microbatches=N_MICROBATCHES,
@@ -31,16 +48,27 @@ def run():
                              global_batch=GLOBAL_BATCH,
                              n_microbatches=N_MICROBATCHES,
                              min_submesh_devices=2)
-            return {"hapt": h.est_step_time, "sync": cs.est_step_time,
+            return {"hapt": h.est_step_time,
+                    "hapt_comm": hc.est_step_time,
+                    "hapt_comm_ring": hr.est_step_time,
+                    "sync": cs.est_step_time,
                     "eager": ce.est_step_time,
-                    "hapt_counts": h.warmup_counts}
+                    "hapt_counts": h.warmup_counts,
+                    "comm_sync_algos": _sync_algos(hc)}
 
         r = cached(f"fig10_bw{bw}", bench)
-        for sysname in ("hapt", "eager", "sync"):
+        for sysname in ("hapt", "hapt_comm", "hapt_comm_ring", "eager",
+                        "sync"):
+            if sysname not in r:
+                continue    # pre-comm cache entry; delete it to regenerate
+            derived = ""
+            if sysname == "hapt":
+                derived = f"counts={r['hapt_counts']}"
+            elif sysname == "hapt_comm":
+                derived = f"sync={r.get('comm_sync_algos', '?')}"
             rows.append({"label": f"bw{bw}gbps/{sysname}",
                          "step_time_s": r[sysname],
-                         "derived": f"counts={r['hapt_counts']}"
-                         if sysname == "hapt" else ""})
+                         "derived": derived})
     # degradation ratios 10 -> 3 Gbps
     r10 = cached("fig10_bw10", lambda: None)
     r3 = cached("fig10_bw3", lambda: None)
@@ -49,6 +77,12 @@ def run():
         "derived": f"hapt={r3['hapt'] / r10['hapt']:.2f}x;"
                    f"sync={r3['sync'] / r10['sync']:.2f}x (paper: hapt ~flat,"
                    " sync ~1/bw)"})
+    if "hapt_comm" in r3:
+        rows.append({
+            "label": "comm_selected_vs_ring_3gbps", "step_time_s": 0.0,
+            "derived": f"auto={r3['hapt_comm']:.3f}s<"
+                       f"ring={r3['hapt_comm_ring']:.3f}s;"
+                       f"algos={r3['comm_sync_algos']}"})
     return rows
 
 

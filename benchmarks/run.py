@@ -17,6 +17,9 @@ MODULES = [
     "benchmarks.fig11_ablations",      # Fig. 11 granularity + joint opt
     "benchmarks.search_overhead",      # §6.6 planning overhead; appends a
                                        # run to BENCH_search.json (repo root)
+    "benchmarks.comm_bench",           # comm subsystem: algorithm selection,
+                                       # compression, contention; appends a
+                                       # run to BENCH_comm.json (repo root)
     "benchmarks.roofline",             # repo-specific: dry-run roofline
 ]
 

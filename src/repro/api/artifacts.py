@@ -31,7 +31,9 @@ from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 2   # v2: SearchConfig gained engine/batch_size knobs
+SCHEMA_VERSION = 3   # v3: comm subsystem — PlannerConfig.comm, per-stage
+                     # collective algorithms, LoweredPlan link occupancy
+                     # (v2: SearchConfig gained engine/batch_size knobs)
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +160,12 @@ class StageLowering:
                                         # per-microbatch sample count
     intra_comm_bytes: float             # per-microbatch collective payload
     intra_comm_time_s: float            # priced collective time (f+b)
+    ar_algorithm: Optional[str] = None  # selected TP all-reduce algorithm
+                                        # (None = legacy implicit flat ring)
+    sync_algorithm: Optional[str] = None   # ditto, DP gradient sync
+    sync_compressed: bool = False       # sync priced int8-block-quantized
+    sync_time_s: float = 0.0            # per-step gradient sync (priced)
+    sync_link: str = ""                 # physical link the sync occupies
 
 
 @dataclass
@@ -174,6 +182,14 @@ class LoweredPlan:
     link_bytes: List[float]             # per-link activation payload
     stages: List[StageLowering]
     est_step_time_s: float
+    link_ids: List[str] = field(default_factory=list)
+    # physical link per stage boundary ("wan" = the shared cross-cluster
+    # link; equal ids contend in the netsim / contention simulation)
+    link_occupancy_s: Dict[str, float] = field(default_factory=dict)
+    # per physical link: priced busy seconds over one step (activation
+    # sends both directions + TP all-reduces + gradient syncs)
+    contended_links: List[str] = field(default_factory=list)
+    # links with more than one collective/boundary charged to them
     version: int = SCHEMA_VERSION
 
     @property
@@ -203,8 +219,15 @@ class LoweredPlan:
                  f"est step {self.est_step_time_s * 1e3:.1f} ms"]
         for s in self.stages:
             axes = "x".join(f"{n}={sz}" for n, sz in s.mesh_axes)
+            algo = ""
+            if s.sync_algorithm:
+                algo = f" sync={s.sync_algorithm}"
+                if s.sync_compressed:
+                    algo += "+int8"
             lines.append(
                 f"  stage{s.stage}: layers[{s.layer_start}:{s.layer_end}] "
                 f"on {s.subcluster} mesh({axes}) shards={s.microbatch_shards} "
-                f"N={self.warmup_counts[s.stage]}")
+                f"N={self.warmup_counts[s.stage]}{algo}")
+        if self.contended_links:
+            lines.append(f"  contended links: {', '.join(self.contended_links)}")
         return "\n".join(lines)

@@ -59,10 +59,18 @@ def cmd_plan(args) -> int:
     from repro.api import HarpConfig, plan
     from repro.core.planner import PlannerConfig
 
+    comm_cfg = None
+    if args.comm or args.comm_algorithms or args.comm_compressed:
+        from repro.comm.selector import CommConfig
+        kw: Dict[str, Any] = {"compressed": args.comm_compressed}
+        if args.comm_algorithms:
+            kw["algorithms"] = tuple(args.comm_algorithms.split(","))
+        comm_cfg = CommConfig(**kw)
     pcfg = PlannerConfig(
         granularity=args.granularity, n_microbatches=args.microbatches,
         min_submesh_devices=args.min_submesh,
-        max_submesh_devices=args.max_submesh, intra_op=args.intra_op)
+        max_submesh_devices=args.max_submesh, intra_op=args.intra_op,
+        comm=comm_cfg)
     if args.workers:
         pcfg.search = dataclasses.replace(pcfg.search, n_workers=args.workers)
     cfg = HarpConfig(seq_len=args.seq_len, global_batch=args.global_batch,
@@ -72,6 +80,10 @@ def cmd_plan(args) -> int:
     with open(args.out, "w") as f:
         f.write(artifact.to_json())
     print(artifact.describe())
+    if args.explain_comm:
+        from repro.api import compile as api_compile
+        print()
+        print(api_compile(plan_artifact=artifact).explain_comm())
     print(f"\nplan written to {args.out}")
     return 0
 
@@ -81,13 +93,19 @@ def cmd_simulate(args) -> int:
     from repro.core.pipesim import ascii_timeline
 
     exe = api_compile(plan_artifact=_load_plan(args.plan))
-    res = exe.simulate(priced=not args.raw, no_overlap=args.no_overlap)
+    res = exe.simulate(priced=not args.raw, no_overlap=args.no_overlap,
+                       contention=args.contention)
     tok = exe.strategy.tokens_per_step()
     print(exe.lowered.describe())
-    print(f"\nsimulated step: {res.makespan * 1e3:.2f} ms "
-          f"({'referee-priced' if not args.raw else 'raw schedule'}), "
+    mode = "contended fair-share" if args.contention else \
+        ("referee-priced" if not args.raw else "raw schedule")
+    print(f"\nsimulated step: {res.makespan * 1e3:.2f} ms ({mode}), "
           f"{tok / res.makespan:,.0f} tokens/s, "
           f"comm overlap {res.overlap_ratio * 100:.0f}%")
+    if args.contention and res.link_busy:
+        busy = ", ".join(f"{l}={t * 1e3:.1f}ms"
+                         for l, t in sorted(res.link_busy.items()))
+        print(f"link busy: {busy}")
     if args.timeline:
         print(ascii_timeline(res, width=96))
     return 0
@@ -211,6 +229,21 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--max-submesh", type=int, default=0)
     p.add_argument("--intra-op", action="store_true",
                    help="joint inter+intra-operator search")
+    p.add_argument("--comm", action="store_true",
+                   help="heterogeneity-aware collective pricing: the search "
+                        "chooses plans under the selected algorithm's cost "
+                        "(repro.comm)")
+    p.add_argument("--comm-algorithms", default=None, metavar="A,B,...",
+                   help="candidate collective set (default "
+                        "ring,rhd,hierarchical; implies --comm)")
+    p.add_argument("--comm-compressed", action="store_true",
+                   help="add int8-compressed candidates for WAN-crossing "
+                        "collectives (implies --comm; stage-local TP/DP "
+                        "collectives never cross the WAN, so this prices "
+                        "the cross-cluster sync surfaces — see docs/comm.md)")
+    p.add_argument("--explain-comm", action="store_true",
+                   help="print the per-stage collective breakdown "
+                        "(algorithm, bytes, priced time, contended links)")
     p.add_argument("--scheduler", default="h1f1b")
     p.add_argument("--workers", type=int, default=0)
     p.add_argument("-o", "--out", default="plan.json")
@@ -221,6 +254,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--raw", action="store_true",
                    help="raw lowered schedule (default: referee-priced)")
     p.add_argument("--no-overlap", action="store_true")
+    p.add_argument("--contention", action="store_true",
+                   help="fair-share link-occupancy simulation (comm.netsim):"
+                        " shared links and grad syncs contend")
     p.add_argument("--timeline", action="store_true")
 
     p = sub.add_parser("train", help="training loop (plan-driven or ad hoc)")

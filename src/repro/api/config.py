@@ -20,6 +20,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
+from repro.comm.selector import CommConfig
 from repro.core.costmodel import CostModelConfig
 from repro.core.dp_search import SearchConfig
 from repro.core.planner import PlannerConfig
@@ -140,9 +141,11 @@ class HarpConfig:
         d = dict(d)
         pd = dict(d.pop("planner"))
         pd.pop("measure_fn", None)
+        comm = pd.pop("comm", None)
         planner = PlannerConfig(
             cost=CostModelConfig(**pd.pop("cost")),
-            search=SearchConfig(**pd.pop("search")), **pd)
+            search=SearchConfig(**pd.pop("search")),
+            comm=None if comm is None else CommConfig(**comm), **pd)
         trainer = TrainerConfig(**d.pop("trainer"))
         data = d.pop("data", None)
         elastic = d.pop("elastic", None)

@@ -20,6 +20,7 @@ import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
+from repro.comm.selector import collective_breakdown
 from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.core.cluster import HeteroCluster, cluster_fingerprint
@@ -137,10 +138,12 @@ def lower(plan_artifact: Plan, *,
                    [s.t_b for s in strategy.stages],
                    strategy.c_links, B, counts)
 
+    breakdown = collective_breakdown(strategy, cluster, layers)
     stages = []
     for i, s in enumerate(strategy.stages):
         io = _stage_intra_plan(s)
         axes = [[name, size] for name, size in intra_op_mesh_axes(io)]
+        e = breakdown["stages"][i]
         stages.append(StageLowering(
             stage=i,
             subcluster=cluster.subclusters[s.cluster_idx].name,
@@ -148,7 +151,12 @@ def lower(plan_artifact: Plan, *,
             mesh_axes=axes, n_devices=s.n_devices,
             microbatch_shards=batch_shard_sizes(io, mb_samples),
             intra_comm_bytes=io.comm_bytes,
-            intra_comm_time_s=io.comm_time))
+            intra_comm_time_s=io.comm_time,
+            ar_algorithm=e["ar_algorithm"],
+            sync_algorithm=e["sync_algorithm"],
+            sync_compressed=e["sync_compressed"],
+            sync_time_s=e["sync_time_s"],
+            sync_link=e["sync_link"]))
 
     link_bytes = [
         layers[strategy.stages[i].layer_end - 1].act_out_bytes_per_token
@@ -160,7 +168,10 @@ def lower(plan_artifact: Plan, *,
         microbatch_samples=mb_samples, warmup_counts=counts,
         c_links_s=[float(c) for c in strategy.c_links],
         link_bytes=link_bytes, stages=stages,
-        est_step_time_s=res.makespan)
+        est_step_time_s=res.makespan,
+        link_ids=breakdown["link_ids"],
+        link_occupancy_s=breakdown["link_occupancy_s"],
+        contended_links=breakdown["contended_links"])
 
 
 # ---------------------------------------------------------------------------
@@ -197,10 +208,41 @@ class Executable:
 
     # -- inspection ----------------------------------------------------------
 
-    def describe(self, *, timeline: bool = False) -> str:
+    def describe(self, *, timeline: bool = False, comm: bool = False) -> str:
         lines = [self.plan.describe(), self.lowered.describe()]
+        if comm:
+            lines.append(self.explain_comm())
         if timeline:
             lines.append(ascii_timeline(self.simulate(priced=False)))
+        return "\n".join(lines)
+
+    def explain_comm(self) -> str:
+        """Per-stage collective breakdown: selected algorithm, payload
+        bytes, priced time, and the physical links each collective occupies
+        (``ring*`` marks the legacy implicit flat ring of plans searched
+        without a comm model)."""
+        bd = collective_breakdown(self.strategy, self.cluster, self.layers)
+        lines = ["collective breakdown (per stage):"]
+        for e in bd["stages"]:
+            ar = e["ar_algorithm"] or ("ring*" if e["ar_time_s"] > 0 else "-")
+            sync = e["sync_algorithm"] or \
+                ("ring*" if e["sync_time_s"] > 0 else "-")
+            if e["sync_compressed"]:
+                sync += "+int8"
+            lines.append(
+                f"  stage{e['stage']} [{e['subcluster']}] tp={e['tp']} "
+                f"dp={e['dp']}: ar={ar} {e['ar_time_s'] * 1e3:.2f}ms/mb on "
+                f"{e['ar_link']}; sync={sync} "
+                f"{e['sync_time_s'] * 1e3:.2f}ms/step on {e['sync_link']}; "
+                f"payload {e['comm_bytes'] / 1e6:.2f} MB/mb")
+        if bd["link_ids"]:
+            lines.append("  boundary links: " + ", ".join(
+                f"{i}->{i + 1}:{l}" for i, l in enumerate(bd["link_ids"])))
+        occ = ", ".join(f"{l}={t * 1e3:.1f}ms"
+                        for l, t in sorted(bd["link_occupancy_s"].items()))
+        lines.append(f"  link occupancy per step: {occ or 'none'}")
+        lines.append("  contended links: "
+                     + (", ".join(bd["contended_links"]) or "none"))
         return "\n".join(lines)
 
     # -- simulation ----------------------------------------------------------
@@ -216,12 +258,46 @@ class Executable:
                 "fast_path": s.fast_path, "graph_path": s.graph_path}
 
     def simulate(self, *, priced: bool = True,
-                 no_overlap: bool = False) -> SimResult:
+                 no_overlap: bool = False,
+                 contention: bool = False,
+                 share_links: bool = True) -> SimResult:
         """One-step discrete-event simulation, served from the pipesim memo
         on repeat signatures (treat the result as immutable).
         ``priced=True`` (default) is the referee accounting
         (== ``sync_priced_step``); ``priced=False`` simulates the lowered
-        schedule as-is."""
+        schedule as-is.
+
+        ``contention=True`` runs the fair-share occupancy engine instead:
+        stage boundaries are mapped to their *physical* links (every
+        cluster-crossing boundary shares ``"wan"``) and each stage's
+        per-step gradient sync becomes an explicit transfer released after
+        its last backward — so overlapping activation sends and grad syncs
+        slow each other down.  The sync is removed from the amortized
+        backward time first (no double counting), making this directly
+        comparable to ``priced=True``.  ``share_links=False`` keeps the
+        explicit syncs but gives every transfer a private link — the
+        uncontended baseline that isolates the *sharing* cost from the
+        injected sync work."""
+        if contention:
+            if no_overlap:
+                raise ValueError("contention=True is overlap-mode only")
+            strat = self.strategy
+            bd = collective_breakdown(strat, self.cluster, self.layers)
+            t_b, sync_work = [], []
+            for i, s in enumerate(strat.stages):
+                amort = s.intra_op.sync_time if s.intra_op is not None else 0.0
+                t_b.append(s.t_b - amort)
+                e = bd["stages"][i]
+                if e["sync_time_s"] > 0:
+                    link = e["sync_link"] if share_links \
+                        else f"__private_sync{i}"
+                    sync_work.append((i, link, e["sync_time_s"]))
+            return simulate(
+                [s.t_f for s in strat.stages], t_b, strat.c_links,
+                strat.n_microbatches, self.lowered.warmup_counts,
+                contention=True,
+                link_ids=bd["link_ids"] if share_links else None,
+                sync_work=sync_work)
         if priced:
             return sync_priced_step(
                 self.strategy, self.cluster, self.layers,

@@ -20,11 +20,16 @@ Registered kinds and their contracts (all times seconds):
 - ``event_source``: ``fn(cluster, n_steps, **kw) -> EventTrace``.
 - ``cluster``: ``fn(**kw) -> HeteroCluster`` (the canonical fleets, for the
   CLI and config files).
+- ``collective``: a :class:`repro.comm.algorithms.CollectiveAlgorithm`
+  instance.  This kind is *backed by* ``repro.comm.algorithms.ALGORITHMS``
+  (the planner resolves algorithms there without importing the api
+  package), so registrations through either door are visible to both.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, List
 
+from repro.comm import algorithms as _collectives
 from repro.core import cluster as _cluster_lib
 from repro.core.costmodel import CostModelConfig
 from repro.core.h1f1b import (
@@ -32,7 +37,7 @@ from repro.core.h1f1b import (
 )
 from repro.runtime.events import EventTrace, paper_trace, random_trace
 
-KINDS = ("scheduler", "cost_model", "event_source", "cluster")
+KINDS = ("scheduler", "cost_model", "event_source", "cluster", "collective")
 
 _REGISTRY: Dict[str, Dict[str, Any]] = {k: {} for k in KINDS}
 
@@ -41,6 +46,9 @@ def register(kind: str, name: str, obj: Any, *, overwrite: bool = False) -> Any:
     """Register ``obj`` under (kind, name).  Returns ``obj`` so it can be
     used as a decorator body.  Re-registration requires ``overwrite=True`` —
     silent shadowing of a built-in would be a debugging trap."""
+    if kind == "collective":
+        return _collectives.register_collective(name, obj,
+                                                overwrite=overwrite)
     if kind not in _REGISTRY:
         raise KeyError(f"unknown registry kind {kind!r}; kinds: {KINDS}")
     if name in _REGISTRY[kind] and not overwrite:
@@ -51,6 +59,8 @@ def register(kind: str, name: str, obj: Any, *, overwrite: bool = False) -> Any:
 
 
 def resolve(kind: str, name: str) -> Any:
+    if kind == "collective":
+        return _collectives.get_algorithm(name)
     if kind not in _REGISTRY:
         raise KeyError(f"unknown registry kind {kind!r}; kinds: {KINDS}")
     try:
@@ -61,6 +71,8 @@ def resolve(kind: str, name: str) -> Any:
 
 
 def available(kind: str) -> List[str]:
+    if kind == "collective":
+        return _collectives.available_collectives()
     return sorted(_REGISTRY[kind])
 
 

@@ -265,6 +265,19 @@ def set_node_efficiencies(cluster: HeteroCluster, name: str,
         cluster, name, dataclasses.replace(sub, node_efficiencies=ne))
 
 
+def set_inter_node_bw(cluster: HeteroCluster, name: str,
+                      inter_node_bw: float) -> HeteroCluster:
+    """Recalibrated inter-node fabric bandwidth for one sub-cluster
+    (bytes/s) — the comm telemetry's per-tier analogue of
+    :func:`with_cross_bw`."""
+    if inter_node_bw <= 0:
+        raise ValueError("inter_node_bw must be positive")
+    idx = subcluster_index(cluster, name)
+    sub = cluster.subclusters[idx]
+    return _replace_subcluster(
+        cluster, name, dataclasses.replace(sub, inter_node_bw=inter_node_bw))
+
+
 def cluster_fingerprint(cluster: HeteroCluster) -> str:
     """Stable identity of everything the planner's cost model reads — used to
     key plan caches (two clusters with equal fingerprints plan identically)."""

@@ -99,12 +99,21 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
                         cfgm: CostModelConfig = CostModelConfig(), *,
                         uneven: bool = True,
                         amortize_microbatches: int = 0,
-                        max_degree: int = 0) -> List[StageCost]:
+                        max_degree: int = 0,
+                        comm=None) -> List[StageCost]:
     """All candidate intra-op shardings of this stage on this submesh, one
     per tensor-parallel width tp (powers of two dividing ``mesh.m``, capped
     by ``max_degree`` when > 0).  Each result carries its IntraOpPlan; the
     joint DP chooses among them per (stage-slice, t_max) instead of greedily
-    taking the cheapest."""
+    taking the cheapest.
+
+    ``comm`` (optional :class:`repro.comm.selector.CommModel`): price the TP
+    all-reduce and DP gradient sync under the *selected* collective
+    algorithm (ring / recursive halving-doubling / two-level hierarchical,
+    whichever is cheapest on this submesh's link tiers) instead of the
+    implicit flat ring; the chosen algorithm names ride on the
+    ``IntraOpPlan``.  ``comm=None`` is the legacy scalar pricing,
+    bit-identical to before the comm subsystem existed."""
     flops = sum(l.flops_per_token for l in layers) * mb_tokens
     params = sum(l.param_bytes for l in layers)
     ar_bytes = sum(l.ar_bytes_per_token for l in layers) * mb_tokens
@@ -130,18 +139,32 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
             # ring all-reduce moves 2(tp-1)/tp of payload; fwd once, bwd once.
             # The stage's critical path is the *largest* data shard's group,
             # whose AR payload is max(ratios)*ar_bytes (= ar_bytes/dp even).
+            ar_algo = sync_algo = None
+            sync_compressed = False
             if tp > 1:
                 ar_shard = ar_bytes * max(ratios)
-                t_ar = ar_shard * 2 * (tp - 1) / tp / sub.intra_node_bw
+                if comm is not None:
+                    sel_ar = comm.tp_allreduce(mesh.cluster_idx, tp, ar_shard)
+                    t_ar, ar_algo = sel_ar.seconds, sel_ar.algorithm
+                else:
+                    t_ar = ar_shard * 2 * (tp - 1) / tp / sub.intra_node_bw
                 ar_payload = 2 * ar_shard * 2 * (tp - 1) / tp
             else:
                 t_ar = 0.0
                 ar_payload = 0.0
             # per-step dp grad sync; amortized per microbatch when the joint
-            # search prices the data axis (B = amortize_microbatches)
+            # search prices the data axis (B = amortize_microbatches).  With a
+            # comm model the sync runs the cheapest selected algorithm over
+            # the stage's (intra-node, inter-node) link tiers — two-level
+            # hierarchical typically beats the flat ring once n > 1.
             if dp > 1:
-                bw = sub.inter_node_bw if n > 1 else sub.intra_node_bw
-                dp_sync = params * 2 * (dp - 1) / dp / bw
+                if comm is not None:
+                    sel_s = comm.dp_sync(mesh.cluster_idx, n, per_node, params)
+                    dp_sync, sync_algo = sel_s.seconds, sel_s.algorithm
+                    sync_compressed = sel_s.compressed
+                else:
+                    bw = sub.inter_node_bw if n > 1 else sub.intra_node_bw
+                    dp_sync = params * 2 * (dp - 1) / dp / bw
             else:
                 dp_sync = 0.0
             sync_mb = dp_sync / amortize_microbatches \
@@ -160,7 +183,8 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
                 axis="tensor" if tp > 1 else "data", tp=tp, dp=dp,
                 shard_ratios=ratios, comm_bytes=ar_payload + sync_payload,
                 comm_time_f=t_ar, comm_time_b=t_ar + sync_mb,
-                sync_time=sync_mb)
+                sync_time=sync_mb, ar_algo=ar_algo, sync_algo=sync_algo,
+                sync_compressed=sync_compressed)
             out.append(StageCost(t_f, t_b, mem_p, mem_a, tp, dp, dp_sync,
                                  intra=plan))
         tp *= 2
@@ -169,14 +193,15 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
 
 def stage_cost(layers: Sequence[Layer], sub: SubCluster, mesh: Submesh,
                mb_tokens: int, cfgm: CostModelConfig = CostModelConfig(),
-               measure_fn: Optional[Callable] = None) -> StageCost:
+               measure_fn: Optional[Callable] = None,
+               comm=None) -> StageCost:
     """Cheapest feasible intra-op strategy for this stage-mesh pair — the
     inter-op-only (greedy) contract: even shards, fastest ``t = t_f + t_b``.
     The joint search uses :func:`intra_op_candidates` instead."""
     if measure_fn is not None:
         return measure_fn(layers, sub, mesh, mb_tokens)
     cands = intra_op_candidates(layers, sub, mesh, mb_tokens, cfgm,
-                                uneven=False)
+                                uneven=False, comm=comm)
     assert cands, "no intra-op factorization for mesh"
     return min(cands, key=lambda c: c.t)
 

@@ -179,10 +179,11 @@ class _DPContext:
     """
 
     def __init__(self, cluster: HeteroCluster, tables: ProfileTables,
-                 cfg: SearchConfig):
+                 cfg: SearchConfig, comm=None):
         self.cluster = cluster
         self.tables = tables
         self.cfg = cfg
+        self.comm = comm
         self.C = len(cluster.subclusters)
         self.L = tables.t_f.shape[1] - 1
         # device units per cluster = smallest submesh size present
@@ -207,10 +208,24 @@ class _DPContext:
         bw = np.array([[cluster.link_bw(c, nc) for nc in range(self.C)]
                        for c in range(self.C)], dtype=np.float64)
         self.ctime = tables.cut_bytes[:, None, None] / bw[None, :, :]
+        if comm is not None:
+            # comm-aware cut pricing: the WAN link's per-transfer latency is
+            # real cost the scalar model drops; both engines read ctime, so
+            # they stay bit-identical to each other either way
+            lat = np.array(
+                [[comm.p2p_latency(c, nc) for nc in range(self.C)]
+                 for c in range(self.C)], dtype=np.float64)
+            self.ctime = self.ctime + lat[None, :, :]
         self._groups: Dict[Tuple[int, int], Optional[_EdgeGroup]] = {}
 
     def bw(self, src: int, dst: int) -> float:
         return self.cluster.link_bw(src, dst)
+
+    def p2p(self, j: int, src: int, dst: int) -> float:
+        """Cut-at-``j`` transfer seconds from cluster ``src`` to ``dst`` —
+        the one expression every scalar path shares with the vectorized
+        engine's precomputed ``ctime`` (bit-identical by construction)."""
+        return float(self.ctime[j, src, dst])
 
     def group(self, k: int, c: int) -> Optional["_EdgeGroup"]:
         """Stacked ``(j, nc)`` transition fan-in for (start layer k, source
@@ -332,7 +347,7 @@ def _dp_eval(ctx: _DPContext, t_max: float,
                         if j == L:
                             c_time = 0.0
                         else:
-                            c_time = tab.cut_bytes[j] / ctx.bw(c, nc)
+                            c_time = ctx.p2p(j, c, nc)
                         if c_time > t_max:
                             continue
                         Fn = F[j, :, :, nc]
@@ -550,7 +565,7 @@ def _backtrack(ctx: _DPContext, t_max: float, F: np.ndarray, N: np.ndarray
                 for nc in ncs:
                     if ctx.cfg.monotone_clusters and j < L and nc < c:
                         continue
-                    c_time = 0.0 if j == L else tab.cut_bytes[j] / ctx.bw(c, nc)
+                    c_time = 0.0 if j == L else ctx.p2p(j, c, nc)
                     if c_time > t_max:
                         continue
                     K = math.ceil(2.0 * c_time / t_max) + 1 + N[(j,) + nxt + (nc,)]
@@ -841,8 +856,7 @@ def _search_impl(ctx: _DPContext, mb_tokens: int, engine: str,
             intra_op=sc.intra))
         if si < len(picks) - 1:
             nxt_cluster = tables.meshes[picks[si + 1][0]].cluster_idx
-            c_links.append(
-                tables.cut_bytes[j] / ctx.bw(mesh.cluster_idx, nxt_cluster))
+            c_links.append(ctx.p2p(j, mesh.cluster_idx, nxt_cluster))
 
     t_per_stage = [s.t for s in stages]
     counts = h1f1b_counts(t_per_stage, c_links, B)
@@ -878,15 +892,19 @@ def _search_impl(ctx: _DPContext, mb_tokens: int, engine: str,
 
 def instrumented_search(cluster: HeteroCluster, tables: ProfileTables,
                         mb_tokens: int, cfg: SearchConfig = SearchConfig(),
-                        verbose: bool = False
+                        verbose: bool = False, comm=None
                         ) -> Tuple[ParallelStrategy, SearchStats]:
     """Full HAPT search + observability: candidate t_max generation,
     bidirectional pruning, batched (parallel) evaluation, backtracking,
     H-1F1B scheduling.  Returns the strategy plus a :class:`SearchStats`
     record — the public hook for benchmarks and CI (no private imports
-    needed).  The strategy is identical to :func:`search`'s."""
+    needed).  The strategy is identical to :func:`search`'s.
+
+    ``comm`` (optional :class:`repro.comm.selector.CommModel`): WAN-latency-
+    aware cut pricing — the tables are assumed to have been profiled with
+    the same model, so the DP's collective and transfer costs agree."""
     t0 = time.perf_counter()
-    ctx = _DPContext(cluster, tables, cfg)
+    ctx = _DPContext(cluster, tables, cfg, comm)
     engine = cfg.engine if cfg.engine != "auto" else "vectorized"
     if engine not in ("vectorized", "oracle"):
         raise ValueError(f"unknown search engine {cfg.engine!r}")
@@ -916,7 +934,8 @@ def instrumented_search(cluster: HeteroCluster, tables: ProfileTables,
 
 def search(cluster: HeteroCluster, tables: ProfileTables, mb_tokens: int,
            cfg: SearchConfig = SearchConfig(),
-           verbose: bool = False) -> ParallelStrategy:
+           verbose: bool = False, comm=None) -> ParallelStrategy:
     """Full HAPT search (see :func:`instrumented_search` for the stats-
     returning variant used by benchmarks)."""
-    return instrumented_search(cluster, tables, mb_tokens, cfg, verbose)[0]
+    return instrumented_search(cluster, tables, mb_tokens, cfg, verbose,
+                               comm=comm)[0]

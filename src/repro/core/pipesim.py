@@ -52,6 +52,9 @@ class SimResult:
     stage_intra_comm: List[float] = field(default_factory=list)
     # exposed intra-op collective time per stage over the whole step (the
     # non-overlapped share of TP all-reduce / DP sync inside each F/B op)
+    link_busy: Dict[str, float] = field(default_factory=dict)
+    # contended engine only: seconds each physical link (by occupancy key,
+    # "<link>/fwd" or "<link>/bwd") had at least one active transfer
 
     @property
     def overlap_ratio(self) -> float:
@@ -248,6 +251,89 @@ def _fast_result(t_f, t_b, c_links, B, warmup_counts, cb, in_f, in_b
 
 
 # ---------------------------------------------------------------------------
+# Contended engine (fair-share link occupancy via repro.comm.netsim)
+# ---------------------------------------------------------------------------
+
+
+def _simulate_contended(t_f, t_b, c_links, B, warmup_counts, cb, in_f, in_b,
+                        link_ids: Sequence[str],
+                        sync_work) -> SimResult:
+    """The 1F1B DAG solved under *contention*: comm ops are occupancy
+    intervals on named physical links (``link_ids[i]`` per stage boundary;
+    equal ids share capacity), solved by the event-driven fair-share netsim.
+    Boundaries that never share a link reproduce the graph engine's timing;
+    cluster-crossing boundaries all ride the same ``"wan"`` id and slow each
+    other down — as do optional per-stage gradient syncs (``sync_work``
+    entries ``(stage, link_id, seconds)``, released after the stage's last
+    backward, occupying both link directions like a real allreduce)."""
+    from repro.comm.netsim import SimNode, run as netsim_run
+
+    S = len(t_f)
+    nodes: List = []
+    deps_of: Dict[Node, List[Node]] = {}
+
+    def add(node: Node, work: float, deps, links=()):
+        deps = tuple(d for d in deps if d is not None)
+        nodes.append(SimNode(node, work, deps, tuple(links)))
+        deps_of[node] = list(deps)
+
+    for i in range(S):
+        order = _stage_order(i, S, B, warmup_counts[i])
+        prev: Optional[Node] = None
+        for kind, j in order:
+            node = (kind, j, i)
+            data_dep: Optional[Node] = None
+            if kind == "F" and i > 0:
+                data_dep = ("CF", j, i - 1)
+            elif kind == "B":
+                data_dep = ("CB", j, i) if i < S - 1 else ("F", j, i)
+            add(node, t_f[i] if kind == "F" else t_b[i], (prev, data_dep))
+            prev = node
+    for i in range(S - 1):
+        for j in range(B):
+            add(("CF", j, i), c_links[i],
+                (("F", j, i), ("CF", j - 1, i) if j > 0 else None),
+                links=(f"{link_ids[i]}/fwd",))
+            add(("CB", j, i), cb[i],
+                (("B", j, i + 1), ("CB", j - 1, i) if j > 0 else None),
+                links=(f"{link_ids[i]}/bwd",))
+    for stage, link, secs in (sync_work or ()):
+        add(("SYNC", 0, stage), float(secs), (("B", B - 1, stage),),
+            links=(f"{link}/fwd", f"{link}/bwd"))
+
+    res = netsim_run(nodes)
+
+    start = dict(res.start)
+    dur = {nid: res.end[nid] - res.start[nid] for nid in res.end}
+    makespan = res.makespan
+    stage_compute = [0.0] * S
+    for (kind, j, i), d in dur.items():
+        if kind in ("F", "B"):
+            stage_compute[i] += d
+    comm_total = sum(d for (k, _, _), d in dur.items()
+                     if k in ("CF", "CB", "SYNC"))
+    comm_exposed = 0.0
+    for v, ps in deps_of.items():
+        if v[0] not in ("F", "B") or not ps:
+            continue
+        comm_ends = [res.end[p] for p in ps if p[0] in ("CF", "CB")]
+        other_ends = [res.end[p] for p in ps if p[0] in ("F", "B")]
+        if comm_ends:
+            exposed = max(comm_ends) - max(other_ends, default=0.0)
+            if exposed > 1e-12:
+                comm_exposed += exposed
+    comm_exposed = min(comm_exposed, comm_total)
+    stage_comm_blocking = [0.0] * S
+    stage_idle = [makespan - stage_compute[i] - stage_comm_blocking[i]
+                  for i in range(S)]
+    stage_intra = [B * (in_f[i] + in_b[i]) for i in range(S)]
+    return SimResult(makespan, start, dur, stage_compute, stage_comm_blocking,
+                     stage_idle, comm_total, comm_exposed,
+                     list(warmup_counts), stage_intra,
+                     link_busy=dict(res.link_busy))
+
+
+# ---------------------------------------------------------------------------
 # Reference graph simulator
 # ---------------------------------------------------------------------------
 
@@ -380,10 +466,12 @@ class SimMemoStats:
     misses: int = 0
     fast_path: int = 0       # misses solved by the closed-form recurrence
     graph_path: int = 0      # misses solved by the reference graph engine
+    contended_path: int = 0  # misses solved by the fair-share netsim engine
 
     def snapshot(self) -> "SimMemoStats":
         return SimMemoStats(self.hits, self.misses,
-                            self.fast_path, self.graph_path)
+                            self.fast_path, self.graph_path,
+                            self.contended_path)
 
 
 SIM_MEMO_MAXSIZE = 64
@@ -409,7 +497,11 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
              intra_b: Optional[Sequence[float]] = None,
              intra_overlap: float = 0.0,
              fast: Optional[bool] = None,
-             cache: bool = True) -> SimResult:
+             cache: bool = True,
+             contention: bool = False,
+             link_ids: Optional[Sequence[str]] = None,
+             sync_work: Optional[Sequence[Tuple[int, str, float]]] = None
+             ) -> SimResult:
     """Simulate one training step (B microbatches through S stages).
 
     ``intra_f``/``intra_b`` (optional, per stage, seconds): intra-operator
@@ -426,9 +518,25 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
     ``cache``: serve repeated signatures from a bounded memo (the returned
     SimResult is shared — treat it as immutable).  Pass False to bypass
     (e.g. when benchmarking the engines themselves).
+
+    ``contention=True`` replaces the isolated per-link scalars with the
+    fair-share occupancy model (``repro.comm.netsim``): ``link_ids`` names
+    each boundary's *physical* link (equal ids contend — e.g. every
+    cluster-crossing boundary on the shared ``"wan"``; default: all
+    distinct, which reproduces uncontended timing) and ``sync_work``
+    injects per-stage gradient syncs ``(stage, link_id, seconds)`` that
+    contend with in-flight activation traffic.  ``contention=False``
+    (default) leaves the legacy engines untouched — bit-identical results.
     """
     S, B = len(t_f), int(n_microbatches)
     assert len(c_links) == S - 1 and len(warmup_counts) == S
+    if contention and no_overlap:
+        raise ValueError("contention=True models overlapped sends; "
+                         "no_overlap has no contended interpretation")
+    if contention and fast is True:
+        raise ValueError("contention=True has no closed-form fast path")
+    if link_ids is not None and len(link_ids) != S - 1:
+        raise ValueError(f"link_ids needs {S - 1} entries, got {len(link_ids)}")
     key = None
     if cache:
         key = (tuple(float(x) for x in t_f), tuple(float(x) for x in t_b),
@@ -438,7 +546,10 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
                tuple(float(x) for x in c_links_bwd),
                None if intra_f is None else tuple(float(x) for x in intra_f),
                None if intra_b is None else tuple(float(x) for x in intra_b),
-               float(intra_overlap), fast)
+               float(intra_overlap), fast, bool(contention),
+               None if link_ids is None else tuple(link_ids),
+               None if sync_work is None else
+               tuple((int(s), str(l), float(w)) for s, l, w in sync_work))
         hit = _SIM_MEMO.get(key)
         if hit is not None:
             _SIM_STATS.hits += 1
@@ -455,6 +566,18 @@ def simulate(t_f: Sequence[float], t_b: Sequence[float],
         else [0.0] * S
     tf = [t + x for t, x in zip(t_f, in_f)]
     tb = [t + x for t, x in zip(t_b, in_b)]
+
+    if contention:
+        _SIM_STATS.contended_path += 1
+        ids = list(link_ids) if link_ids is not None \
+            else [f"link{i}" for i in range(S - 1)]
+        res = _simulate_contended(tf, tb, list(c_links), B, warmup_counts,
+                                  cb, in_f, in_b, ids, sync_work)
+        if cache:
+            _SIM_MEMO[key] = res
+            if len(_SIM_MEMO) > SIM_MEMO_MAXSIZE:
+                _SIM_MEMO.popitem(last=False)
+        return res
 
     eligible = fast_path_eligible(warmup_counts, no_overlap)
     if fast is True and not eligible:

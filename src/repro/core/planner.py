@@ -17,6 +17,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Sequence
 
+from repro.comm.selector import CommConfig, CommModel
 from repro.configs.base import ArchConfig
 from repro.core.cluster import HeteroCluster
 from repro.core.costmodel import CostModelConfig
@@ -39,6 +40,12 @@ class PlannerConfig:
     ``intra_op_max_degree``: prune enumerated tensor-parallel widths to
     ``tp <= intra_op_max_degree`` (0 = unrestricted); dominated variants are
     always eliminated before the DP.
+    ``comm``: a :class:`repro.comm.selector.CommConfig` turns on
+    heterogeneity-aware collective pricing — the search then chooses plans
+    under the per-collective *selected* algorithm's cost (topology-aware
+    ring / halving-doubling / two-level hierarchical) and WAN-latency-aware
+    cut pricing.  ``None`` (default) keeps the legacy scalar pricing
+    bit-identical.
     """
     granularity: int = 128            # target #layers (fine-grained)
     n_microbatches: int = 128
@@ -49,6 +56,7 @@ class PlannerConfig:
     max_submesh_devices: int = 0   # 0 = unrestricted
     intra_op: bool = False
     intra_op_max_degree: int = 0   # 0 = unrestricted
+    comm: Optional[CommConfig] = None
     cost: CostModelConfig = field(default_factory=CostModelConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
     measure_fn: Optional[Callable] = None   # on-hardware profiling hook
@@ -103,20 +111,24 @@ class HAPTPlanner:
             layers = build_layers(ops, cfg.granularity, z=cfg.z_heavy)
         t_layer = time.time()
 
+        comm_model = None
+        if cfg.comm is not None and cfg.comm.enabled:
+            comm_model = CommModel(self.cluster, cfg.comm)
+
         profiler = ZeroRedundantProfiler(
             self.cluster, layers, mb_tokens, cost_cfg=cfg.cost, rho=cfg.rho,
             min_submesh_devices=cfg.min_submesh_devices,
             max_submesh_devices=cfg.max_submesh_devices,
             measure_fn=cfg.measure_fn, cost_cache=profile_cache,
             intra_op=joint, intra_op_max_degree=cfg.intra_op_max_degree,
-            amortize_microbatches=B if joint else 0)
+            amortize_microbatches=B if joint else 0, comm=comm_model)
         tables = profiler.profile()
         t_prof = time.time()
 
         # call-scoped copy: plan() must not mutate the caller's SearchConfig
         scfg = dataclasses.replace(cfg.search, n_microbatches=B)
         strategy = search(self.cluster, tables, mb_tokens, scfg,
-                          verbose=verbose)
+                          verbose=verbose, comm=comm_model)
         t_search = time.time()
 
         strategy.planner_meta.update({
@@ -130,6 +142,11 @@ class HAPTPlanner:
             "time_search_s": t_search - t_prof,
             "cluster": self.cluster.describe(),
         })
+        if comm_model is not None:
+            # only comm-aware runs record the comm provenance: the default
+            # path's strategy JSON stays bit-identical to the pre-comm
+            # pipeline (the DESIGN.md off-state equivalence guarantee)
+            strategy.planner_meta["comm"] = dataclasses.asdict(cfg.comm)
         if verbose:
             print(strategy.describe())
         return strategy

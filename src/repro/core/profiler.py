@@ -106,7 +106,8 @@ class ZeroRedundantProfiler:
                  cost_cache: Optional[Dict] = None,
                  intra_op: bool = False,
                  intra_op_max_degree: int = 0,
-                 amortize_microbatches: int = 0):
+                 amortize_microbatches: int = 0,
+                 comm=None):
         """``cost_cache``: a caller-owned stage-cost cache shared ACROSS
         profiler invocations (the elastic runtime's table-reuse API).  Keys
         fingerprint everything the cost model reads — layer-class sequence,
@@ -120,7 +121,10 @@ class ZeroRedundantProfiler:
         joint two-level search (see module docstring).
         ``intra_op_max_degree``: cap on enumerated tp widths (0 = all).
         ``amortize_microbatches``: B used to amortize the per-step gradient
-        sync into the per-microbatch data-axis cost (0 = don't price it)."""
+        sync into the per-microbatch data-axis cost (0 = don't price it).
+        ``comm``: optional :class:`repro.comm.selector.CommModel` — price
+        collectives under the selected algorithm (cache keys carry its
+        fingerprint so comm-aware and legacy entries never collide)."""
         self.cluster = cluster
         self.layers = list(layers)
         self.mb_tokens = mb_tokens
@@ -134,6 +138,7 @@ class ZeroRedundantProfiler:
         self.intra_op = intra_op
         self.intra_op_max_degree = intra_op_max_degree
         self.amortize_microbatches = amortize_microbatches
+        self.comm = comm
 
     def meshes(self) -> List[Submesh]:
         out = []
@@ -172,7 +177,11 @@ class ZeroRedundantProfiler:
                     sub.device, sub.node_efficiencies,
                     sub.intra_node_bw, sub.inter_node_bw,
                     mesh.n, mesh.m, self.mb_tokens, self.cost_cfg,
-                    self.amortize_microbatches if self.intra_op else 0)
+                    self.amortize_microbatches if self.intra_op else 0,
+                    # sub-scoped comm identity: a fleet change elsewhere must
+                    # not evict this sub-cluster's comm-aware entries
+                    None if self.comm is None
+                    else self.comm.sub_fingerprint(mesh.cluster_idx))
         out: Dict[Optional[int], StageCost] = {}
         missing = [tp for tp in tps if (*base_key, tp) not in cache]
         for tp in tps:
@@ -187,7 +196,7 @@ class ZeroRedundantProfiler:
             cands = {c.tp: c for c in intra_op_candidates(
                 self.layers[i:j], sub, mesh, self.mb_tokens, self.cost_cfg,
                 uneven=True, amortize_microbatches=self.amortize_microbatches,
-                max_degree=self.intra_op_max_degree)}
+                max_degree=self.intra_op_max_degree, comm=self.comm)}
             for tp in missing:
                 if tp not in cands:
                     continue
@@ -196,7 +205,7 @@ class ZeroRedundantProfiler:
                 stats.n_unique_profiled += 1
         else:
             cost = stage_cost(self.layers[i:j], sub, mesh, self.mb_tokens,
-                              self.cost_cfg, self.measure_fn)
+                              self.cost_cfg, self.measure_fn, comm=self.comm)
             cache[(*base_key, None)] = cost
             out[None] = cost
             stats.n_unique_profiled += 1

@@ -53,6 +53,12 @@ class IntraOpPlan:
     sync_time: float = 0.0             # share of comm_time_b that is amortized
                                        # per-step gradient sync (s); 0 when the
                                        # search did not price the data axis
+    ar_algo: Optional[str] = None      # collective algorithm selected for the
+                                       # TP all-reduce (repro.comm.selector);
+                                       # None = legacy implicit flat ring
+    sync_algo: Optional[str] = None    # ditto for the DP gradient sync
+    sync_compressed: bool = False      # sync priced with int8 block
+                                       # quantization (error-feedback path)
 
     @property
     def degree(self) -> int:
@@ -175,6 +181,10 @@ class ParallelStrategy:
             if s.intra_op is not None and s.intra_op.is_uneven:
                 r = "/".join(f"{x:.2f}" for x in s.intra_op.shard_ratios)
                 intra = f" shards[{r}]"
+            if s.intra_op is not None and s.intra_op.sync_algo:
+                intra += f" sync={s.intra_op.sync_algo}"
+                if s.intra_op.sync_compressed:
+                    intra += "+int8"
             lines.append(
                 f"  stage{i}: layers[{s.layer_start}:{s.layer_end}] "
                 f"cluster{s.cluster_idx} mesh({s.mesh_n}x{s.mesh_m}) tp={s.tp} dp={s.dp}"

@@ -217,8 +217,44 @@ def intra_op_mesh_axes(plan: IntraOpPlan) -> Tuple[Tuple[str, int], ...]:
     return (("data", plan.dp), ("model", plan.tp))
 
 
-def mesh_from_intra_op(plan: IntraOpPlan, devices: Optional[Sequence] = None
-                       ) -> Mesh:
+def hierarchical_sync_axes(plan: IntraOpPlan, mesh_n: int
+                           ) -> Tuple[Tuple[str, int], ...]:
+    """Mesh layout that lowers the *two-level hierarchical* gradient sync
+    (``plan.sync_algo == "hierarchical"``) of a stage spanning ``mesh_n``
+    nodes: the flat ``("data", dp)`` axis splits into ``("node", mesh_n)``
+    x ``("data", dp // mesh_n)`` so the reduce's phases map onto named
+    axes — reduce-scatter over ``data`` (intra-node fabric), cross-node
+    allreduce over ``node`` (inter-node fabric), allgather over ``data``.
+    Requires ``mesh_n`` to divide ``dp`` (it does by construction:
+    ``dp = mesh_n * per_node``)."""
+    validate_intra_op_plan(plan)
+    if mesh_n < 1 or plan.dp % mesh_n != 0:
+        raise ValueError(
+            f"mesh_n={mesh_n} does not factor dp={plan.dp}")
+    return (("node", mesh_n), ("data", plan.dp // mesh_n),
+            ("model", plan.tp))
+
+
+def sync_collective_phases(plan: IntraOpPlan, mesh_n: int
+                           ) -> Tuple[Tuple[str, str], ...]:
+    """The gradient sync as (collective, mesh axis) phases, matching the
+    algorithm the planner priced (``repro.comm.algorithms``):
+
+    - hierarchical (multi-node stage): reduce-scatter over ``data``,
+      allreduce over ``node``, allgather over ``data``;
+    - anything else (flat ring / rhd / legacy): one allreduce over the flat
+      data axis.
+
+    Executors iterate these phases verbatim; the axis names refer to
+    :func:`hierarchical_sync_axes` / :func:`intra_op_mesh_axes`."""
+    if plan.sync_algo == "hierarchical" and mesh_n > 1:
+        return (("reduce_scatter", "data"), ("all_reduce", "node"),
+                ("all_gather", "data"))
+    return (("all_reduce", "data"),)
+
+
+def mesh_from_intra_op(plan: IntraOpPlan, devices: Optional[Sequence] = None,
+                       *, hierarchy_nodes: Optional[int] = None) -> Mesh:
     """Materialize a stage's ``IntraOpPlan`` as a jax ``Mesh`` with axes
     ``("data", "model")`` of shape ``(dp, tp)``.  ``devices`` defaults to
     ``jax.devices()`` and must supply at least ``plan.n_devices`` entries;
@@ -229,8 +265,14 @@ def mesh_from_intra_op(plan: IntraOpPlan, devices: Optional[Sequence] = None
     node first (ascending ``SubCluster.node_scales``), and data-shard ``i``
     runs on ``devices[i*tp:(i+1)*tp]`` — so the caller must order
     ``devices`` by ascending node efficiency or the uneven shards land on
-    the wrong nodes and execute *slower* than even sharding."""
-    axes = intra_op_mesh_axes(plan)
+    the wrong nodes and execute *slower* than even sharding.
+
+    ``hierarchy_nodes``: materialize the three-axis
+    :func:`hierarchical_sync_axes` layout instead (stages whose gradient
+    sync lowers to the two-level hierarchy) — same device order, the data
+    axis merely split as ``node x data``."""
+    axes = hierarchical_sync_axes(plan, hierarchy_nodes) \
+        if hierarchy_nodes is not None else intra_op_mesh_axes(plan)
     if devices is None:
         devices = jax.devices()
     need = plan.n_devices

@@ -44,7 +44,9 @@ from repro.core.planner import HAPTPlanner, PlannerConfig
 from repro.core.strategy import ParallelStrategy
 from repro.runtime.events import BandwidthShift, ClusterEvent, apply_event
 from repro.runtime.replay import project_step, recompute_c_links
-from repro.runtime.telemetry import StepObservation, TelemetryCalibrator
+from repro.runtime.telemetry import (
+    CROSS, StepObservation, TelemetryCalibrator,
+)
 
 
 @dataclass
@@ -264,6 +266,30 @@ class ElasticController:
         return self._react(calibrated, step,
                            f"telemetry drift {drift:.0%}", bandwidth_only=False)
 
+    def on_comm_time(self, step: int, link: str, predicted_s: float,
+                     measured_s: float) -> Optional[ReplanDecision]:
+        """Comm telemetry hook: fold one measured transfer/collective time
+        against its prediction for a bandwidth tier (``"cross"`` or a
+        sub-cluster name — see ``telemetry.observe_comm``).  When the
+        calibrated fleet drifts past the threshold the decision ladder runs
+        as a bandwidth-only change; a re-search then rebuilds the
+        ``CommModel`` from the calibrated tiers, so collective algorithms
+        are *re-selected* under the observed bandwidths (a congested WAN
+        tips ring syncs into the two-level hierarchy, and vice versa)."""
+        if self.strategy is None:
+            return None
+        self.telemetry.observe_comm(self.plan_cluster, link,
+                                    predicted_s, measured_s)
+        drift = self.telemetry.drift(self.cluster)
+        if drift <= self.cfg.drift_threshold:
+            return None
+        calibrated = self.telemetry.calibrated(self.cluster)
+        if cluster_fingerprint(calibrated) == cluster_fingerprint(self.cluster):
+            return None
+        return self._react(calibrated, step,
+                           f"comm drift on {link} ({drift:.0%})",
+                           bandwidth_only=True)
+
     def on_straggler(self, step: int, step_time: float, ewma: float
                      ) -> Optional[ReplanDecision]:
         """Drop-in for ``Trainer(on_straggler=...)`` — a sustained skew is a
@@ -382,6 +408,13 @@ class ElasticController:
         for s in new_cluster.subclusters:
             if s.name in old_eff and old_eff[s.name] != s.device.efficiency:
                 self.telemetry.reset(s.name)
+        # same rule for bandwidth tiers (comm calibration)
+        if new_cluster.cross_bw != self.cluster.cross_bw:
+            self.telemetry.reset_bandwidth(CROSS)
+        old_ib = {s.name: s.inter_node_bw for s in self.cluster.subclusters}
+        for s in new_cluster.subclusters:
+            if s.name in old_ib and old_ib[s.name] != s.inter_node_bw:
+                self.telemetry.reset_bandwidth(s.name)
         self.cluster = new_cluster
         if adopted is not None:
             self.strategy = adopted

@@ -101,10 +101,21 @@ def sync_priced_step(strategy: ParallelStrategy, cluster: HeteroCluster,
     ``counts_fn(t_per_stage, c_links, B) -> warm-up counts`` selects the
     schedule under referee pricing (default H-1F1B) — the api facade passes
     its config's named scheduler here so priced numbers match the lowering.
+
+    Comm-aware plans: a stage whose sync was priced under a *selected*
+    collective algorithm (``IntraOpPlan.sync_algo`` set, amortized into
+    ``t_b``) keeps the planner's charge — that algorithm is what actually
+    runs, so topping it back up to the flat ring would erase a real
+    advantage the selection earned.  The flat-ring recompute only applies
+    to stages whose search never amortized the sync.
     """
     B = strategy.n_microbatches
     t_b = []
     for s in strategy.stages:
+        io = s.intra_op
+        if io is not None and io.sync_algo is not None and io.sync_time > 0:
+            t_b.append(s.t_b)      # selected-algorithm charge already in t_b
+            continue
         sub = cluster.subclusters[s.cluster_idx]
         params = sum(layers[li].param_bytes
                      for li in range(s.layer_start, s.layer_end))
@@ -113,7 +124,7 @@ def sync_priced_step(strategy: ParallelStrategy, cluster: HeteroCluster,
             sync_mb = params * 2 * (s.dp - 1) / s.dp / bw / B
         else:
             sync_mb = 0.0
-        already = s.intra_op.sync_time if s.intra_op is not None else 0.0
+        already = io.sync_time if io is not None else 0.0
         t_b.append(s.t_b + max(0.0, sync_mb - already))
     t_f = [s.t_f for s in strategy.stages]
     counts = (counts_fn or h1f1b_counts)(
@@ -126,7 +137,14 @@ def recompute_c_links(strategy: ParallelStrategy, plan_cluster: HeteroCluster,
                       true_cluster: HeteroCluster,
                       layers: Sequence[Layer]) -> List[float]:
     """Inter-stage comm times under the true link bandwidths (boundary
-    activation bytes are a property of the layering, not the fleet)."""
+    activation bytes are a property of the layering, not the fleet).
+
+    A comm-aware strategy (``planner_meta["comm"]`` with latency pricing
+    on) was searched with the WAN's per-transfer latency in every
+    cluster-crossing cut; the recompute keeps that term so retuned warm-up
+    counts and projections are priced like the plan itself."""
+    meta_comm = strategy.planner_meta.get("comm")
+    wan_lat = bool(meta_comm) and meta_comm.get("p2p_latency", True)
     out = []
     for i in range(strategy.n_stages - 1):
         s, nxt = strategy.stages[i], strategy.stages[i + 1]
@@ -134,10 +152,10 @@ def recompute_c_links(strategy: ParallelStrategy, plan_cluster: HeteroCluster,
         src = _true_sub(plan_cluster, true_cluster, s.cluster_idx)
         dst = _true_sub(plan_cluster, true_cluster, nxt.cluster_idx)
         if src is not None and dst is not None and src.name == dst.name:
-            bw = src.inter_node_bw
+            out.append(cut / src.inter_node_bw)
         else:
-            bw = true_cluster.cross_bw
-        out.append(cut / bw)
+            out.append(cut / true_cluster.cross_bw
+                       + (true_cluster.cross_latency if wan_lat else 0.0))
     return out
 
 

@@ -11,14 +11,31 @@ EWMA-smoothed per sub-cluster.  ``calibrated(cluster)`` returns a cluster
 value with the estimates applied (only when outside the deadband, so noise
 does not thrash the plan cache), and ``drift(cluster)`` is the controller's
 replan trigger signal.
+
+**Bandwidth tiers** calibrate the same way (:meth:`observe_comm`): a
+measured transfer/collective time against its prediction yields a per-tier
+bandwidth estimate —
+
+    bw_est = bw_assumed_at_plan_time * t_predicted / t_measured
+
+for the ``"cross"`` WAN link or a named sub-cluster's inter-node fabric.
+Since the comm subsystem selects collective algorithms *from* these
+bandwidths, a calibrated shift propagates through ``calibrated()`` ->
+controller replan -> fresh ``CommModel`` -> re-selected algorithms (e.g. a
+congested WAN tips the gradient sync from ring to two-level hierarchical).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.cluster import HeteroCluster, set_efficiency, subcluster_index
+from repro.core.cluster import (
+    HeteroCluster, set_efficiency, set_inter_node_bw, subcluster_index,
+    with_cross_bw,
+)
 from repro.core.strategy import ParallelStrategy
+
+CROSS = "cross"        # the tier name of the shared cross-cluster WAN link
 
 
 @dataclass
@@ -35,6 +52,8 @@ class TelemetryCalibrator:
         self.deadband = deadband
         self.min_efficiency = min_efficiency
         self._eff: Dict[str, float] = {}       # sub-cluster name -> EWMA estimate
+        self._bw: Dict[str, float] = {}        # CROSS | sub-cluster name ->
+                                               # EWMA bytes/s (inter-node tier)
         self.n_observations = 0
 
     # -- folding measurements ------------------------------------------------
@@ -70,21 +89,59 @@ class TelemetryCalibrator:
                 eff = cluster.subclusters[i].device.efficiency
                 self._fold(name, eff, eff * ratio)
 
+    def observe_comm(self, cluster: HeteroCluster, link: str,
+                     predicted_s: float, measured_s: float):
+        """Fold one measured transfer/collective against its prediction for
+        a bandwidth tier: ``link`` is :data:`CROSS` (the WAN) or a
+        sub-cluster name (its inter-node fabric).  ``cluster`` must be the
+        fleet the prediction was priced on — its bandwidth anchors the
+        estimate, exactly like efficiency calibration."""
+        if predicted_s <= 0 or measured_s <= 0:
+            return
+        self.n_observations += 1
+        if link == CROSS:
+            assumed = cluster.cross_bw
+        else:
+            assumed = cluster.subclusters[
+                subcluster_index(cluster, link)].inter_node_bw
+        est = max(1.0, assumed * predicted_s / measured_s)
+        prev = self._bw.get(link, assumed)
+        self._bw[link] = (1 - self.alpha) * prev + self.alpha * est
+
     # -- reading the calibration --------------------------------------------
 
     def efficiency(self, name: str, default: float = 1.0) -> float:
         return self._eff.get(name, default)
 
+    def bandwidth(self, link: str, default: float = 0.0) -> float:
+        """Calibrated bytes/s estimate for a tier (see :meth:`observe_comm`)."""
+        return self._bw.get(link, default)
+
+    def _bw_current(self, cluster: HeteroCluster, link: str
+                    ) -> Optional[float]:
+        if link == CROSS:
+            return cluster.cross_bw
+        try:
+            return cluster.subclusters[
+                subcluster_index(cluster, link)].inter_node_bw
+        except KeyError:
+            return None        # the sub-cluster left the fleet
+
     def drift(self, cluster: HeteroCluster) -> float:
-        """Largest relative gap between a sub-cluster's modeled efficiency
-        and the calibrated estimate.  The controller replans when this
-        exceeds its threshold."""
+        """Largest relative gap between the fleet's modeled parameters
+        (per-sub-cluster efficiency, per-tier bandwidth) and the calibrated
+        estimates.  The controller replans when this exceeds its
+        threshold."""
         worst = 0.0
         for s in cluster.subclusters:
             if s.name not in self._eff:
                 continue
             cur = s.device.efficiency
             worst = max(worst, abs(self._eff[s.name] - cur) / max(cur, 1e-9))
+        for link, est in self._bw.items():
+            cur = self._bw_current(cluster, link)
+            if cur is not None:
+                worst = max(worst, abs(est - cur) / max(cur, 1e-9))
         return worst
 
     def calibrated(self, cluster: HeteroCluster) -> HeteroCluster:
@@ -99,11 +156,28 @@ class TelemetryCalibrator:
             cur = s.device.efficiency
             if abs(est - cur) / max(cur, 1e-9) > self.deadband:
                 out = set_efficiency(out, s.name, est)
+        for link, est in self._bw.items():
+            cur = self._bw_current(out, link)
+            if cur is None:
+                continue
+            if abs(est - cur) / max(cur, 1e-9) > self.deadband:
+                out = with_cross_bw(out, est) if link == CROSS \
+                    else set_inter_node_bw(out, link, est)
         return out
 
     def reset(self, name: Optional[str] = None):
         """Forget estimates (e.g. after hardware replacement)."""
         if name is None:
             self._eff.clear()
+            self._bw.clear()
         else:
             self._eff.pop(name, None)
+            self._bw.pop(name, None)
+
+    def reset_bandwidth(self, link: Optional[str] = None):
+        """Forget bandwidth estimates only (a committed bandwidth change
+        supersedes the EWMA history for that tier)."""
+        if link is None:
+            self._bw.clear()
+        else:
+            self._bw.pop(link, None)

@@ -1,0 +1,610 @@
+"""repro.comm: topology construction, algorithm cost crossover, selector,
+netsim contention, the contention-off bit-equivalence guarantee, and the
+ISSUE 5 acceptance (fig10 3 Gbps: auto-selected two-level hierarchical
+allreduce beats the forced flat ring end-to-end)."""
+import copy
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.comm import netsim
+from repro.comm.algorithms import (
+    CollectiveAlgorithm, CollectiveCost, get_algorithm, register_collective,
+)
+from repro.comm.selector import (
+    QUANT_BLOCK, CommConfig, CommModel, boundary_link_ids,
+    collective_breakdown, compressed_wire_bytes,
+)
+from repro.comm.topology import (
+    CROSS_LINK, CommGroup, Link, build_topology, fingerprint,
+)
+from repro.core.cluster import (
+    A100_40G, GBPS, V100_32G, HeteroCluster, SubCluster,
+    paper_case_study_cluster, set_node_efficiencies, with_cross_bw,
+)
+from repro.core.pipesim import clear_sim_memo, simulate
+from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.configs import get_config
+
+FIG10_BWS = [3, 4, 5, 7, 10]          # benchmarks/fig10_bandwidth.py sweep
+
+
+def fig10_cluster(cross_gbps: float = 3.0) -> HeteroCluster:
+    """The fig10 sweep's fleet shape (2x8 A100 + 2x8 V100)."""
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A100", 2, 8, A100_40G, 300e9, 200 * GBPS),
+            SubCluster("V100", 2, 8, V100_32G, 150e9, 200 * GBPS)),
+        cross_bw=cross_gbps * GBPS)
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+
+def canonical_clusters():
+    from repro.api import registry
+    return [(name, registry.resolve("cluster", name)())
+            for name in registry.available("cluster")]
+
+
+def test_topology_from_every_canonical_registry_cluster():
+    for name, cluster in canonical_clusters():
+        topo = build_topology(cluster)
+        assert len(topo.links) == 2 * len(cluster.subclusters) + 1, name
+        for i, sub in enumerate(cluster.subclusters):
+            assert topo.intra_link(i).bandwidth == sub.intra_node_bw
+            assert topo.inter_link(i).bandwidth == sub.inter_node_bw
+            assert topo.intra_link(i).latency == 0.0
+        assert topo.cross_link().bandwidth == cluster.cross_bw
+        assert topo.cross_link().latency == cluster.cross_latency
+        # fingerprint is a pure function of the cluster value
+        assert fingerprint(topo) == fingerprint(build_topology(cluster))
+
+
+def test_p2p_link_matches_cluster_link_bw():
+    for _, cluster in canonical_clusters():
+        topo = build_topology(cluster)
+        C = len(cluster.subclusters)
+        for a in range(C):
+            for b in range(C):
+                assert topo.p2p_link(a, b).bandwidth == cluster.link_bw(a, b)
+
+
+def test_fingerprint_tracks_everything_the_comm_model_reads():
+    cl = paper_case_study_cluster()
+    fp = fingerprint(build_topology(cl))
+    assert fingerprint(build_topology(with_cross_bw(cl, 3 * GBPS))) != fp
+    mixed = set_node_efficiencies(cl, "meshA100", (1.0, 0.6))
+    assert fingerprint(build_topology(mixed)) != fp
+
+
+def test_comm_model_fingerprint_tracks_config():
+    cl = paper_case_study_cluster()
+    base = CommModel(cl).fingerprint()
+    assert CommModel(cl, CommConfig(algorithms=("ring",))).fingerprint() != base
+    assert CommModel(cl, CommConfig(compressed=True)).fingerprint() != base
+    assert CommModel(cl).fingerprint() == base
+
+
+# ---------------------------------------------------------------------------
+# Algorithm zoo: closed forms + crossover
+# ---------------------------------------------------------------------------
+
+
+def test_ring_matches_legacy_scalar_on_single_tier():
+    """On a flat latency-free tier the ring IS the legacy pricing —
+    the same float expression, bit for bit."""
+    link = Link("intra:x", "nvlink", 300e9)
+    for n in (2, 4, 8):
+        for nbytes in (1e6, 512e6):
+            got = get_algorithm("ring").cost(
+                CommGroup(((n, link),)), nbytes).seconds
+            assert got == nbytes * 2.0 * (n - 1) / n / 300e9
+
+
+def test_selector_prefers_ring_on_uniform_links():
+    """Single-tier groups: hierarchical is structurally unsupported; and on
+    a two-tier group with equal latency-free bandwidth every bandwidth-
+    optimal algorithm degenerates to the same cost, so the tie goes to the
+    ring (candidate order)."""
+    cl = paper_case_study_cluster()
+    m = CommModel(cl)
+    assert m.tp_allreduce(0, 2, 64e6).algorithm == "ring"
+    assert not get_algorithm("hierarchical").supports(
+        CommGroup(((4, Link("l", "ib", 25e9)),)))
+    eq = CommGroup(((4, Link("a", "ib", 25e9)), (2, Link("b", "ib", 25e9))))
+    sel = m.select(eq, 256e6)
+    assert sel.algorithm == "ring"
+    hier = get_algorithm("hierarchical").cost(eq, 256e6).seconds
+    assert sel.seconds == pytest.approx(hier)     # bandwidth-optimal tie
+
+
+def test_hierarchical_wins_as_cross_bw_drops_through_fig10_sweep():
+    """Cost crossover on the cross-cluster sync group: the hierarchical
+    advantage over the flat ring grows monotonically as the WAN slows
+    through the fig10 sweep, and the selector picks it everywhere the WAN
+    is the bottleneck."""
+    payload = 512e6
+    margins = []
+    for bw in sorted(FIG10_BWS, reverse=True):     # 10 -> 3 Gbps
+        m = CommModel(fig10_cluster(bw))
+        group = m.topology.cross_group(0, 2, 8, 2)
+        ring = get_algorithm("ring").cost(group, payload).seconds
+        hier = get_algorithm("hierarchical").cost(group, payload).seconds
+        assert hier < ring
+        assert m.select(group, payload).algorithm == "hierarchical"
+        margins.append(ring - hier)
+    assert margins == sorted(margins)              # grows as bw drops
+
+
+def test_dp_sync_selection_two_tier_beats_ring():
+    """A multi-node stage's gradient sync: the hierarchy moves only
+    1/per_node of the payload over the inter-node fabric."""
+    m = CommModel(fig10_cluster(3))
+    sel = m.dp_sync(0, n_nodes=2, per_node=8, nbytes=1e9)
+    assert sel.algorithm == "hierarchical"
+    ring = CommModel(fig10_cluster(3),
+                     CommConfig(algorithms=("ring",))).dp_sync(0, 2, 8, 1e9)
+    assert ring.algorithm == "ring"
+    assert sel.seconds < ring.seconds
+    # single-node stage: flat group, ring (exact legacy expression)
+    flat = m.dp_sync(0, n_nodes=1, per_node=8, nbytes=1e9)
+    assert flat.algorithm == "ring"
+    assert flat.seconds == 1e9 * 2.0 * 7 / 8 / 300e9
+
+
+def test_rhd_wins_latency_dominated_wan_collectives():
+    """Tiny payloads on a flat latency-heavy group: 2*log2(N) startups beat
+    the ring's 2*(N-1) (a hierarchy needs >= 2 tiers, so it cannot bid)."""
+    m = CommModel(fig10_cluster(3))
+    flat_wan = CommGroup(((8, m.topology.cross_link()),))   # 1 ms latency
+    sel = m.select(flat_wan, 8.0)                  # one scalar
+    assert sel.algorithm == "rhd"
+    ring = get_algorithm("ring").cost(flat_wan, 8.0).seconds
+    assert sel.seconds < ring
+    assert not get_algorithm("rhd").supports(
+        CommGroup(((3, Link("l", "ib", 25e9)),)))  # non-power-of-two
+
+
+def test_third_party_algorithm_registers_through_api_registry():
+    from repro.api import registry
+
+    class Free(CollectiveAlgorithm):
+        name = "free"
+
+        def supports(self, group):
+            return True
+
+        def cost(self, group, nbytes):
+            return CollectiveCost(0.0)
+
+    registry.register("collective", "free", Free())
+    try:
+        assert "free" in registry.available("collective")
+        assert get_algorithm("free").cost(None, 1).seconds == 0.0
+        sel = CommModel(paper_case_study_cluster(),
+                        CommConfig(algorithms=("ring", "free"))
+                        ).dp_sync(0, 2, 2, 1e9)
+        assert sel.algorithm == "free"
+        with pytest.raises(ValueError, match="already registered"):
+            registry.register("collective", "free", Free())
+    finally:
+        from repro.comm.algorithms import ALGORITHMS
+        ALGORITHMS.pop("free", None)
+
+
+# ---------------------------------------------------------------------------
+# Netsim: fair-share contention
+# ---------------------------------------------------------------------------
+
+
+def test_netsim_fair_share_two_transfers_double():
+    res = netsim.price_transfers(
+        [("a", ("L",), 1.0, 0.0), ("b", ("L",), 1.0, 0.0)])
+    assert res.end["a"] == pytest.approx(2.0)
+    assert res.end["b"] == pytest.approx(2.0)
+    assert res.link_busy["L"] == pytest.approx(2.0)
+
+
+def test_netsim_disjoint_links_full_rate():
+    res = netsim.price_transfers(
+        [("a", ("L1",), 1.0, 0.0), ("b", ("L2",), 1.0, 0.0)])
+    assert res.end["a"] == pytest.approx(1.0)
+    assert res.end["b"] == pytest.approx(1.0)
+
+
+def test_netsim_staggered_release_exact_processor_sharing():
+    # a alone for 1s (half done), shares for 1s (quarter each), finishes
+    # alone: a ends at 1 + 1 + 0.25? -> solve: a: work 2, release 0;
+    # b: work 1, release 1.  t in [0,1]: a does 1.  t in [1,3]: both at 1/2;
+    # b drains its 1.0 at t=3; a has 2-1-1=0 left -> also t=3.
+    res = netsim.price_transfers(
+        [("a", ("L",), 2.0, 0.0), ("b", ("L",), 1.0, 1.0)])
+    assert res.start["b"] == pytest.approx(1.0)
+    assert res.end["a"] == pytest.approx(3.0)
+    assert res.end["b"] == pytest.approx(3.0)
+
+
+def test_netsim_multilink_transfer_paced_by_most_congested():
+    # "ar" holds both directions; "x" congests fwd only -> ar runs at 1/2
+    res = netsim.price_transfers(
+        [("ar", ("l/fwd", "l/bwd"), 1.0, 0.0), ("x", ("l/fwd",), 1.0, 0.0)])
+    assert res.end["ar"] == pytest.approx(2.0)
+    assert res.end["x"] == pytest.approx(2.0)
+
+
+def test_netsim_rejects_cycles_and_unknown_deps():
+    with pytest.raises(ValueError, match="cycle"):
+        netsim.run([netsim.SimNode("a", 1.0, ("b",)),
+                    netsim.SimNode("b", 1.0, ("a",))])
+    with pytest.raises(ValueError, match="unknown"):
+        netsim.run([netsim.SimNode("a", 1.0, ("ghost",))])
+
+
+# ---------------------------------------------------------------------------
+# Contended pipesim engine
+# ---------------------------------------------------------------------------
+
+SCHED = dict(t_f=[1.0, 1.2, 0.9], t_b=[2.0, 2.2, 1.8], c=[0.3, 0.4], B=6,
+             counts=[3, 2, 1])
+
+
+def test_contended_with_distinct_links_reproduces_graph_engine():
+    g = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                 SCHED["counts"], fast=False, cache=False)
+    k = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                 SCHED["counts"], contention=True, cache=False)
+    assert k.makespan == pytest.approx(g.makespan, abs=1e-9)
+    for node, s in g.start.items():
+        assert k.start[node] == pytest.approx(s, abs=1e-9), node
+        assert k.dur[node] == pytest.approx(g.dur[node], abs=1e-9), node
+
+
+def test_contended_shared_wan_is_slower_and_sync_contends():
+    base = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                    SCHED["counts"], contention=True, cache=False)
+    shared = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                      SCHED["counts"], contention=True,
+                      link_ids=["wan", "wan"], cache=False)
+    assert shared.makespan > base.makespan
+    with_sync = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                         SCHED["counts"], contention=True,
+                         link_ids=["wan", "wan"],
+                         sync_work=[(0, "wan", 1.5)], cache=False)
+    assert with_sync.makespan > shared.makespan
+    assert ("SYNC", 0, 0) in with_sync.start
+    assert with_sync.link_busy["wan/fwd"] > shared.link_busy["wan/fwd"]
+
+
+def test_contention_flag_validation():
+    with pytest.raises(ValueError, match="no_overlap"):
+        simulate([1.0], [1.0], [], 2, [1], contention=True, no_overlap=True)
+    with pytest.raises(ValueError, match="fast"):
+        simulate([1.0], [1.0], [], 2, [1], contention=True, fast=True)
+    with pytest.raises(ValueError, match="link_ids"):
+        simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                 SCHED["counts"], contention=True, link_ids=["only-one"])
+
+
+# ---------------------------------------------------------------------------
+# contention=False bit-equivalence (the off-state guarantee)
+# ---------------------------------------------------------------------------
+
+
+def test_contention_off_is_bit_identical_to_legacy_scalar_pricing():
+    """SimResult start/dur dicts of the default (contention-less) call are
+    the legacy engines' exact output — the comm subsystem must not perturb
+    a single bit of the uncontended path."""
+    clear_sim_memo()
+    for counts in ([3, 2, 1], [1, 1, 1], [5, 3, 1]):
+        legacy = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                          counts, fast=False, cache=False)
+        off = simulate(SCHED["t_f"], SCHED["t_b"], SCHED["c"], SCHED["B"],
+                       counts, contention=False, cache=False)
+        assert off.start == legacy.start          # dict-identical, not approx
+        assert off.dur == legacy.dur
+        assert off.makespan == legacy.makespan
+        assert off.link_busy == {}                # occupancy is contended-only
+
+
+def _strip_volatile(plan_dict):
+    d = copy.deepcopy(plan_dict)
+    meta = d["strategy"]["planner_meta"]
+    for k in list(meta):
+        if k.startswith("time_"):
+            meta.pop(k)
+    return d
+
+
+def test_comm_disabled_full_pipeline_reproduces_legacy_json():
+    """costmodel -> dp_search -> pipesim -> artifacts with the comm config
+    absent vs. present-but-disabled: byte-identical Plan and LoweredPlan
+    JSON (modulo wall-clock provenance, which differs between any two
+    runs)."""
+    from repro import api
+    cl = paper_case_study_cluster()
+    mk = lambda comm: api.HarpConfig(
+        seq_len=512, global_batch=16,
+        planner=PlannerConfig(granularity=16, n_microbatches=16, comm=comm))
+    legacy = api.compile("gpt-2b", cl, mk(None))
+    off = api.compile("gpt-2b", cl, mk(CommConfig(enabled=False)))
+    a = _strip_volatile(legacy.plan.to_dict())
+    b = _strip_volatile(off.plan.to_dict())
+    a["config"]["planner"]["comm"] = b["config"]["planner"]["comm"] = None
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert legacy.lowered.to_json() == off.lowered.to_json()
+
+
+def test_comm_cache_is_sub_scoped_across_fleet_changes():
+    """A cross-bandwidth change must not evict any sub-cluster's comm-aware
+    cost-cache entries (stage collectives never leave their sub-cluster):
+    the second profile is served entirely from the warm cache."""
+    from repro.core.layering import build_layers
+    from repro.core.opgraph import build_op_sequence
+    from repro.core.profiler import ZeroRedundantProfiler
+    arch = get_config("gpt-2b")
+    layers = build_layers(build_op_sequence(arch, seq_len=512), 12, z=2)
+    cache = {}
+    cl = paper_case_study_cluster()
+
+    def profile(cluster):
+        return ZeroRedundantProfiler(
+            cluster, layers, 1024, intra_op=True, amortize_microbatches=16,
+            comm=CommModel(cluster, CommConfig()),
+            cost_cache=cache).profile().stats
+
+    profile(cl)
+    n_entries = len(cache)
+    assert n_entries > 0
+    stats2 = profile(with_cross_bw(cl, 3 * GBPS))
+    assert len(cache) == n_entries
+    assert stats2.n_unique_profiled == 0
+    # a *sub-local* change does miss (and only adds that sub's entries)
+    stats3 = profile(set_node_efficiencies(cl, "meshA100", (1.0, 0.5)))
+    assert stats3.n_unique_profiled > 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end acceptance: fig10 3 Gbps
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fig10_plans():
+    cluster = fig10_cluster(3.0)
+    arch = get_config("gpt-30b")
+    base = PlannerConfig(granularity=24, n_microbatches=32, intra_op=True,
+                         min_submesh_devices=2)
+
+    def plan(comm):
+        cfg = dataclasses.replace(base, comm=comm)
+        return HAPTPlanner(cluster, cfg).plan(arch, seq_len=1024,
+                                              global_batch=256)
+    return plan(CommConfig()), plan(CommConfig(algorithms=("ring",)))
+
+
+def test_fig10_3gbps_planner_auto_selects_hierarchical(fig10_plans):
+    auto, _ = fig10_plans
+    multi_node = [s for s in auto.stages if s.mesh_n > 1 and s.dp > 1]
+    assert multi_node, "expected multi-node stages on the fig10 fleet"
+    assert all(s.intra_op.sync_algo == "hierarchical" for s in multi_node)
+
+
+def test_fig10_3gbps_auto_beats_forced_flat_ring(fig10_plans):
+    auto, ring = fig10_plans
+    assert all(s.intra_op.sync_algo == "ring"
+               for s in ring.stages if s.dp > 1)
+    assert auto.est_step_time < ring.est_step_time
+
+
+def test_fig10_comm_meta_and_breakdown(fig10_plans):
+    auto, _ = fig10_plans
+    assert tuple(auto.planner_meta["comm"]["algorithms"]) == \
+        ("ring", "rhd", "hierarchical")
+    bd = collective_breakdown(auto, fig10_cluster(3.0), layers=[])
+    assert any(e["sync_algorithm"] == "hierarchical" for e in bd["stages"])
+    assert all(l in ("wan",) or l.startswith("ib:")
+               for l in bd["link_ids"])
+
+
+# ---------------------------------------------------------------------------
+# Compression candidate (satellite): selector accounting == real quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_candidate_wins_on_slow_wan():
+    m = CommModel(fig10_cluster(3.0), CommConfig(compressed=True))
+    sel = m.cross_sync(0, 2, 8, 2, nbytes=512e6)
+    assert sel.compressed
+    assert sel.algorithm == "hierarchical"
+    assert sel.wire_bytes < sel.payload_bytes / 3.9
+    plain = CommModel(fig10_cluster(3.0)).cross_sync(0, 2, 8, 2, 512e6)
+    assert sel.seconds < plain.seconds
+
+
+def test_compressed_wire_accounting_matches_real_quantizer():
+    compression = pytest.importorskip("repro.parallel.compression")
+    import jax.numpy as jnp
+    assert compression.BLOCK == QUANT_BLOCK
+    for n_elems in (256, 1000, 4096, 77777):
+        g = jnp.asarray(np.random.RandomState(0).randn(n_elems),
+                        dtype=jnp.float32)
+        q, scale = compression.quantize_int8(g)
+        actual_wire = q.size * q.dtype.itemsize \
+            + scale.size * scale.dtype.itemsize
+        assert actual_wire == compressed_wire_bytes(n_elems * 4.0)
+
+
+def test_error_feedback_residual_accounting_round_trip():
+    """The priced compressed path is bias-free by construction: the residual
+    the selector's cost model assumes is exactly what compress_tree carries
+    forward (corrected == dequantized + residual, leaf by leaf)."""
+    compression = pytest.importorskip("repro.parallel.compression")
+    import jax.numpy as jnp
+    rng = np.random.RandomState(1)
+    grads = {"w": jnp.asarray(rng.randn(300, 7), jnp.float32),
+             "b": jnp.asarray(rng.randn(11), jnp.float32)}
+    err = compression.init_error_feedback(grads)
+    payload, new_err = compression.compress_tree(grads, err)
+    deq = compression.decompress_tree(payload, grads)
+    for k in grads:
+        corrected = np.asarray(grads[k], np.float32)  # err starts at zero
+        np.testing.assert_allclose(
+            np.asarray(deq[k]) + np.asarray(new_err[k]), corrected,
+            rtol=0, atol=1e-6)
+        q, scale = payload[k]
+        assert q.size * q.dtype.itemsize + scale.size * scale.dtype.itemsize \
+            == compressed_wire_bytes(corrected.size * 4.0)
+    # second step: the residual rides into the next quantization
+    payload2, err2 = compression.compress_tree(grads, new_err)
+    deq2 = compression.decompress_tree(payload2, grads)
+    for k in grads:
+        corrected2 = np.asarray(grads[k]) + np.asarray(new_err[k])
+        np.testing.assert_allclose(
+            np.asarray(deq2[k]) + np.asarray(err2[k]), corrected2,
+            rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry bandwidth recalibration + controller re-selection
+# ---------------------------------------------------------------------------
+
+
+def test_observe_comm_calibrates_cross_bandwidth():
+    from repro.runtime.telemetry import CROSS, TelemetryCalibrator
+    cl = fig10_cluster(10.0)
+    cal = TelemetryCalibrator(alpha=0.5, deadband=0.05)
+    for _ in range(8):                  # WAN measured 3x slower than priced
+        cal.observe_comm(cl, CROSS, predicted_s=1.0, measured_s=3.0)
+    est = cal.bandwidth(CROSS)
+    assert est == pytest.approx(cl.cross_bw / 3.0, rel=0.05)
+    assert cal.drift(cl) > 0.5
+    calibrated = cal.calibrated(cl)
+    assert calibrated.cross_bw == pytest.approx(est)
+    # inter-node tier calibrates by sub-cluster name
+    cal.observe_comm(cl, "A100", predicted_s=1.0, measured_s=2.0)
+    assert cal.bandwidth("A100") < cl.subclusters[0].inter_node_bw
+    assert cal.calibrated(cl).subclusters[0].inter_node_bw < \
+        cl.subclusters[0].inter_node_bw
+
+
+def test_controller_on_comm_time_replans_on_bandwidth_drift():
+    from repro.runtime.controller import ControllerConfig, ElasticController
+    from repro.runtime.telemetry import CROSS, TelemetryCalibrator
+    cluster = paper_case_study_cluster(cross_gbps=10.0)
+    ctrl = ElasticController(
+        cluster, "gpt-2b",
+        planner_cfg=PlannerConfig(granularity=12, n_microbatches=16,
+                                  comm=CommConfig()),
+        cfg=ControllerConfig(total_steps=10_000, seq_len=512,
+                             global_batch=16, drift_threshold=0.2),
+        telemetry=TelemetryCalibrator(alpha=0.6, deadband=0.05))
+    ctrl.bootstrap()
+    decision = None
+    for step in range(2, 10):           # WAN congested 4x
+        decision = ctrl.on_comm_time(step, CROSS, predicted_s=0.1,
+                                     measured_s=0.4)
+        if decision is not None:
+            break
+    assert decision is not None, "bandwidth drift never triggered the ladder"
+    assert decision.action in ("warmup_only", "incremental", "full")
+    # the calibrated WAN bandwidth was committed as the fleet's truth: every
+    # subsequent re-search builds its CommModel (and re-selects algorithms)
+    # from it, and the committed shift reset the tier's EWMA history
+    assert ctrl.cluster.cross_bw < 0.75 * cluster.cross_bw
+    assert ctrl.telemetry.bandwidth("cross", default=0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Lowering the hierarchy onto mesh axes
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_sync_axes_and_phases():
+    from repro.core.strategy import IntraOpPlan
+    from repro.parallel.sharding import (
+        hierarchical_sync_axes, sync_collective_phases,
+    )
+    plan = IntraOpPlan(axis="data", tp=2, dp=8,
+                       shard_ratios=(0.125,) * 8, comm_bytes=0.0,
+                       comm_time_f=0.0, comm_time_b=0.0,
+                       sync_algo="hierarchical")
+    assert hierarchical_sync_axes(plan, mesh_n=2) == \
+        (("node", 2), ("data", 4), ("model", 2))
+    assert sync_collective_phases(plan, mesh_n=2) == \
+        (("reduce_scatter", "data"), ("all_reduce", "node"),
+         ("all_gather", "data"))
+    flat = dataclasses.replace(plan, sync_algo="ring")
+    assert sync_collective_phases(flat, mesh_n=2) == (("all_reduce", "data"),)
+    with pytest.raises(ValueError, match="factor"):
+        hierarchical_sync_axes(plan, mesh_n=3)
+
+
+# ---------------------------------------------------------------------------
+# Artifacts / facade surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def comm_exe():
+    from repro import api
+    cfg = api.HarpConfig(
+        seq_len=512, global_batch=16,
+        planner=PlannerConfig(granularity=16, n_microbatches=16,
+                              intra_op=True, comm=CommConfig()))
+    return api.compile("gpt-2b", paper_case_study_cluster(), cfg)
+
+
+def test_lowered_plan_v3_collective_fields(comm_exe):
+    from repro import api
+    lo = comm_exe.lowered
+    assert lo.version == 3
+    assert len(lo.link_ids) == lo.n_stages - 1
+    assert lo.link_occupancy_s
+    assert any(s.sync_algorithm for s in lo.stages)
+    j = lo.to_json()
+    assert api.LoweredPlan.from_json(j).to_json() == j
+    # v2 artifacts (no collective plan) still load, with defaults
+    d = json.loads(j)
+    for k in ("link_ids", "link_occupancy_s", "contended_links"):
+        d.pop(k)
+    for s in d["stages"]:
+        for k in ("ar_algorithm", "sync_algorithm", "sync_compressed",
+                  "sync_time_s", "sync_link"):
+            s.pop(k)
+    old = api.LoweredPlan.from_dict(d)
+    assert old.link_ids == [] and old.stages[0].sync_algorithm is None
+
+
+def test_explain_comm_and_describe(comm_exe):
+    txt = comm_exe.explain_comm()
+    assert "collective breakdown" in txt
+    assert "link occupancy per step" in txt
+    assert "sync=ring" in txt or "sync=hierarchical" in txt
+    assert comm_exe.describe(comm=True).count("collective breakdown") == 1
+
+
+def test_executable_contention_simulation(comm_exe):
+    res = comm_exe.simulate(contention=True)
+    assert res.link_busy, "contended run must report link occupancy"
+    priced = comm_exe.simulate(priced=True)
+    # same plan, same totals modulo sync scheduling: the two accountings
+    # must land in the same ballpark (sanity, not equality)
+    assert res.makespan == pytest.approx(priced.makespan, rel=0.15)
+    assert boundary_link_ids(comm_exe.strategy, comm_exe.cluster) \
+        == comm_exe.lowered.link_ids
+
+
+def test_cli_accepts_comm_flags():
+    from repro.api.cli import build_parser
+    args = build_parser().parse_args(
+        ["plan", "--arch", "gpt-2b", "--comm", "--comm-compressed",
+         "--comm-algorithms", "ring,hierarchical", "--explain-comm"])
+    assert args.comm and args.comm_compressed and args.explain_comm
+    args = build_parser().parse_args(
+        ["simulate", "--plan", "p.json", "--contention"])
+    assert args.contention
