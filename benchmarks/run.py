@@ -20,6 +20,9 @@ MODULES = [
     "benchmarks.comm_bench",           # comm subsystem: algorithm selection,
                                        # compression, contention; appends a
                                        # run to BENCH_comm.json (repo root)
+    "benchmarks.serve_replay",         # serving: disaggregated vs colocated
+                                       # replay on the fig10 fleet; appends a
+                                       # run to BENCH_serve.json (repo root)
     "benchmarks.roofline",             # repo-specific: dry-run roofline
 ]
 

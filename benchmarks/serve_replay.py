@@ -1,0 +1,200 @@
+"""Serving replay benchmark -> ``BENCH_serve.json`` at repo root.
+
+One entry per run (same append-style as ``BENCH_comm.json``), replaying a
+seeded Poisson trace on the fig10 mixed fleet (2x8 A100 + 2x8 V100, 5 Gbps
+cross) through two plans at **equal offered QPS**:
+
+- **searched**: the disaggregated prefill/decode placement from
+  ``serving.placement.search_placement`` (prefill on the compute-rich
+  pools, decode on the KV-capacity-rich ones, handoffs priced over the
+  comm subsystem's cross link);
+- **colocated**: the placement-unaware baseline — every pool ``mixed``,
+  uniform round-robin routing.
+
+Recorded per case: p99/p50 TTFT and TPOT, goodput (output tokens/s of
+requests meeting both SLOs), rejections, KV-handoff traffic, and the
+p99-TTFT speedup — the acceptance metric.  ``kv_violations`` must be 0 on
+both plans (admission control rejects, never OOMs).
+
+``--tiny`` shrinks the trace to CI size (seconds).  ``--fail-on-regression``
+exits 1 when the searched plan fails to beat colocated-uniform on p99 TTFT
+or violates the KV bound — CI runs this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit_csv                        # noqa: E402
+
+from repro.configs import get_config                          # noqa: E402
+from repro.core.cluster import paper_eval_cluster             # noqa: E402
+from repro.serving.batching import simulate_trace             # noqa: E402
+from repro.serving.placement import (                         # noqa: E402
+    ServingConfig, colocated_plan, search_placement,
+)
+from repro.serving.workload import poisson_trace              # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+ARCH = "gemma-2b"
+FLEET = dict(n_a100_nodes=2, n_v100_nodes=2)   # the fig10 mixed fleet
+
+
+def _scfg(tiny: bool) -> ServingConfig:
+    # qps 1600 with 256-token prompts is the queueing-dominated regime where
+    # uniform routing saturates the V100 pool's prefill
+    duration, sample = (0.25, 100) if tiny else (1.0, 400)
+    return ServingConfig(qps=1600.0, duration_s=duration, seed=0,
+                         prompt_mean=256, output_mean=64,
+                         search_sample=sample)
+
+
+def _metrics(res) -> Dict:
+    s = res.summary()
+    return {
+        "n_completed": s["n_completed"],
+        "n_rejected": s["n_rejected"],
+        "p50_ttft_ms": round(s["p50_ttft_s"] * 1e3, 3),
+        "p99_ttft_ms": round(s["p99_ttft_s"] * 1e3, 3),
+        "p50_tpot_ms": round(s["p50_tpot_s"] * 1e3, 4),
+        "p99_tpot_ms": round(s["p99_tpot_s"] * 1e3, 4),
+        "goodput_tokens_per_s": round(s["goodput_tokens_per_s"], 1),
+        "throughput_tokens_per_s": round(s["throughput_tokens_per_s"], 1),
+        "kv_violations": s["kv_violations"],
+        "n_handoffs": s["n_handoffs"],
+        "handoff_bytes": s["handoff_bytes"],
+    }
+
+
+def run(tiny: bool = False, label: Optional[str] = None) -> Dict:
+    cluster = paper_eval_cluster(**FLEET)
+    arch = get_config(ARCH)
+    scfg = _scfg(tiny)
+    trace = poisson_trace(scfg.qps, scfg.duration_s, seed=scfg.seed,
+                          prompt_mean=scfg.prompt_mean,
+                          output_mean=scfg.output_mean)
+
+    t0 = time.perf_counter()
+    best = search_placement(arch, cluster, scfg, trace=trace)
+    t_search = time.perf_counter() - t0
+    base = colocated_plan(arch, cluster, scfg)
+
+    # the recorded comparison replays the FULL trace (the search scored a
+    # search_sample-request prefix) at equal offered QPS
+    searched = _metrics(simulate_trace(best, trace))
+    colocated = _metrics(simulate_trace(base, trace))
+
+    case = {
+        "cluster": cluster.describe(),
+        "arch": ARCH,
+        "qps": scfg.qps,
+        "n_requests": trace.n_requests,
+        "prompt_mean": scfg.prompt_mean,
+        "output_mean": scfg.output_mean,
+        "roles": {p.name: p.role for p in best.pools},
+        "routing": best.routing,
+        "searched": searched,
+        "colocated": colocated,
+        "p99_ttft_speedup": round(
+            colocated["p99_ttft_ms"] / searched["p99_ttft_ms"], 4)
+        if searched["p99_ttft_ms"] > 0 else 0.0,
+        "searched_beats_colocated":
+            searched["p99_ttft_ms"] < colocated["p99_ttft_ms"],
+        "kv_bound_held": searched["kv_violations"] == 0
+            and colocated["kv_violations"] == 0,
+        "search_seconds": round(t_search, 3),
+    }
+    return {"label": label or "HEAD",
+            "mode": "tiny" if tiny else "full",
+            "cases": {"fig10_serve": case}}
+
+
+def extend_trajectory(entry: Dict, path: str = BENCH_PATH) -> Dict:
+    """Append one run to the serving trajectory (creates the file on first
+    use)."""
+    doc = {"schema": 1,
+           "description": "Serving-replay trajectory; one entry per "
+                          "benchmarks/serve_replay.py run — see "
+                          "docs/serving.md.",
+           "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["runs"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def rows_from_entry(entry: Dict) -> List[Dict]:
+    rows = []
+    for name, c in entry["cases"].items():
+        s, b = c["searched"], c["colocated"]
+        rows.append({
+            "label": f"{name}.searched",
+            "step_time_s": s["p99_ttft_ms"] / 1e3,
+            "derived": f"p99_tpot={s['p99_tpot_ms']}ms;"
+                       f"goodput={s['goodput_tokens_per_s']};"
+                       f"rej={s['n_rejected']}"})
+        rows.append({
+            "label": f"{name}.colocated",
+            "step_time_s": b["p99_ttft_ms"] / 1e3,
+            "derived": f"p99_tpot={b['p99_tpot_ms']}ms;"
+                       f"goodput={b['goodput_tokens_per_s']};"
+                       f"rej={b['n_rejected']}"})
+        rows.append({
+            "label": f"{name}.speedup",
+            "step_time_s": c["search_seconds"],
+            "derived": f"p99_ttft_speedup={c['p99_ttft_speedup']}x;"
+                       f"roles={'+'.join(f'{k}:{v}' for k, v in sorted(c['roles'].items()))}"})
+    return rows
+
+
+def main() -> None:
+    """benchmarks/run.py contract: full measurement, CSV on stdout, one
+    trajectory entry appended to BENCH_serve.json."""
+    entry = run(tiny=False)
+    extend_trajectory(entry)
+    emit_csv(rows_from_entry(entry))
+
+
+def cli(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized trace (seconds, not minutes)")
+    ap.add_argument("--label", default=None,
+                    help="trajectory entry label (default HEAD)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="trajectory JSON path (default repo root)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 unless the searched placement beats "
+                         "colocated-uniform on p99 TTFT with the KV bound "
+                         "held")
+    args = ap.parse_args(argv)
+
+    entry = run(tiny=args.tiny, label=args.label)
+    extend_trajectory(entry, args.out)
+    emit_csv(rows_from_entry(entry))
+    print(f"# trajectory entry appended to {os.path.abspath(args.out)}",
+          file=sys.stderr)
+
+    bad = [name for name, c in entry["cases"].items()
+           if not (c["searched_beats_colocated"] and c["kv_bound_held"])]
+    if bad:
+        print(f"# serving placement regressed on: {bad}", file=sys.stderr)
+        if args.fail_on_regression:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

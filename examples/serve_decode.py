@@ -1,24 +1,18 @@
-"""Batched serving: prefill a prompt batch, decode greedily with the KV
-cache / SSM state — exercises the same prefill/decode paths the dry-run
-lowers at 32k/500k scale.
+"""Batched serving: prefill a prompt batch, decode with the KV cache / SSM
+state — exercises the same prefill/decode paths the dry-run lowers at
+32k/500k scale, through the one facade entry point
+:func:`repro.api.generate`.
 
   PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
-  PYTHONPATH=src python examples/serve_decode.py --arch gemma3-12b
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma3-12b --sample
 """
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.models import build_model
-from repro.models.prefill import prefill
+from repro import api
 
 
 def main() -> None:
@@ -27,43 +21,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature sampling instead of greedy argmax")
+    ap.add_argument("--temperature", type=float, default=0.8)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    model = build_model(cfg)
-    rng = jax.random.PRNGKey(0)
-    params = model.init(rng)
-    B, T = args.batch, args.prompt_len
-    total = T + args.gen
-
-    batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
-    if cfg.family == "vlm":
-        batch["image_embeds"] = 0.02 * jax.random.normal(
-            rng, (B, cfg.n_image_tokens, cfg.d_model))
-    if cfg.family == "audio":
-        batch["frames"] = 0.02 * jax.random.normal(
-            rng, (B, cfg.enc_frames, cfg.d_model))
-
-    pf = jax.jit(lambda p, b: prefill(cfg, p, b, cache_len=total))
-    t0 = time.perf_counter()
-    last_logits, cache = pf(params, batch)
-    jax.block_until_ready(last_logits)
-    print(f"[serve] prefill {B}x{T} ({cfg.arch_id}): "
-          f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
-
-    decode = jax.jit(model.decode_step)
-    tok = jnp.argmax(last_logits[:, -1:], axis=-1).astype(jnp.int32)
-    toks = [np.asarray(tok)]
-    t0 = time.perf_counter()
-    for t in range(T, total):
-        logits, cache = decode(params, cache, tok, jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        toks.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    print(f"[serve] {args.gen} tokens x {B} seqs in {dt * 1e3:.0f} ms "
-          f"({B * args.gen / dt:.0f} tok/s greedy)")
-    print("[serve] sample:", np.concatenate(toks, 1)[0, :16].tolist())
+    out = api.generate(
+        args.arch, batch=args.batch, prompt_len=args.prompt_len,
+        gen_tokens=args.gen, greedy=not args.sample,
+        temperature=args.temperature, reduced=True, log_fn=print)
+    print("[serve] sample:", out["tokens"][0, :16].tolist())
 
 
 if __name__ == "__main__":

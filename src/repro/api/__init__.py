@@ -24,13 +24,17 @@ from repro.api.artifacts import (
 )
 from repro.api.config import HarpConfig
 from repro.api.facade import (
-    Executable, compile, fit, lower, plan, warn_deprecated,
+    Executable, compile, fit, generate, lower, plan, warn_deprecated,
 )
 from repro.api import registry
+from repro.serving.batching import ServeSimResult
+from repro.serving.placement import ServePlan, ServingConfig
+from repro.serving.workload import ServeTrace
 
 __all__ = [
     "HarpConfig", "Plan", "LoweredPlan", "StageLowering", "Executable",
-    "compile", "plan", "lower", "fit",
+    "compile", "plan", "lower", "fit", "generate",
+    "ServingConfig", "ServePlan", "ServeTrace", "ServeSimResult",
     "cluster_to_dict", "cluster_from_dict", "sim_summary",
     "registry", "warn_deprecated",
 ]

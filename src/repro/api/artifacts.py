@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 from repro.core.cluster import DeviceProfile, HeteroCluster, SubCluster
 from repro.core.pipesim import SimResult
@@ -31,9 +31,11 @@ from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 3   # v3: comm subsystem — PlannerConfig.comm, per-stage
-                     # collective algorithms, LoweredPlan link occupancy
-                     # (v2: SearchConfig gained engine/batch_size knobs)
+SCHEMA_VERSION = 4   # v4: serving subsystem — HarpConfig.serving, Plan.serve
+                     # (the ServePlan section; None on training-only plans)
+                     # (v3: comm subsystem — PlannerConfig.comm, per-stage
+                     # collective algorithms, LoweredPlan link occupancy;
+                     # v2: SearchConfig gained engine/batch_size knobs)
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +98,8 @@ class Plan:
     cluster: Dict[str, Any]
     cluster_fingerprint: str
     predicted: Dict[str, Any] = field(default_factory=dict)
+    serve: Optional[Dict[str, Any]] = None    # ServePlan.to_dict() when the
+                                              # config carried a ServingConfig
     version: int = SCHEMA_VERSION
 
     def to_cluster(self) -> HeteroCluster:
@@ -110,6 +114,7 @@ class Plan:
             "config": self.config.to_dict(),
             "strategy": json.loads(self.strategy.to_json()),
             "predicted": self.predicted,
+            "serve": self.serve,
         }
 
     def to_json(self) -> str:
@@ -124,6 +129,7 @@ class Plan:
             cluster=d["cluster"],
             cluster_fingerprint=d["cluster_fingerprint"],
             predicted=d.get("predicted", {}),
+            serve=d.get("serve"),       # absent on pre-v4 artifacts
             version=d.get("version", SCHEMA_VERSION))
 
     @staticmethod
@@ -136,6 +142,9 @@ class Plan:
                  f"  predicted {pred:,.0f} tokens/s "
                  f"(scheduler={self.config.scheduler})",
                  self.strategy.describe()]
+        if self.serve is not None:
+            from repro.serving.placement import ServePlan
+            lines.append(ServePlan.from_dict(self.serve).describe())
         return "\n".join(lines)
 
 

@@ -4,7 +4,10 @@ Subcommands round-trip the :class:`~repro.api.artifacts.Plan` JSON artifact:
 
     python -m repro plan --arch gpt-2b --cluster paper_case_study \\
         --global-batch 64 --microbatches 32 -o plan.json
+    python -m repro plan --arch gemma-2b --cluster paper_eval \\
+        --serving --qps 1600 --prompt-mean 256 -o plan.json
     python -m repro simulate --plan plan.json --timeline
+    python -m repro simulate --plan plan.json --trace poisson --qps 800
     python -m repro train --plan plan.json --smoke --steps 20
     python -m repro replay --plan plan.json --trace paper --steps 120
     python -m repro dryrun --arch minitron-8b --shape train_4k
@@ -73,8 +76,18 @@ def cmd_plan(args) -> int:
         comm=comm_cfg)
     if args.workers:
         pcfg.search = dataclasses.replace(pcfg.search, n_workers=args.workers)
+    serving_cfg = None
+    if args.serving:
+        from repro.api import ServingConfig
+        serving_cfg = ServingConfig(
+            qps=args.qps, duration_s=args.serving_duration,
+            prompt_mean=args.prompt_mean, output_mean=args.output_mean,
+            objective=args.serving_objective,
+            slo_ttft_s=args.slo_ttft_ms / 1e3,
+            slo_tpot_s=args.slo_tpot_ms / 1e3)
     cfg = HarpConfig(seq_len=args.seq_len, global_batch=args.global_batch,
-                     scheduler=args.scheduler, planner=pcfg)
+                     scheduler=args.scheduler, planner=pcfg,
+                     serving=serving_cfg)
     cluster = _load_cluster(args)
     artifact = plan(args.arch, cluster, cfg, verbose=args.verbose)
     with open(args.out, "w") as f:
@@ -89,10 +102,26 @@ def cmd_plan(args) -> int:
 
 
 def cmd_simulate(args) -> int:
-    from repro.api import compile as api_compile
+    from repro.api import compile as api_compile, registry
     from repro.core.pipesim import ascii_timeline
 
     exe = api_compile(plan_artifact=_load_plan(args.plan))
+    if args.trace:
+        if exe.plan.serve is None:
+            raise SystemExit(
+                "simulate --trace needs a plan built with plan --serving")
+        kw: Dict[str, Any] = {}
+        if args.qps is not None:
+            kw["qps"] = args.qps
+        if args.duration is not None:
+            kw["duration_s"] = args.duration
+        if args.trace_seed is not None:
+            kw["seed"] = args.trace_seed
+        trace = registry.resolve("serve_trace", args.trace)(
+            exe.config.serving, **kw)
+        res = exe.serve_simulate(trace)
+        print(res.describe())
+        return 0
     res = exe.simulate(priced=not args.raw, no_overlap=args.no_overlap,
                        contention=args.contention)
     tok = exe.strategy.tokens_per_step()
@@ -246,6 +275,22 @@ def build_parser() -> argparse.ArgumentParser:
                         "(algorithm, bytes, priced time, contended links)")
     p.add_argument("--scheduler", default="h1f1b")
     p.add_argument("--workers", type=int, default=0)
+    p.add_argument("--serving", action="store_true",
+                   help="also search a serving placement (disaggregated "
+                        "prefill/decode over the same fleet); the plan "
+                        "artifact grows a ServePlan section")
+    p.add_argument("--qps", type=float, default=32.0,
+                   help="offered request rate for the serving search")
+    p.add_argument("--serving-duration", type=float, default=2.0,
+                   help="seconds of Poisson arrivals the search replays")
+    p.add_argument("--serving-objective", default="slo",
+                   choices=["slo", "throughput"])
+    p.add_argument("--prompt-mean", type=int, default=512)
+    p.add_argument("--output-mean", type=int, default=64)
+    p.add_argument("--slo-ttft-ms", type=float, default=200.0,
+                   help="p99 time-to-first-token target")
+    p.add_argument("--slo-tpot-ms", type=float, default=20.0,
+                   help="p99 time-per-output-token target")
     p.add_argument("-o", "--out", default="plan.json")
     p.add_argument("--verbose", action="store_true")
 
@@ -258,6 +303,15 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fair-share link-occupancy simulation (comm.netsim):"
                         " shared links and grad syncs contend")
     p.add_argument("--timeline", action="store_true")
+    p.add_argument("--trace", default=None,
+                   help="serving mode: replay a registered request trace "
+                        "(poisson / scripted) through the plan's ServePlan "
+                        "section (needs plan --serving)")
+    p.add_argument("--qps", type=float, default=None,
+                   help="override the trace's request rate")
+    p.add_argument("--duration", type=float, default=None,
+                   help="override the trace's duration (seconds)")
+    p.add_argument("--trace-seed", type=int, default=None)
 
     p = sub.add_parser("train", help="training loop (plan-driven or ad hoc)")
     p.add_argument("--plan", help="Plan JSON (wires the elastic controller)")

@@ -26,6 +26,7 @@ from repro.core.dp_search import SearchConfig
 from repro.core.planner import PlannerConfig
 from repro.data.pipeline import DataConfig
 from repro.runtime.controller import ControllerConfig
+from repro.serving.placement import ServingConfig
 from repro.train.trainer import TrainerConfig
 
 from repro.api import registry
@@ -46,6 +47,9 @@ class HarpConfig:
     trainer: TrainerConfig = field(default_factory=TrainerConfig)
     data: Optional[DataConfig] = None       # None -> derived from the arch
     elastic: Optional[ControllerConfig] = None  # None -> derived on attach
+    serving: Optional[ServingConfig] = None  # None -> training-only plan
+    # (the off-state invariant: serving=None leaves every training artifact
+    # bit-identical to the pre-serving schema — see DESIGN.md §7)
 
     def __post_init__(self):
         # the named cost model materializes into the planner config unless
@@ -107,6 +111,8 @@ class HarpConfig:
         if self.data is not None and self.data.seq_len != self.seq_len:
             errs.append(f"data.seq_len ({self.data.seq_len}) disagrees with "
                         f"seq_len ({self.seq_len})")
+        if self.serving is not None:
+            errs.extend(self.serving.validate_errors())
         e = self.elastic
         if e is not None:
             de = ControllerConfig()
@@ -149,10 +155,13 @@ class HarpConfig:
         trainer = TrainerConfig(**d.pop("trainer"))
         data = d.pop("data", None)
         elastic = d.pop("elastic", None)
+        # absent key: a pre-v4 (training-only) artifact — still loads
+        serving = d.pop("serving", None)
         return HarpConfig(
             planner=planner, trainer=trainer,
             data=None if data is None else DataConfig(**data),
             elastic=None if elastic is None else ControllerConfig(**elastic),
+            serving=None if serving is None else ServingConfig(**serving),
             **d)
 
     @staticmethod

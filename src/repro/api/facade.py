@@ -91,11 +91,23 @@ def plan(arch: Union[str, ArchConfig], cluster: HeteroCluster,
     res = simulate([s.t_f for s in strategy.stages],
                    [s.t_b for s in strategy.stages],
                    strategy.c_links, strategy.n_microbatches, counts)
+    serve = None
+    if cfg.serving is not None:
+        # the serving placement search reuses the training comm model (same
+        # CommConfig knob) so KV handoffs are priced on the same tiered links
+        # the planner saw; serving=None skips this branch entirely — the
+        # off-state invariant (DESIGN.md §7)
+        from repro.comm.selector import CommModel
+        from repro.serving.placement import search_placement
+        comm = CommModel(cluster, cfg.planner.comm)
+        serve = search_placement(arch_cfg, cluster, cfg.serving, comm=comm,
+                                 verbose=verbose).to_dict()
     return Plan(
         arch=arch_cfg.arch_id, strategy=strategy, config=cfg,
         cluster=cluster_to_dict(cluster),
         cluster_fingerprint=cluster_fingerprint(cluster),
-        predicted=sim_summary(res, strategy.tokens_per_step()))
+        predicted=sim_summary(res, strategy.tokens_per_step()),
+        serve=serve)
 
 
 # ---------------------------------------------------------------------------
@@ -384,6 +396,39 @@ class Executable:
         return run_replay(trace, n_steps, strategy=self.strategy,
                           plan_cluster=self.cluster, layers=self.layers)
 
+    # -- serving -------------------------------------------------------------
+
+    def serve_simulate(self, trace=None, *, qps: Optional[float] = None,
+                       duration_s: Optional[float] = None,
+                       seed: Optional[int] = None):
+        """Replay a request trace through this plan's serving placement
+        (the event-driven continuous-batching simulator,
+        :func:`repro.serving.batching.simulate_trace`).
+
+        ``trace`` is a :class:`~repro.serving.workload.ServeTrace` (remapped
+        to ``qps`` when given); without one, a Poisson trace is drawn from
+        the compiled :class:`ServingConfig` with any of ``qps`` /
+        ``duration_s`` / ``seed`` overridden.  Requires the plan to have been
+        compiled with ``config.serving`` set."""
+        if self.plan.serve is None:
+            raise ValueError(
+                "serve_simulate() needs a serving plan — compile with "
+                "HarpConfig(serving=ServingConfig(...)) first")
+        from repro.serving.batching import simulate_trace
+        from repro.serving.placement import ServePlan
+        from repro.serving.workload import poisson_trace
+        splan = ServePlan.from_dict(self.plan.serve)
+        scfg = self.config.serving
+        if trace is None:
+            trace = poisson_trace(
+                qps if qps is not None else scfg.qps,
+                duration_s if duration_s is not None else scfg.duration_s,
+                seed=seed if seed is not None else scfg.seed,
+                prompt_mean=scfg.prompt_mean, output_mean=scfg.output_mean)
+        elif qps is not None:
+            trace = trace.remapped(qps)
+        return simulate_trace(splan, trace)
+
     # -- training ------------------------------------------------------------
 
     def fit(self, **kwargs) -> Dict[str, Any]:
@@ -477,3 +522,85 @@ def fit(arch: Union[str, ArchConfig],
                       log_fn=log_fn,
                       clock=clock if clock is not None else time.perf_counter)
     return trainer.run(start_step)
+
+
+def generate(arch: Union[str, ArchConfig], *,
+             batch: int = 4, prompt_len: int = 32, gen_tokens: int = 32,
+             seed: int = 0, greedy: bool = True, temperature: float = 1.0,
+             use_pallas: bool = False, reduced: bool = False,
+             log_fn: Optional[Callable] = None) -> Dict[str, Any]:
+    """The serving half of the pipeline on one host: prefill a synthetic
+    prompt batch, then batched decode through
+    :func:`repro.serve.step.make_serve_step` (greedy argmax or
+    temperature sampling with a threaded PRNG key).
+
+    Returns ``{"tokens": (B, gen_tokens) int array, "prefill_s",
+    "decode_s", "decode_tokens_per_s"}``.  The first generated token comes
+    from the prefill logits — cache layouts are identical to
+    ``decode_step``'s, which is what ``tests/test_serving.py`` pins."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import ShapeSpec
+    from repro.models.prefill import prefill
+    from repro.serve.step import make_serve_step
+
+    cfg = _resolve_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    total = prompt_len + gen_tokens
+    shape = ShapeSpec("generate", total, batch, "decode")
+    serve_step, model, _rules = make_serve_step(
+        cfg, shape=shape, use_pallas=use_pallas, greedy=greedy,
+        temperature=temperature)
+    rng = jax.random.PRNGKey(seed)
+    params = model.init(rng)
+    feed = {"tokens": jax.random.randint(
+        rng, (batch, prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        feed["image_embeds"] = 0.02 * jax.random.normal(
+            rng, (batch, cfg.n_image_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        feed["frames"] = 0.02 * jax.random.normal(
+            rng, (batch, cfg.enc_frames, cfg.d_model))
+
+    t0 = time.perf_counter()
+    last_logits, cache = jax.jit(
+        lambda p, b: prefill(cfg, p, b, cache_len=total,
+                             use_pallas=use_pallas))(params, feed)
+    jax.block_until_ready(last_logits)
+    prefill_s = time.perf_counter() - t0
+    if log_fn:
+        log_fn(f"[serve] prefill {batch}x{prompt_len} ({cfg.arch_id}): "
+               f"{prefill_s * 1e3:.0f} ms")
+
+    step = jax.jit(serve_step)
+    if greedy:
+        tok = jnp.argmax(last_logits[:, -1:], axis=-1).astype(jnp.int32)
+    else:
+        rng, sub = jax.random.split(rng)
+        tok = jax.random.categorical(
+            sub, last_logits[:, -1, :].astype(jnp.float32) / temperature,
+            axis=-1)[:, None].astype(jnp.int32)
+    toks = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    # the prefill logits supplied token 1; decode the remaining gen_tokens-1
+    for t in range(prompt_len, prompt_len + gen_tokens - 1):
+        if greedy:
+            tok, cache = step(params, cache, tok, jnp.int32(t))
+        else:
+            rng, sub = jax.random.split(rng)
+            tok, cache = step(params, cache, tok, jnp.int32(t), sub)
+        toks.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+    n_decoded = batch * (gen_tokens - 1)
+    tps = n_decoded / decode_s if decode_s > 0 else 0.0
+    if log_fn:
+        log_fn(f"[serve] {gen_tokens} tokens x {batch} seqs in "
+               f"{decode_s * 1e3:.0f} ms ({tps:.0f} tok/s "
+               f"{'greedy' if greedy else f'T={temperature}'})")
+    return {"tokens": np.concatenate(toks, axis=1),
+            "prefill_s": prefill_s, "decode_s": decode_s,
+            "decode_tokens_per_s": tps}

@@ -24,6 +24,9 @@ Registered kinds and their contracts (all times seconds):
   instance.  This kind is *backed by* ``repro.comm.algorithms.ALGORITHMS``
   (the planner resolves algorithms there without importing the api
   package), so registrations through either door are visible to both.
+- ``serve_trace``: ``fn(serving_cfg, **kw) -> ServeTrace`` (request-arrival
+  generators for the serving simulator; the CLI's ``simulate --trace``
+  resolves here).
 """
 from __future__ import annotations
 
@@ -36,8 +39,10 @@ from repro.core.h1f1b import (
     classic_1f1b_counts, eager_1f1b_counts, h1f1b_counts,
 )
 from repro.runtime.events import EventTrace, paper_trace, random_trace
+from repro.serving.workload import poisson_trace, scripted_trace
 
-KINDS = ("scheduler", "cost_model", "event_source", "cluster", "collective")
+KINDS = ("scheduler", "cost_model", "event_source", "cluster", "collective",
+         "serve_trace")
 
 _REGISTRY: Dict[str, Dict[str, Any]] = {k: {} for k in KINDS}
 
@@ -108,3 +113,27 @@ register("cluster", "paper_eval", _cluster_lib.paper_eval_cluster)
 register("cluster", "homogeneous", _cluster_lib.homogeneous_cluster)
 register("cluster", "tpu_multipod", _cluster_lib.tpu_multipod_cluster)
 register("cluster", "heterogeneous_tpu", _cluster_lib.heterogeneous_tpu_cluster)
+
+
+def _poisson_serve_trace(scfg, *, qps=None, duration_s=None, seed=None, **kw):
+    return poisson_trace(
+        qps if qps is not None else scfg.qps,
+        duration_s if duration_s is not None else scfg.duration_s,
+        seed=seed if seed is not None else scfg.seed,
+        prompt_mean=scfg.prompt_mean, output_mean=scfg.output_mean, **kw)
+
+
+def _scripted_serve_trace(scfg, *, qps=None, n_requests=None,
+                          duration_s=None, seed=None, **kw):
+    # seed accepted for interface parity; scripted arrivals are deterministic
+    del seed
+    q = qps if qps is not None else scfg.qps
+    dur = duration_s if duration_s is not None else scfg.duration_s
+    n = n_requests if n_requests is not None else max(1, int(q * dur))
+    kw.setdefault("prompt_tokens", scfg.prompt_mean)
+    kw.setdefault("output_tokens", scfg.output_mean)
+    return scripted_trace(q, n, **kw)
+
+
+register("serve_trace", "poisson", _poisson_serve_trace)
+register("serve_trace", "scripted", _scripted_serve_trace)

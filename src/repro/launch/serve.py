@@ -1,4 +1,7 @@
-"""Serving launcher: prefill a batch of prompts, then batched greedy decode.
+"""Serving launcher: prefill a batch of prompts, then batched decode.
+
+Thin CLI over :func:`repro.api.generate` (greedy argmax by default;
+``--sample --temperature T`` threads a PRNG key through the serve step).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \\
       --batch 4 --prompt-len 32 --gen 32
@@ -6,15 +9,6 @@
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.models import build_model
-from repro.models.prefill import prefill
 
 
 def main() -> None:
@@ -25,47 +19,22 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature sampling instead of greedy argmax")
+    ap.add_argument("--temperature", type=float, default=1.0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
-    rng = jax.random.PRNGKey(args.seed)
-    params = model.init(rng)
+    from repro import api
 
-    B, T = args.batch, args.prompt_len
-    total = T + args.gen
-    prompts = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch["image_embeds"] = 0.02 * jax.random.normal(
-            rng, (B, cfg.n_image_tokens, cfg.d_model))
-    if cfg.family == "audio":
-        batch["frames"] = 0.02 * jax.random.normal(
-            rng, (B, cfg.enc_frames, cfg.d_model))
-
-    t0 = time.perf_counter()
-    last_logits, cache = jax.jit(
-        lambda p, b: prefill(cfg, p, b, cache_len=total))(params, batch)
-    jax.block_until_ready(last_logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"[serve] prefill {B}x{T}: {t_prefill*1e3:.1f} ms")
-
-    decode = jax.jit(model.decode_step)
-    tok = jnp.argmax(last_logits[:, -1:], axis=-1).astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for t in range(T, total):
-        logits, cache = decode(params, cache, tok, jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"[serve] generated {args.gen} tokens/seq x {B} seqs in "
-          f"{dt*1e3:.1f} ms ({B*args.gen/dt:.1f} tok/s)")
-    print(f"[serve] sample: {gen[0, :16].tolist()}")
+    api.warn_deprecated(
+        "launch.serve",
+        "repro.launch.serve is deprecated: call repro.api.generate() "
+        "directly (same prefill + batched-decode path, one facade)")
+    out = api.generate(
+        args.arch, batch=args.batch, prompt_len=args.prompt_len,
+        gen_tokens=args.gen, seed=args.seed, greedy=not args.sample,
+        temperature=args.temperature, reduced=args.smoke, log_fn=print)
+    print(f"[serve] sample: {out['tokens'][0, :16].tolist()}")
 
 
 if __name__ == "__main__":

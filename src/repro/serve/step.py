@@ -21,17 +21,35 @@ from repro.parallel import sharding as shd
 
 def make_serve_step(cfg: ArchConfig, *, shape: ShapeSpec,
                     multi_pod: bool = False, use_pallas: bool = False,
-                    greedy: bool = True):
-    """Returns serve_step(params, cache, tokens, pos) ->
-    (next_tokens (B,1), new_cache)."""
+                    greedy: bool = True, temperature: float = 1.0):
+    """Returns serve_step -> (next_tokens (B,1), new_cache).
+
+    ``greedy=True``: ``serve_step(params, cache, tokens, pos)``, argmax
+    decoding.  ``greedy=False``: ``serve_step(params, cache, tokens, pos,
+    rng)``, temperature sampling — the caller threads the PRNG key (split it
+    per step; the step stays functional so it jits/shards identically)."""
     model = build_model(cfg, use_pallas=use_pallas)
     rules = shd.decode_act_rules(shape.global_batch, multi_pod=multi_pod)
 
-    def serve_step(params, cache, tokens, pos):
-        with activation_sharding(rules):
-            logits, cache = model.decode_step(params, cache, tokens, pos)
-            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return nxt, cache
+    if greedy:
+        def serve_step(params, cache, tokens, pos):
+            with activation_sharding(rules):
+                logits, cache = model.decode_step(params, cache, tokens, pos)
+                nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            return nxt, cache
+    else:
+        if temperature <= 0.0:
+            raise ValueError(
+                f"sampling needs temperature > 0, got {temperature} "
+                f"(use greedy=True for argmax decoding)")
+
+        def serve_step(params, cache, tokens, pos, rng):
+            with activation_sharding(rules):
+                logits, cache = model.decode_step(params, cache, tokens, pos)
+                scaled = logits[:, -1, :].astype(jnp.float32) / temperature
+                nxt = jax.random.categorical(
+                    rng, scaled, axis=-1)[:, None].astype(jnp.int32)
+            return nxt, cache
 
     return serve_step, model, rules
 

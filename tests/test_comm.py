@@ -561,8 +561,10 @@ def comm_exe():
 
 def test_lowered_plan_v3_collective_fields(comm_exe):
     from repro import api
+    from repro.api.artifacts import SCHEMA_VERSION
     lo = comm_exe.lowered
-    assert lo.version == 3
+    # collective fields landed in v3; the artifact family version moves on
+    assert lo.version == SCHEMA_VERSION >= 3
     assert len(lo.link_ids) == lo.n_stages - 1
     assert lo.link_occupancy_s
     assert any(s.sync_algorithm for s in lo.stages)

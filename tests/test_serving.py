@@ -1,0 +1,614 @@
+"""repro.serving: heterogeneity-aware inference planning (ISSUE 6).
+
+Covers the acceptance contract: KV-bound arithmetic vs hand-computed bytes
+(and byte-for-byte vs the real ``models.*.init_cache`` shapes),
+prefill == step-by-step-decode logit equivalence through the api
+``generate`` path's building blocks, ServePlan JSON round-trip with a
+golden schema pin, deterministic tiny-trace simulation, admission control
+that rejects instead of OOMing, and — on the fig10 mixed fleet with a
+seeded Poisson trace — the searched disaggregated placement beating the
+colocated-uniform baseline on p99 TTFT at equal offered QPS.
+"""
+import dataclasses
+import json
+import math
+import os
+
+import pytest
+
+from repro import api
+from repro.configs import get_config
+from repro.core.cluster import (
+    A100_40G, GBPS, HeteroCluster, SubCluster, paper_eval_cluster,
+)
+from repro.core.planner import PlannerConfig
+from repro.serving import kvplan
+from repro.serving.batching import simulate_trace
+from repro.serving.objective import percentile, score
+from repro.serving.placement import (
+    PoolSpec, ServePlan, ServingConfig, colocated_plan, search_placement,
+)
+from repro.serving.workload import (
+    Request, ServeTrace, poisson_trace, scripted_trace,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "serve_plan_schema.json")
+
+
+def fig10_cluster() -> HeteroCluster:
+    """The fig10 mixed fleet (2x8 A100 + 2x8 V100, 5 Gbps cross)."""
+    return paper_eval_cluster(n_a100_nodes=2, n_v100_nodes=2)
+
+
+def fig10_scfg(**kw) -> ServingConfig:
+    """The acceptance workload: a queueing-dominated regime where uniform
+    routing saturates the slow pool."""
+    kw.setdefault("qps", 1600.0)
+    kw.setdefault("duration_s", 1.0)
+    kw.setdefault("prompt_mean", 256)
+    kw.setdefault("output_mean", 64)
+    kw.setdefault("search_sample", 400)
+    return ServingConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def fig10_case():
+    """(scfg, searched plan, colocated baseline plan, full trace) — searched
+    once per module; every consumer treats the plans as immutable."""
+    scfg = fig10_scfg()
+    cluster = fig10_cluster()
+    arch = get_config("gemma-2b")
+    trace = poisson_trace(scfg.qps, scfg.duration_s, seed=scfg.seed,
+                          prompt_mean=scfg.prompt_mean,
+                          output_mean=scfg.output_mean)
+    best = search_placement(arch, cluster, scfg, trace=trace)
+    base = colocated_plan(arch, cluster, scfg)
+    return scfg, best, base, trace
+
+
+# ---------------------------------------------------------------------------
+# Workload traces
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_deterministic_per_seed():
+    a = poisson_trace(100.0, 0.5, seed=7)
+    b = poisson_trace(100.0, 0.5, seed=7)
+    c = poisson_trace(100.0, 0.5, seed=8)
+    assert a.to_dict() == b.to_dict()
+    assert a.to_dict() != c.to_dict()
+    assert a.n_requests > 10
+    arr = [r.arrival_s for r in a.requests]
+    assert arr == sorted(arr)
+
+
+def test_trace_json_round_trip():
+    t = poisson_trace(50.0, 0.5, seed=3)
+    assert ServeTrace.from_dict(t.to_dict()).to_dict() == t.to_dict()
+
+
+def test_trace_remapped_rescales_qps_keeping_lengths():
+    t = poisson_trace(100.0, 1.0, seed=1)
+    fast = t.remapped(200.0)
+    assert fast.qps == pytest.approx(200.0)
+    assert [(r.prompt_tokens, r.output_tokens) for r in fast.requests] \
+        == [(r.prompt_tokens, r.output_tokens) for r in t.requests]
+
+
+def test_trace_take_prefix():
+    t = poisson_trace(100.0, 1.0, seed=0)
+    assert t.take(5).n_requests == 5
+    assert t.take(5).requests == t.requests[:5]
+    assert t.take(10 ** 9) is t
+
+
+def test_scripted_trace_even_spacing():
+    t = scripted_trace(10.0, 5, prompt_tokens=32, output_tokens=8)
+    assert [r.arrival_s for r in t.requests] \
+        == pytest.approx([0.0, 0.1, 0.2, 0.3, 0.4])
+    assert all(r.prompt_tokens == 32 and r.output_tokens == 8
+               for r in t.requests)
+
+
+# ---------------------------------------------------------------------------
+# KV-bound arithmetic (Eq. 18 analog)
+# ---------------------------------------------------------------------------
+
+
+def test_kv_bytes_per_token_hand_computed():
+    # gemma-2b: 18 layers, 1 KV head x 256 head_dim, K+V at 2 bytes
+    cfg = get_config("gemma-2b")
+    assert kvplan.kv_bytes_per_token(cfg, 2.0) == 18 * 2 * 1 * 256 * 2.0
+    # zamba2: one shared attention application every 6 SSM layers
+    hyb = get_config("zamba2-7b")
+    n_apps = hyb.n_layers // hyb.shared_attn_every
+    assert kvplan.kv_bytes_per_token(hyb, 2.0) \
+        == n_apps * 2 * hyb.kv_dim * 2.0
+    # pure SSM appends no per-token KV; its state is fixed f32
+    ssm = get_config("mamba2-2.7b")
+    assert kvplan.kv_bytes_per_token(ssm, 2.0) == 0.0
+    per_layer = (ssm.n_ssm_heads * ssm.ssm_head_dim * ssm.ssm_state
+                 + (ssm.ssm_conv - 1) * (ssm.d_inner + 2 * ssm.ssm_state))
+    assert kvplan.state_bytes_per_seq(ssm) == ssm.n_layers * 4.0 * per_layer
+
+
+@pytest.mark.parametrize("arch", [
+    "gemma-2b", "granite-moe-1b-a400m", "mamba2-2.7b", "zamba2-7b",
+    "llama-3.2-vision-90b", "whisper-medium",
+])
+def test_kv_accounting_matches_model_cache_bytes(arch):
+    """The planner's byte formulas equal the real decode-cache footprint
+    (f32 cache) for every unwindowed family."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import build_model
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    B, S = 2, 8
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    pred = B * S * kvplan.kv_bytes_per_token(cfg, 4.0) \
+        + B * kvplan.state_bytes_per_seq(cfg, 4.0)
+    assert pred == pytest.approx(nbytes)
+
+
+def test_windowed_charge_is_conservative():
+    """Sliding-window archs are charged at the full-attention rate: the
+    bound may over-reserve, never under-reserve."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import build_model
+
+    cfg = get_config("gemma3-12b").reduced()
+    model = build_model(cfg)
+    B, S = 2, 64
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    pred = B * S * kvplan.kv_bytes_per_token(cfg, 4.0) \
+        + B * kvplan.state_bytes_per_seq(cfg, 4.0)
+    assert pred >= nbytes
+
+
+def test_blocks_for_seq_rounding():
+    cfg = get_config("gemma-2b")
+    # 100 tokens in 16-token blocks -> ceil = 7; no fixed state
+    assert kvplan.blocks_for_seq(cfg, 100, 16) == 7
+    assert kvplan.blocks_for_seq(cfg, 96, 16) == 6
+    # pure SSM degenerates to one per-sequence slot
+    assert kvplan.blocks_for_seq(get_config("mamba2-2.7b"), 10_000, 16) == 1
+
+
+def test_decode_capacity_hand_computed():
+    cfg = get_config("gemma-2b")
+    sub = SubCluster("toy", 1, 2, A100_40G, 300e9, 200 * GBPS)  # 2x40 GB
+    weights = 10e9
+    bound = kvplan.decode_capacity(cfg, sub, weights_bytes=weights,
+                                   block_tokens=16, dtype_bytes=2.0,
+                                   mem_headroom=0.9)
+    bb = 16 * kvplan.kv_bytes_per_token(cfg, 2.0)
+    free = 0.9 * 2 * A100_40G.mem_bytes - weights
+    assert bound.block_bytes == bb
+    assert bound.blocks_capacity == int(free // bb)
+    # weights that don't fit -> zero capacity, never negative
+    huge = kvplan.decode_capacity(cfg, sub, weights_bytes=1e15,
+                                  block_tokens=16)
+    assert huge.blocks_capacity == 0
+
+
+# ---------------------------------------------------------------------------
+# Objective
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_linear_interpolation():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 0) == 1.0
+    assert percentile([], 99) == 0.0
+    assert percentile([5.0], 99) == 5.0
+
+
+def _result(n_completed=10, n_rejected=0, ttft=0.01, tpot=0.001,
+            goodput=1000):
+    from repro.serving.batching import ServeSimResult
+    return ServeSimResult(
+        n_completed=n_completed, n_rejected=n_rejected,
+        ttft_s=[ttft] * n_completed, tpot_s=[tpot] * n_completed,
+        makespan_s=1.0, completed_output_tokens=goodput,
+        goodput_output_tokens=goodput, slo_ttft_s=0.2, slo_tpot_s=0.02)
+
+
+def test_score_tiers_rejections_dominate_slo_dominates_latency():
+    ok = score(_result(), "slo", slo_ttft_s=0.2, slo_tpot_s=0.02)
+    slow = score(_result(ttft=0.05), "slo", slo_ttft_s=0.2, slo_tpot_s=0.02)
+    violating = score(_result(ttft=0.5), "slo",
+                      slo_ttft_s=0.2, slo_tpot_s=0.02)
+    rejecting = score(_result(n_rejected=5), "slo",
+                      slo_ttft_s=0.2, slo_tpot_s=0.02)
+    assert ok < slow < violating < rejecting
+    with pytest.raises(ValueError):
+        score(_result(), "nope", slo_ttft_s=0.2, slo_tpot_s=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Simulator: determinism + admission control
+# ---------------------------------------------------------------------------
+
+
+def _toy_plan(blocks_capacity=40, max_queue=8, routing="uniform"):
+    """Hand-built single-pool plan with exactly controllable KV capacity."""
+    pool = PoolSpec(
+        name="toy", cluster_idx=0, role="mixed", n_devices=1,
+        weights_bytes=1e9, block_bytes=16 * 1000.0,
+        blocks_capacity=blocks_capacity, prefill_chunk_s=1e-3,
+        hbm_bytes_per_s=1e12, decode_flops_per_s=1e12)
+    return ServePlan(
+        arch="toy", objective="slo", routing=routing, prefill_chunk=256,
+        block_tokens=16, kv_bytes_per_token=1000.0, state_bytes_per_seq=0.0,
+        flops_per_token=1e9, step_overhead_s=1e-4, max_queue=max_queue,
+        slo_ttft_s=0.2, slo_tpot_s=0.02, pools=[pool])
+
+
+def test_simulator_deterministic():
+    plan = _toy_plan()
+    trace = poisson_trace(100.0, 0.3, seed=5, prompt_mean=64, output_mean=8)
+    a = simulate_trace(plan, trace)
+    b = simulate_trace(plan, trace)
+    assert a.summary() == b.summary()
+    assert a.ttft_s == b.ttft_s and a.tpot_s == b.tpot_s
+
+
+def test_scripted_trace_completes_at_low_load():
+    plan = _toy_plan()
+    trace = scripted_trace(5.0, 10, prompt_tokens=64, output_tokens=8)
+    res = simulate_trace(plan, trace)
+    assert res.n_completed == 10 and res.n_rejected == 0
+    assert res.kv_violations == 0
+    assert res.n_handoffs == 0          # single pool: KV never ships
+
+
+def test_admission_control_rejects_never_ooms():
+    # capacity = 2 concurrent worst-case sequences (20 blocks each); a burst
+    # of 30 must reject the overflow, and the block bound must hold
+    plan = _toy_plan(blocks_capacity=40, max_queue=4)
+    assert plan.seq_blocks(256 + 64) == 20
+    trace = scripted_trace(5000.0, 30, prompt_tokens=256, output_tokens=64)
+    res = simulate_trace(plan, trace)
+    assert res.n_rejected > 0
+    assert res.n_completed + res.n_rejected == 30
+    assert res.kv_violations == 0
+    for name, peak in res.peak_blocks.items():
+        assert peak <= res.blocks_capacity[name]
+
+
+def test_seq_blocks_matches_kvplan():
+    cfg = get_config("gemma-2b")
+    plan = _toy_plan()
+    plan = dataclasses.replace(
+        plan, kv_bytes_per_token=kvplan.kv_bytes_per_token(cfg, 2.0),
+        state_bytes_per_seq=kvplan.state_bytes_per_seq(cfg, 2.0))
+    for seq in (1, 15, 16, 17, 100, 1000):
+        assert plan.seq_blocks(seq) == kvplan.blocks_for_seq(cfg, seq, 16)
+
+
+# ---------------------------------------------------------------------------
+# fig10 acceptance: disaggregated beats colocated-uniform on p99 TTFT
+# ---------------------------------------------------------------------------
+
+
+def test_fig10_searched_beats_colocated_p99_ttft(fig10_case):
+    scfg, best, base, trace = fig10_case
+    searched = simulate_trace(best, trace)
+    colocated = simulate_trace(base, trace)
+    # equal offered load, strictly better tail latency
+    assert searched.p99_ttft_s < colocated.p99_ttft_s
+    # the KV bound is never violated on either plan; peaks stay in budget
+    for res in (searched, colocated):
+        assert res.kv_violations == 0
+        for name, peak in res.peak_blocks.items():
+            assert peak <= res.blocks_capacity[name]
+    # the search disaggregates: not every pool is left in the mixed role
+    assert any(p.role != "mixed" for p in best.pools)
+    assert all(p.role == "mixed" for p in base.pools)
+
+
+def test_fig10_plan_records_predicted_and_baseline(fig10_case):
+    _, best, _, _ = fig10_case
+    assert best.predicted and best.baseline
+    assert best.predicted["p99_ttft_s"] < best.baseline["p99_ttft_s"]
+    assert best.predicted["kv_violations"] == 0
+
+
+def test_serve_plan_json_round_trip(fig10_case):
+    _, best, _, _ = fig10_case
+    s = json.dumps(best.to_dict(), indent=2)
+    back = ServePlan.from_dict(json.loads(s))
+    assert json.dumps(back.to_dict(), indent=2) == s
+
+
+def _schema(obj):
+    """Key-tree + JSON-type skeleton (mirrors tests/test_api.py)."""
+    if isinstance(obj, dict):
+        return {k: _schema(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, list):
+        return [_schema(obj[0])] if obj else []
+    if isinstance(obj, bool):
+        return "bool"
+    if isinstance(obj, int):
+        return "int"
+    if isinstance(obj, float):
+        return "float"
+    if isinstance(obj, str):
+        return "str"
+    assert obj is None, f"unexpected JSON type {type(obj)}"
+    return "null"
+
+
+def test_serve_plan_schema_matches_golden(fig10_case):
+    _, best, _, _ = fig10_case
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert _schema(best.to_dict()) == golden, (
+        "ServePlan JSON schema drifted from tests/golden/"
+        "serve_plan_schema.json.  If the change is INTENTIONAL, bump "
+        "repro.serving.placement.SERVE_SCHEMA_VERSION and regenerate the "
+        "golden file; otherwise you broke the serve section of the plan "
+        "artifact.")
+
+
+def test_cost_cache_reused_across_searches():
+    """A second search on the same fleet re-uses every stage-cost entry
+    (the profiler's key recipe — no re-pricing)."""
+    cache = {}
+    scfg = fig10_scfg(duration_s=0.1, search_sample=50)
+    arch = get_config("gemma-2b")
+    search_placement(arch, fig10_cluster(), scfg, cost_cache=cache)
+    n = len(cache)
+    assert n > 0
+    search_placement(arch, fig10_cluster(), scfg, cost_cache=cache)
+    assert len(cache) == n
+
+
+# ---------------------------------------------------------------------------
+# Facade + CLI integration (schema v4)
+# ---------------------------------------------------------------------------
+
+
+def small_cfg(**kw):
+    return api.HarpConfig(
+        seq_len=512, global_batch=16,
+        planner=PlannerConfig(granularity=16, n_microbatches=16), **kw)
+
+
+def serving_small_cfg():
+    return small_cfg(serving=fig10_scfg(duration_s=0.2, search_sample=100))
+
+
+def test_plan_serving_off_state_is_training_identical():
+    """The off-state invariant (DESIGN.md §7): attaching a ServingConfig
+    changes ONLY the serve section and the config's serving field — the
+    strategy, predicted step sim, and cluster provenance are bit-identical."""
+    cluster = fig10_cluster()
+    off = api.plan("gemma-2b", cluster, small_cfg())
+    on = api.plan("gemma-2b", cluster, serving_small_cfg())
+    assert off.serve is None and on.serve is not None
+    d_off, d_on = off.to_dict(), on.to_dict()
+    for d in (d_off, d_on):
+        # wall-clock provenance varies between any two runs, serving or not
+        for k in list(d["strategy"]["planner_meta"]):
+            if k.startswith("time_"):
+                d["strategy"]["planner_meta"].pop(k)
+    assert d_off["strategy"] == d_on["strategy"]
+    assert d_off["predicted"] == d_on["predicted"]
+    assert d_off["cluster"] == d_on["cluster"]
+    d_on["config"]["serving"] = None
+    d_on["serve"] = None
+    assert d_off == d_on
+
+
+def test_pre_v4_artifact_still_loads():
+    cluster = fig10_cluster()
+    d = api.plan("gemma-2b", cluster, small_cfg()).to_dict()
+    # a v3 artifact has neither key
+    d.pop("serve")
+    d["config"].pop("serving")
+    p = api.Plan.from_dict(d)
+    assert p.serve is None and p.config.serving is None
+
+
+def test_plan_with_serving_round_trips_and_simulates():
+    cluster = fig10_cluster()
+    p = api.plan("gemma-2b", cluster, serving_small_cfg())
+    s = p.to_json()
+    assert api.Plan.from_json(s).to_json() == s
+    exe = api.compile(plan_artifact=p)
+    res = exe.serve_simulate()
+    assert res.n_completed > 0 and res.kv_violations == 0
+    # override load through the facade
+    res2 = exe.serve_simulate(qps=100.0, duration_s=0.1)
+    assert res2.n_completed + res2.n_rejected <= res.n_completed \
+        + res.n_rejected
+    # a supplied trace is remapped to the requested qps
+    t = scripted_trace(10.0, 20, prompt_tokens=64, output_tokens=8)
+    res3 = exe.serve_simulate(t, qps=40.0)
+    assert res3.n_completed == 20
+
+
+def test_serve_simulate_without_serving_raises():
+    exe = api.compile("gemma-2b", fig10_cluster(), small_cfg())
+    with pytest.raises(ValueError, match="serving"):
+        exe.serve_simulate()
+
+
+def test_serving_config_validation_through_harp_config():
+    with pytest.raises(ValueError, match="serving"):
+        small_cfg(serving=ServingConfig(qps=-1.0)).validate()
+    with pytest.raises(ValueError, match="objective"):
+        small_cfg(serving=ServingConfig(objective="nope")).validate()
+
+
+def test_registry_serve_trace_builders():
+    scfg = ServingConfig(qps=10.0, duration_s=0.5, prompt_mean=64,
+                         output_mean=8)
+    t = api.registry.resolve("serve_trace", "poisson")(scfg)
+    assert t.n_requests > 0
+    t2 = api.registry.resolve("serve_trace", "poisson")(scfg, qps=20.0,
+                                                        duration_s=0.25)
+    assert t2.to_dict() != t.to_dict()
+    s = api.registry.resolve("serve_trace", "scripted")(scfg, n_requests=7)
+    assert s.n_requests == 7
+    assert s.requests[0].prompt_tokens == 64
+
+
+def test_cli_plan_serving_simulate_trace(tmp_path, capsys):
+    from repro.api.cli import main
+    out = tmp_path / "plan.json"
+    rc = main(["plan", "--arch", "gemma-2b", "--cluster", "paper_eval",
+               "--cluster-kw", "n_a100_nodes=2",
+               "--cluster-kw", "n_v100_nodes=2",
+               "--granularity", "16", "--microbatches", "16",
+               "--global-batch", "16", "--seq-len", "512",
+               "--serving", "--qps", "200", "--serving-duration", "0.2",
+               "--prompt-mean", "128", "--output-mean", "16",
+               "-o", str(out)])
+    assert rc == 0 and out.exists()
+    plan = api.Plan.from_json(out.read_text())
+    assert plan.serve is not None
+    assert plan.to_json() == out.read_text()
+    assert "ServePlan" in capsys.readouterr().out
+    rc = main(["simulate", "--plan", str(out), "--trace", "poisson",
+               "--qps", "100", "--duration", "0.1"])
+    assert rc == 0
+    assert "completed" in capsys.readouterr().out
+
+
+def test_cli_simulate_trace_without_serving_plan_errors(tmp_path):
+    from repro.api.cli import main
+    out = tmp_path / "plan.json"
+    rc = main(["plan", "--arch", "gpt-2b", "--cluster", "paper_case_study",
+               "--granularity", "16", "--microbatches", "16",
+               "--global-batch", "16", "--seq-len", "512", "-o", str(out)])
+    assert rc == 0
+    with pytest.raises(SystemExit, match="serving"):
+        main(["simulate", "--plan", str(out), "--trace", "poisson"])
+
+
+# ---------------------------------------------------------------------------
+# Serve step: greedy honored, sampling threads the PRNG key
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_serve_model():
+    import jax
+
+    from repro.configs.base import ShapeSpec
+    from repro.models.prefill import prefill as run_prefill
+    from repro.serve.step import make_serve_step
+
+    cfg = get_config("gemma-2b").reduced()
+    shape = ShapeSpec("test_decode", 24, 2, "decode")
+    step_g, model, _ = make_serve_step(cfg, shape=shape, greedy=True)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 8), 0, cfg.vocab_size)}
+    last, cache = run_prefill(cfg, params, batch, cache_len=24)
+    return cfg, shape, model, params, batch, last, cache
+
+
+def test_serve_step_greedy_matches_argmax(tiny_serve_model):
+    import jax.numpy as jnp
+
+    from repro.serve.step import make_serve_step
+
+    cfg, shape, model, params, batch, last, cache = tiny_serve_model
+    step_g, _, _ = make_serve_step(cfg, shape=shape, greedy=True)
+    tok = jnp.argmax(last[:, -1:], axis=-1).astype(jnp.int32)
+    nxt, _ = step_g(params, cache, tok, jnp.int32(8))
+    logits, _ = model.decode_step(params, cache, tok, jnp.int32(8))
+    assert bool(jnp.all(nxt == jnp.argmax(logits[:, -1:], axis=-1)))
+    assert nxt.shape == (2, 1)
+
+
+def test_serve_step_sampling_honors_greedy_flag(tiny_serve_model):
+    """The regression this pins: ``greedy=False`` used to silently run
+    argmax.  Now it samples — deterministic per key, temperature-scaled."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.step import make_serve_step
+
+    cfg, shape, model, params, batch, last, cache = tiny_serve_model
+    step_s, _, _ = make_serve_step(cfg, shape=shape, greedy=False,
+                                   temperature=1.0)
+    key = jax.random.PRNGKey(42)
+    a, _ = step_s(params, cache, batch["tokens"][:, :1], jnp.int32(8), key)
+    b, _ = step_s(params, cache, batch["tokens"][:, :1], jnp.int32(8), key)
+    assert bool(jnp.all(a == b))        # same key -> same sample
+    assert a.shape == (2, 1) and a.dtype == jnp.int32
+    # matches categorical on the same logits with the same key
+    logits, _ = model.decode_step(params, cache, batch["tokens"][:, :1],
+                                  jnp.int32(8))
+    want = jax.random.categorical(
+        key, logits[:, -1, :].astype(jnp.float32), axis=-1)[:, None]
+    assert bool(jnp.all(a == want))
+
+
+def test_serve_step_rejects_bad_temperature(tiny_serve_model):
+    from repro.serve.step import make_serve_step
+
+    cfg, shape, *_ = tiny_serve_model
+    with pytest.raises(ValueError, match="temperature"):
+        make_serve_step(cfg, shape=shape, greedy=False, temperature=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Prefill == step-by-step decode (dense + MoE + SSM state), fast tier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "granite-moe-1b-a400m",
+                                  "mamba2-2.7b"])
+def test_prefill_equals_stepwise_decode_logits(arch):
+    """The serving contract api.generate relies on: prefilling t0 tokens
+    then decoding one-by-one produces the same logits as the full forward
+    (f32 cache for exact accumulation)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import build_model
+    from repro.models.prefill import prefill as run_prefill
+
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(6)
+    params = model.init(rng)
+    B, T, t0 = 2, 10, 6
+    batch = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
+    full, _ = model.forward(params, batch)
+    last, cache = run_prefill(cfg, params,
+                              {"tokens": batch["tokens"][:, :t0]},
+                              cache_len=T, cache_dtype=jnp.float32)
+    errs = [float(jnp.max(jnp.abs(last[:, 0] - full[:, t0 - 1])))]
+    for t in range(t0, T):
+        lg, cache = model.decode_step(params, cache,
+                                      batch["tokens"][:, t:t + 1],
+                                      jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(errs) < 5e-4, f"{arch}: decode diverges {max(errs)}"
+
+
+def test_generate_greedy_deterministic():
+    out = api.generate("gemma-2b", batch=2, prompt_len=8, gen_tokens=4,
+                       reduced=True)
+    out2 = api.generate("gemma-2b", batch=2, prompt_len=8, gen_tokens=4,
+                        reduced=True)
+    assert out["tokens"].shape == (2, 4)
+    assert (out["tokens"] == out2["tokens"]).all()
