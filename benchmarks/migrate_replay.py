@@ -1,0 +1,249 @@
+"""Migration replay benchmark -> ``BENCH_migrate.json`` at repo root.
+
+One entry per run, on the paper's case-study fleet (2x2 A100 + 1x2 V100,
+5 Gbps cross): one A100 node is reclaimed at step E (the running plan no
+longer fits — forced replan) and returns at step E+K (voluntary replan,
+gated by the amortization rule).  The same scripted trace drives:
+
+- **elastic/priced**: the controller prices each migration with the layout
+  differ + fair-share netsim (``repro.migrate``) — moved bytes only, each
+  from the nearest surviving replica (checkpoint only for shards whose
+  replicas all sat on the lost node), overlapped with the old plan's drain;
+- **elastic/legacy**: same controller, the old params-over-the-cross-link
+  migration guess (``migration_pricing="legacy"``) — recorded to show the
+  guess and the exact price genuinely differ;
+- **static**: the initial plan is never changed; infeasible steps earn zero
+  tokens (stall-and-wait reference).
+
+The acceptance axes (gated under ``--fail-on-regression``):
+
+1. **charge == price**: the wall clock the elastic replay charges beyond
+   productive steps matches the decisions' priced downtime within 5%;
+2. **differ engaged**: every adoption shipped bytes, and strictly fewer
+   than the full state (live migration moves only what moved);
+3. **migration beats checkpoint-restart**: the priced downtime of the
+   forced migration undercuts restarting from the newest checkpoint
+   (full-state restore at the same ``restore_bw`` + re-running the steps
+   since the last save);
+4. **overlap never hurts**: overlapped downtime <= stop-the-world serial.
+
+``--tiny`` shrinks the horizon to CI size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit_csv                        # noqa: E402
+
+from repro import api                                         # noqa: E402
+from repro.core.cluster import (                              # noqa: E402
+    paper_case_study_cluster, remove_nodes,
+)
+from repro.core.planner import PlannerConfig                  # noqa: E402
+from repro.migrate import DEFAULT_RESTORE_BW                  # noqa: E402
+from repro.runtime.controller import (                        # noqa: E402
+    ControllerConfig, ElasticController,
+)
+from repro.runtime.events import EventTrace, Preemption       # noqa: E402
+from repro.runtime.replay import run_replay                   # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_migrate.json")
+
+ARCH = "gpt-2b"
+SEQ_LEN = 512
+GLOBAL_BATCH = 16
+CKPT_EVERY = 20          # steps between checkpoints for the restart baseline
+
+
+def _pcfg() -> PlannerConfig:
+    return PlannerConfig(granularity=16, n_microbatches=16)
+
+
+def _controller(n_steps: int, pricing: str) -> ElasticController:
+    return ElasticController(
+        paper_case_study_cluster(), ARCH, planner_cfg=_pcfg(),
+        cfg=ControllerConfig(
+            total_steps=n_steps, seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+            migration_pricing=pricing))
+
+
+def run(tiny: bool = False, label: Optional[str] = None) -> Dict:
+    n_steps, e_step, k_steps = (40, 10, 15) if tiny else (120, 30, 45)
+    trace = EventTrace([Preemption(step=e_step, subcluster="meshA100",
+                                   n_nodes=1, duration_steps=k_steps)])
+
+    t0 = time.perf_counter()
+    ctrl = _controller(n_steps, "priced")
+    ctrl.bootstrap()
+    ideal_tput = ctrl.strategy.tokens_per_step() / ctrl.strategy.est_step_time
+    ideal_step_s = ctrl.strategy.est_step_time
+    init_strategy, init_cluster = ctrl.strategy, ctrl.plan_cluster
+    layers = ctrl.layers
+    elastic = run_replay(trace, n_steps, controller=ctrl)
+
+    ctrl_legacy = _controller(n_steps, "legacy")
+    ctrl_legacy.bootstrap()
+    legacy = run_replay(trace, n_steps, controller=ctrl_legacy)
+
+    static = run_replay(trace, n_steps, strategy=init_strategy,
+                        plan_cluster=init_cluster, layers=layers)
+
+    # standalone pricing of the forced move (the facade path the CLI takes):
+    # differ + netsim vs restarting from the newest checkpoint
+    cfg = api.HarpConfig(seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+                         planner=_pcfg())
+    exe = api.compile(ARCH, paper_case_study_cluster(), cfg)
+    shrunk = remove_nodes(paper_case_study_cluster(), "meshA100", 1)
+    mig = exe.migrate_to(shrunk).plan.migration
+    restart_s = (mig["total_bytes"] / DEFAULT_RESTORE_BW
+                 + (CKPT_EVERY / 2.0) * ideal_step_s)
+    wall_s = time.perf_counter() - t0
+
+    charged = elastic.wall_total_s - sum(s.step_time_s
+                                         for s in elastic.samples)
+    priced = elastic.migration_s + elastic.search_s
+    adoptions = [d for d in elastic.decisions if d.migration_s > 0
+                 or d.migration_bytes > 0]
+
+    lost_elastic = elastic.tokens_lost(ideal_tput)
+    lost_static = static.tokens_lost(ideal_tput)
+
+    case = {
+        "cluster": paper_case_study_cluster().describe(),
+        "arch": ARCH,
+        "n_steps": n_steps,
+        "preempt_step": e_step,
+        "outage_steps": k_steps,
+        "ideal_tokens_per_s": round(ideal_tput, 1),
+        "priced_migration_s": round(elastic.migration_s, 4),
+        "priced_search_s": round(elastic.search_s, 4),
+        "charged_downtime_s": round(charged, 4),
+        "migration_mbytes": round(elastic.migration_bytes / 1e6, 1),
+        "n_adoptions": len(adoptions),
+        "legacy_migration_s": round(legacy.migration_s, 4),
+        "forced_move": {
+            "moved_mbytes": round(mig["moved_bytes"] / 1e6, 1),
+            "ckpt_mbytes": round(mig["ckpt_bytes"] / 1e6, 1),
+            "local_mbytes": round(mig["local_bytes"] / 1e6, 1),
+            "total_mbytes": round(mig["total_bytes"] / 1e6, 1),
+            "n_transfers": mig["n_transfers"],
+            "downtime_s": round(mig["downtime_s"], 4),
+            "serial_s": round(mig["serial_s"], 4),
+            "drain_s": round(mig["drain_s"], 4),
+            "ckpt_restart_s": round(restart_s, 4),
+            "speedup_vs_restart": round(restart_s / mig["downtime_s"], 3)
+            if mig["downtime_s"] > 0 else 0.0,
+        },
+        "elastic_tokens_lost": round(lost_elastic, 1),
+        "legacy_tokens_lost": round(legacy.tokens_lost(ideal_tput), 1),
+        "static_tokens_lost": round(lost_static, 1),
+        "static_stalled_steps": static.stalled_steps,
+        "charge_matches_pricing": abs(charged - priced)
+            <= 0.05 * max(priced, 1e-9),
+        "differ_engaged": len(adoptions) > 0
+            and all(d.migration_bytes > 0 for d in adoptions)
+            and mig["moved_bytes"] + mig["ckpt_bytes"] < mig["total_bytes"],
+        "migration_beats_restart": mig["downtime_s"] < restart_s,
+        "overlap_no_worse": mig["downtime_s"] <= mig["serial_s"] + 1e-9,
+        "bench_seconds": round(wall_s, 3),
+    }
+    return {"label": label or "HEAD",
+            "mode": "tiny" if tiny else "full",
+            "cases": {"preemption_cycle": case}}
+
+
+def extend_trajectory(entry: Dict, path: str = BENCH_PATH) -> Dict:
+    """Append one run to the migration trajectory (creates the file on
+    first use)."""
+    doc = {"schema": 1,
+           "description": "Migration-replay trajectory; one entry per "
+                          "benchmarks/migrate_replay.py run — see "
+                          "docs/migration.md.",
+           "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["runs"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def rows_from_entry(entry: Dict) -> List[Dict]:
+    rows = []
+    for name, c in entry["cases"].items():
+        fm = c["forced_move"]
+        rows.append({
+            "label": f"{name}.migrate",
+            "step_time_s": fm["downtime_s"],
+            "derived": f"moved_mb={fm['moved_mbytes']};"
+                       f"ckpt_mb={fm['ckpt_mbytes']};"
+                       f"transfers={fm['n_transfers']};"
+                       f"serial={fm['serial_s']}"})
+        rows.append({
+            "label": f"{name}.restart",
+            "step_time_s": fm["ckpt_restart_s"],
+            "derived": f"speedup={fm['speedup_vs_restart']}x;"
+                       f"total_mb={fm['total_mbytes']}"})
+        rows.append({
+            "label": f"{name}.replay",
+            "step_time_s": c["charged_downtime_s"],
+            "derived": f"priced={c['priced_migration_s']};"
+                       f"legacy={c['legacy_migration_s']};"
+                       f"elastic_lost={c['elastic_tokens_lost']};"
+                       f"static_lost={c['static_tokens_lost']}"})
+    return rows
+
+
+def main() -> None:
+    """benchmarks/run.py contract: full measurement, CSV on stdout, one
+    trajectory entry appended to BENCH_migrate.json."""
+    entry = run(tiny=False)
+    extend_trajectory(entry)
+    emit_csv(rows_from_entry(entry))
+
+
+def cli(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized horizon (seconds, not minutes)")
+    ap.add_argument("--label", default=None,
+                    help="trajectory entry label (default HEAD)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="trajectory JSON path (default repo root)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 unless the charged downtime matches the "
+                         "priced downtime (±5%%), adoptions shipped bytes, "
+                         "the priced migration undercuts checkpoint-restart, "
+                         "and overlap never exceeds serial")
+    args = ap.parse_args(argv)
+
+    entry = run(tiny=args.tiny, label=args.label)
+    extend_trajectory(entry, args.out)
+    emit_csv(rows_from_entry(entry))
+    print(f"# trajectory entry appended to {os.path.abspath(args.out)}",
+          file=sys.stderr)
+
+    bad = [name for name, c in entry["cases"].items()
+           if not (c["charge_matches_pricing"] and c["differ_engaged"]
+                   and c["migration_beats_restart"]
+                   and c["overlap_no_worse"])]
+    if bad:
+        print(f"# migration replay regressed on: {bad}", file=sys.stderr)
+        if args.fail_on_regression:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

@@ -31,9 +31,11 @@ from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 4   # v4: serving subsystem — HarpConfig.serving, Plan.serve
-                     # (the ServePlan section; None on training-only plans)
-                     # (v3: comm subsystem — PlannerConfig.comm, per-stage
+SCHEMA_VERSION = 5   # v5: migration subsystem — Plan.migration (the priced
+                     # differ summary from Executable.migrate_to / the CLI
+                     # `repro migrate`; None on directly-planned artifacts)
+                     # (v4: serving subsystem — HarpConfig.serving, Plan.serve;
+                     # v3: comm subsystem — PlannerConfig.comm, per-stage
                      # collective algorithms, LoweredPlan link occupancy;
                      # v2: SearchConfig gained engine/batch_size knobs)
 
@@ -100,6 +102,9 @@ class Plan:
     predicted: Dict[str, Any] = field(default_factory=dict)
     serve: Optional[Dict[str, Any]] = None    # ServePlan.to_dict() when the
                                               # config carried a ServingConfig
+    migration: Optional[Dict[str, Any]] = None  # priced differ summary when
+                                                # this plan was produced by
+                                                # migrate_to / `repro migrate`
     version: int = SCHEMA_VERSION
 
     def to_cluster(self) -> HeteroCluster:
@@ -115,6 +120,7 @@ class Plan:
             "strategy": json.loads(self.strategy.to_json()),
             "predicted": self.predicted,
             "serve": self.serve,
+            "migration": self.migration,
         }
 
     def to_json(self) -> str:
@@ -130,6 +136,7 @@ class Plan:
             cluster_fingerprint=d["cluster_fingerprint"],
             predicted=d.get("predicted", {}),
             serve=d.get("serve"),       # absent on pre-v4 artifacts
+            migration=d.get("migration"),   # absent on pre-v5 artifacts
             version=d.get("version", SCHEMA_VERSION))
 
     @staticmethod
@@ -145,6 +152,14 @@ class Plan:
         if self.serve is not None:
             from repro.serving.placement import ServePlan
             lines.append(ServePlan.from_dict(self.serve).describe())
+        if self.migration is not None:
+            m = self.migration
+            lines.append(
+                f"  migrated from {m.get('from_fingerprint', '?')}: "
+                f"{m.get('moved_bytes', 0) / 1e6:.0f}MB moved + "
+                f"{m.get('ckpt_bytes', 0) / 1e6:.0f}MB restored in "
+                f"{m.get('n_transfers', 0)} transfers, "
+                f"{m.get('downtime_s', 0.0):.2f}s downtime")
         return "\n".join(lines)
 
 

@@ -10,6 +10,8 @@ Subcommands round-trip the :class:`~repro.api.artifacts.Plan` JSON artifact:
     python -m repro simulate --plan plan.json --trace poisson --qps 800
     python -m repro train --plan plan.json --smoke --steps 20
     python -m repro replay --plan plan.json --trace paper --steps 120
+    python -m repro migrate --plan plan.json --cluster paper_eval \\
+        --cluster-kw n_a100_nodes=3 -o migrated.json
     python -m repro dryrun --arch minitron-8b --shape train_4k
 
 ``plan`` on a planning box, ``simulate``/``train``/``replay`` anywhere —
@@ -222,6 +224,37 @@ def cmd_replay(args) -> int:
     return 0
 
 
+def cmd_migrate(args) -> int:
+    from repro.api import compile as api_compile
+
+    exe = api_compile(plan_artifact=_load_plan(args.plan))
+    if args.to:
+        target = api_compile(plan_artifact=_load_plan(args.to))
+    else:
+        if not (args.cluster or args.cluster_file):
+            raise SystemExit("migrate needs --to PLAN.json or a new "
+                             "--cluster/--cluster-file to replan onto")
+        target = _load_cluster(args)
+    new_exe = exe.migrate_to(target, overlap=not args.no_overlap,
+                             verbose=args.verbose)
+    with open(args.out, "w") as f:
+        f.write(new_exe.plan.to_json())
+    m = new_exe.plan.migration
+    print(new_exe.plan.describe())
+    print(f"\nmigration: {m['moved_bytes'] / 1e6:.1f} MB moved + "
+          f"{m['ckpt_bytes'] / 1e6:.1f} MB from checkpoint "
+          f"({m['local_bytes'] / 1e6:.1f} MB already in place) in "
+          f"{m['n_transfers']} transfers")
+    per_link = ", ".join(f"{l}={b / 1e6:.1f}MB"
+                         for l, b in m["link_bytes"].items())
+    print(f"link traffic: {per_link or 'none'}")
+    print(f"downtime: {m['downtime_s']:.3f}s "
+          f"(serial {m['serial_s']:.3f}s, drain {m['drain_s']:.3f}s, "
+          f"{'overlapped' if m['overlapped'] else 'stop-the-world'})")
+    print(f"\nmigrated plan written to {args.out}")
+    return 0
+
+
 def cmd_dryrun(args, extra: List[str]) -> int:
     # delegate to the launcher (it owns the XLA device-count env dance)
     from repro.launch import dryrun
@@ -340,6 +373,23 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--static", action="store_true",
                    help="keep the plan fixed (checkpoint-restart baseline)")
 
+    p = sub.add_parser("migrate", help="price moving live state from one "
+                       "plan onto another (repro.migrate differ + netsim)")
+    p.add_argument("--plan", required=True,
+                   help="the currently-running Plan JSON (state source)")
+    p.add_argument("--to", default=None,
+                   help="target Plan JSON (else replan on --cluster)")
+    p.add_argument("--cluster", default=None,
+                   help="registered cluster name to replan onto")
+    p.add_argument("--cluster-kw", action="append", default=[], metavar="K=V")
+    p.add_argument("--cluster-file",
+                   help="cluster spec JSON (api.cluster_to_dict format)")
+    p.add_argument("--no-overlap", action="store_true",
+                   help="price stop-the-world instead of overlapping the "
+                        "old plan's drain")
+    p.add_argument("-o", "--out", default="migrated_plan.json")
+    p.add_argument("--verbose", action="store_true")
+
     sub.add_parser("dryrun", add_help=False,
                    help="forward to repro.launch.dryrun (own flags)")
     return ap
@@ -351,7 +401,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return cmd_dryrun(None, argv[1:])
     args = build_parser().parse_args(argv)
     return {"plan": cmd_plan, "simulate": cmd_simulate,
-            "train": cmd_train, "replay": cmd_replay}[args.cmd](args)
+            "train": cmd_train, "replay": cmd_replay,
+            "migrate": cmd_migrate}[args.cmd](args)
 
 
 if __name__ == "__main__":

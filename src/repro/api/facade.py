@@ -42,7 +42,8 @@ from repro.train.trainer import Trainer
 
 from repro.api import registry
 from repro.api.artifacts import (
-    LoweredPlan, Plan, StageLowering, cluster_to_dict, sim_summary,
+    SCHEMA_VERSION, LoweredPlan, Plan, StageLowering, cluster_to_dict,
+    sim_summary,
 )
 from repro.api.config import HarpConfig
 
@@ -395,6 +396,89 @@ class Executable:
             return run_replay(trace, n_steps, controller=ctrl)
         return run_replay(trace, n_steps, strategy=self.strategy,
                           plan_cluster=self.cluster, layers=self.layers)
+
+    def migrate_to(self, target: Union["Executable", Plan, HeteroCluster], *,
+                   opt_bytes_per_param: float = 2.0,
+                   restore_bw: Optional[float] = None,
+                   overlap: bool = True,
+                   verbose: bool = False) -> "Executable":
+        """Plan the live move of this executable's state onto ``target``.
+
+        ``target`` is a new fleet (a fresh HAPT search runs on it), or an
+        already-planned :class:`Plan`/:class:`Executable`.  The exact
+        per-device byte layouts of both plans are diffed
+        (``repro.migrate``): only *moved* bytes ship, each from the nearest
+        surviving replica (or the checkpoint when no replica survived a
+        shrink), priced through the comm topology's tiered links overlapped
+        with this plan's drain.  Returns the target compiled as a new
+        :class:`Executable` whose ``plan.migration`` section carries the
+        full priced transfer summary (schema v5)."""
+        import dataclasses as _dc
+
+        from repro.migrate import (
+            DEFAULT_RESTORE_BW, diff_layouts, layout_from_strategy,
+            lost_devices, price_migration,
+        )
+
+        if isinstance(target, Executable):
+            new_plan, new_cluster = target.plan, target.cluster
+        elif isinstance(target, Plan):
+            new_plan, new_cluster = target, target.to_cluster()
+        elif isinstance(target, HeteroCluster):
+            new_plan, new_cluster = plan(self.arch, target, self.config,
+                                         verbose=verbose), target
+        else:
+            raise TypeError(
+                f"migrate_to() takes an Executable, Plan, or HeteroCluster, "
+                f"not {type(target).__name__}")
+        if new_plan.arch != self.plan.arch:
+            raise ValueError(
+                f"migrate_to(): cannot migrate {self.plan.arch} state onto "
+                f"a {new_plan.arch} plan")
+        for fld in ("seq_len",):
+            if getattr(new_plan.config, fld) != getattr(self.config, fld):
+                raise ValueError(f"migrate_to(): target plan's {fld} differs "
+                                 f"— state layouts would not correspond")
+        for fld in ("granularity", "z_heavy"):
+            if getattr(new_plan.config.planner, fld) != \
+                    getattr(self.config.planner, fld):
+                raise ValueError(
+                    f"migrate_to(): target plan's layering ({fld}) differs — "
+                    f"leaf-to-leaf correspondence needs the same layering")
+
+        old_lay = layout_from_strategy(
+            self.strategy, self.cluster, self.layers,
+            opt_bytes_per_param=opt_bytes_per_param)
+        new_lay = layout_from_strategy(
+            new_plan.strategy, new_cluster, self.layers,
+            opt_bytes_per_param=opt_bytes_per_param)
+        lost = lost_devices(self.cluster, new_cluster)
+        mplan = diff_layouts(old_lay, new_lay, lost=lost)
+        cost = price_migration(
+            mplan, old_lay, new_cluster,
+            old_strategy=self.strategy, old_cluster=self.cluster,
+            layers=self.layers,
+            restore_bw=restore_bw if restore_bw is not None
+            else DEFAULT_RESTORE_BW,
+            overlap=overlap)
+        migration = {
+            "from_fingerprint": self.plan.cluster_fingerprint,
+            "to_fingerprint": new_plan.cluster_fingerprint,
+            "moved_bytes": int(mplan.moved_bytes),
+            "ckpt_bytes": int(mplan.ckpt_bytes),
+            "local_bytes": int(mplan.local_bytes),
+            "total_bytes": int(mplan.total_bytes),
+            "n_transfers": int(mplan.n_transfers),
+            "link_bytes": {k: int(v) for k, v in
+                           sorted(cost.link_bytes.items())},
+            "serial_s": float(cost.serial_s),
+            "drain_s": float(cost.drain_s),
+            "downtime_s": float(cost.downtime_s),
+            "overlapped": bool(cost.overlapped),
+        }
+        stamped = _dc.replace(new_plan, migration=migration,
+                              version=SCHEMA_VERSION)
+        return compile(cluster=new_cluster, plan_artifact=stamped)
 
     # -- serving -------------------------------------------------------------
 

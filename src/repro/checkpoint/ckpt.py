@@ -1,12 +1,24 @@
-"""Fault-tolerant checkpointing: atomic, resumable, reshardable.
+"""Fault-tolerant checkpointing: atomic, resumable, reshardable,
+incremental.
 
 - ``save``: flatten the pytree to path-keyed arrays, write ``.npz`` to a temp
   file, fsync, atomic rename -> a crash mid-write never corrupts the latest
   checkpoint.  A rolling window of checkpoints is kept.
 - ``restore``: load the newest (or a specific) step; missing -> None.
+  Incremental checkpoints are resolved transparently: each file's manifest
+  maps every leaf to the step whose file owns its newest bytes.
 - ``reshard``: place restored host arrays onto a *different* mesh/sharding —
   the elastic-scaling path (node failure -> replan on the surviving cluster
-  -> reshard the last checkpoint onto the new layout).
+  -> reshard the last checkpoint onto the new layout, see ``repro.migrate``).
+- :class:`AsyncCheckpointer`: delta-since-last-save (unchanged leaves are
+  *referenced*, not rewritten) with the write handed to a background thread
+  — the training step only pays for the host snapshot.  The manifest rides
+  inside the atomically-renamed file, so a preemption mid-write (or
+  mid-migration) always falls back to the newest *consistent* state.
+
+Leaf keys are joined with ``SEP``; a key containing the separator, or named
+like the metadata entry, would silently corrupt the flat namespace — both
+are rejected at save time (regression-tested in ``tests/test_checkpoint.py``).
 """
 from __future__ import annotations
 
@@ -14,49 +26,51 @@ import json
 import os
 import re
 import tempfile
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 SEP = "|"
+META_KEY = "__meta__"
+
+
+def _key_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    for p in parts:
+        if SEP in p:
+            raise ValueError(
+                f"checkpoint leaf key {p!r} contains the path separator "
+                f"{SEP!r} — it would corrupt the flat key namespace; "
+                f"rename the pytree key")
+    key = SEP.join(parts)
+    if key == META_KEY:
+        raise ValueError(
+            f"checkpoint leaf key {META_KEY!r} collides with the metadata "
+            f"entry; rename the pytree key")
+    return key
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
-
-    def key_str(kp):
-        parts = []
-        for k in kp:
-            if hasattr(k, "key"):
-                parts.append(str(k.key))
-            elif hasattr(k, "idx"):
-                parts.append(str(k.idx))
-            else:
-                parts.append(str(k))
-        return SEP.join(parts)
-
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        flat[key_str(kp)] = np.asarray(leaf)
+        flat[_key_str(kp)] = np.asarray(leaf)
     return flat
 
 
 def _unflatten_into(template, flat: Dict[str, np.ndarray]):
-    def key_str(kp):
-        parts = []
-        for k in kp:
-            if hasattr(k, "key"):
-                parts.append(str(k.key))
-            elif hasattr(k, "idx"):
-                parts.append(str(k.idx))
-            else:
-                parts.append(str(k))
-        return SEP.join(parts)
-
     leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for kp, tmpl in leaves_kp:
-        key = key_str(kp)
+        key = _key_str(kp)
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key}")
         arr = flat[key]
@@ -67,30 +81,61 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
-         keep: int = 3) -> str:
-    os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten(tree)
-    meta = {"step": step, "extra": extra or {}}
-    path = os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz")
+def _path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz")
+
+
+def _write_atomic(ckpt_dir: str, step: int, meta: Dict,
+                  flat: Dict[str, np.ndarray]) -> str:
+    path = _path(ckpt_dir, step)
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, __meta__=json.dumps(meta), **flat)
+            np.savez(f, **{META_KEY: json.dumps(meta)}, **flat)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+    return path
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Full (self-contained) checkpoint of ``tree`` at ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    meta = {"step": step, "extra": extra or {}}
+    path = _write_atomic(ckpt_dir, step, meta, flat)
     _gc(ckpt_dir, keep)
     return path
 
 
+def _read_meta(ckpt_dir: str, step: int) -> Dict:
+    with np.load(_path(ckpt_dir, step), allow_pickle=False) as z:
+        return json.loads(str(z[META_KEY]))
+
+
 def _gc(ckpt_dir: str, keep: int):
+    """Drop all but the newest ``keep`` steps (``keep=0``/falsy keeps
+    everything) — but never a step an incremental manifest in the kept
+    window still references as a leaf owner."""
     ckpts = sorted(list_steps(ckpt_dir))
-    for step in ckpts[:-keep] if keep else []:
-        os.unlink(os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz"))
+    if not keep:
+        return
+    kept, drop = ckpts[-keep:], ckpts[:-keep]
+    if not drop:
+        return
+    referenced = set()
+    for step in kept:
+        meta = _read_meta(ckpt_dir, step)
+        leaves = meta.get("leaves")
+        if leaves:
+            referenced.update(int(s) for s in leaves.values())
+    for step in drop:
+        if step not in referenced:
+            os.unlink(_path(ckpt_dir, step))
 
 
 def list_steps(ckpt_dir: str) -> List[int]:
@@ -106,14 +151,30 @@ def list_steps(ckpt_dir: str) -> List[int]:
 
 def restore(ckpt_dir: str, template, step: Optional[int] = None
             ) -> Optional[Tuple[int, Any, Dict]]:
+    """Load the newest (or a specific) step into ``template``'s structure.
+    Incremental checkpoints resolve each leaf from the step that owns its
+    newest bytes (the file's ``leaves`` manifest)."""
     steps = list_steps(ckpt_dir)
     if not steps:
         return None
     step = steps[-1] if step is None else step
-    path = os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz")
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["__meta__"]))
-        flat = {k: z[k] for k in z.files if k != "__meta__"}
+    with np.load(_path(ckpt_dir, step), allow_pickle=False) as z:
+        meta = json.loads(str(z[META_KEY]))
+        flat = {k: z[k] for k in z.files if k != META_KEY}
+    leaves = meta.get("leaves")
+    if leaves:
+        by_owner: Dict[int, List[str]] = {}
+        for key, owner in leaves.items():
+            if key not in flat:
+                by_owner.setdefault(int(owner), []).append(key)
+        for owner, keys in sorted(by_owner.items()):
+            with np.load(_path(ckpt_dir, owner), allow_pickle=False) as z:
+                for k in keys:
+                    if k not in z.files:
+                        raise KeyError(
+                            f"incremental checkpoint {step} references leaf "
+                            f"{k} in step {owner}, which lacks it")
+                    flat[k] = z[k]
     tree = _unflatten_into(template, flat)
     return meta["step"], tree, meta.get("extra", {})
 
@@ -123,3 +184,105 @@ def reshard(tree, shardings):
     elastic scaling after a replan."""
     return jax.tree.map(
         lambda x, s: jax.device_put(np.asarray(x), s), tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Async + incremental
+# ---------------------------------------------------------------------------
+
+
+class AsyncCheckpointer:
+    """Delta checkpoints with the write off the training thread.
+
+    ``save`` snapshots the pytree to host *synchronously* (the consistency
+    point), diffs it against the last saved snapshot, and hands the write
+    of only the *changed* leaves to a single background worker.  The file's
+    manifest (inside the same atomic rename) maps every leaf to the step
+    whose file owns its newest bytes, so ``restore`` — and therefore a
+    preemption at any instant — always resolves a complete, consistent
+    tree: either this step's (rename landed) or the previous one's.
+
+    ``wait()`` blocks until all queued writes are durable (call before a
+    migration cutover or on SIGTERM); errors in the worker re-raise there
+    and on the next ``save``.  Not thread-safe across concurrent ``save``
+    callers (one trainer loop is the intended writer).
+    """
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3,
+                 incremental: bool = True, background: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.incremental = incremental
+        self.background = background
+        self._last_flat: Dict[str, np.ndarray] = {}
+        self._owner: Dict[str, int] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- internals -----------------------------------------------------------
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               changed: Dict[str, np.ndarray], extra: Optional[Dict]):
+        try:
+            meta: Dict[str, Any] = {"step": step, "extra": extra or {}}
+            if self.incremental:
+                meta["leaves"] = {k: self._owner[k] for k in flat}
+            _write_atomic(self.ckpt_dir, step, meta,
+                          changed if self.incremental else flat)
+            _gc(self.ckpt_dir, self.keep)
+        except BaseException as e:          # surfaced on wait()/next save()
+            self._error = e
+
+    def _raise_pending(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError("background checkpoint write failed") from e
+
+    # -- api -----------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        """Snapshot now, write (possibly) later.  The snapshot is the
+        consistency point: mutating ``tree`` after ``save`` returns never
+        affects the bytes on disk."""
+        self.wait()
+        self._raise_pending()
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        flat = _flatten(tree)
+        changed: Dict[str, np.ndarray] = {}
+        for k, v in flat.items():
+            prev = self._last_flat.get(k)
+            if prev is None or prev.shape != v.shape or \
+                    prev.dtype != v.dtype or not np.array_equal(prev, v):
+                changed[k] = np.array(v, copy=True)
+                self._owner[k] = step
+        # leaves that vanished from the tree drop out of the manifest
+        gone = set(self._last_flat) - set(flat)
+        for k in gone:
+            self._owner.pop(k, None)
+            self._last_flat.pop(k, None)
+        self._last_flat.update(changed)
+        snap = {k: self._last_flat[k] for k in flat}
+        if self.background:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, snap, changed, extra),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, snap, changed, extra)
+            self._raise_pending()
+
+    def wait(self) -> None:
+        """Block until the in-flight write (if any) is durable."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def close(self) -> None:
+        self.wait()
+        self._raise_pending()
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

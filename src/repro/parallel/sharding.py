@@ -285,21 +285,35 @@ def mesh_from_intra_op(plan: IntraOpPlan, devices: Optional[Sequence] = None,
     return Mesh(grid, tuple(name for name, _ in axes))
 
 
+def apportion(total: int, weights: Sequence[float]) -> List[int]:
+    """Largest-remainder apportionment of ``total`` integer units across
+    ``weights`` (need not be normalized).  Always sums to ``total`` exactly
+    — the shared primitive behind :func:`batch_shard_sizes` (samples) and
+    ``repro.migrate``'s byte-interval layouts, where exactness is what makes
+    plan-to-plan resharding bit-identical."""
+    if total < 0:
+        raise ValueError("total must be non-negative")
+    if not weights or any(w < 0 for w in weights):
+        raise ValueError(f"weights must be non-empty and >= 0: {weights}")
+    wsum = float(sum(weights))
+    if wsum <= 0:
+        raise ValueError("weights must sum to > 0")
+    quotas = [w / wsum * total for w in weights]
+    sizes = [int(q) for q in quotas]
+    rema = sorted(range(len(weights)), key=lambda i: quotas[i] - sizes[i],
+                  reverse=True)
+    for i in rema[: total - sum(sizes)]:
+        sizes[i] += 1
+    return sizes
+
+
 def batch_shard_sizes(plan: IntraOpPlan, batch: int) -> List[int]:
     """Integer per-dp-shard batch sizes from the plan's (possibly uneven)
     ratios, by largest-remainder apportionment.  Always sums to ``batch``;
     even ratios reproduce the usual ``batch // dp`` split.  ``batch`` is a
     sample/microbatch count, not bytes."""
     validate_intra_op_plan(plan)
-    if batch < 0:
-        raise ValueError("batch must be non-negative")
-    quotas = [r * batch for r in plan.shard_ratios]
-    sizes = [int(q) for q in quotas]
-    rema = sorted(range(plan.dp), key=lambda i: quotas[i] - sizes[i],
-                  reverse=True)
-    for i in rema[: batch - sum(sizes)]:
-        sizes[i] += 1
-    return sizes
+    return apportion(batch, list(plan.shard_ratios))
 
 
 def cache_pspecs(cache_tree, rules: Dict[str, Optional[object]]) -> Any:

@@ -42,6 +42,10 @@ from repro.core.opgraph import build_op_sequence
 from repro.core.pipesim import eta_load_balance, sim_memo_stats, simulate
 from repro.core.planner import HAPTPlanner, PlannerConfig
 from repro.core.strategy import ParallelStrategy
+from repro.migrate import (
+    DEFAULT_RESTORE_BW, diff_layouts, layout_from_strategy, lost_devices,
+    price_migration,
+)
 from repro.runtime.events import BandwidthShift, ClusterEvent, apply_event
 from repro.runtime.replay import project_step, recompute_c_links
 from repro.runtime.telemetry import (
@@ -64,6 +68,13 @@ class ControllerConfig:
                                        # (jit compilation inflates them)
     amortize: bool = True              # False = always adopt a better plan
     plan_cache_dir: Optional[str] = None
+    migration_pricing: str = "priced"  # "priced": layout differ + netsim
+                                       # (repro.migrate); "legacy": the old
+                                       # params-over-the-cross-link guess
+    opt_bytes_per_param: float = 2.0   # optimizer bytes per param byte (ZeRO-1)
+    restore_bw: float = DEFAULT_RESTORE_BW  # checkpoint-restore path, bytes/s
+    overlap_migration: bool = True     # charge only wall beyond the old
+                                       # plan's drain, not stop-the-world
 
 
 @dataclass
@@ -79,6 +90,8 @@ class ReplanDecision:
     step_time_after: float = 0.0       # adopted (or retained) plan
     search_time_s: float = 0.0
     migration_s: float = 0.0
+    migration_bytes: float = 0.0       # live + checkpoint-restored bytes the
+                                       # adopted plan must ship (differ bound)
     plan_cache_hit: bool = False
     profile_cache_hits: int = 0
     sim_memo_hits: int = 0      # pipesim memo hits while handling this event
@@ -95,6 +108,8 @@ class ReplanDecision:
                          f" -> {self.step_time_after * 1e3:.0f}ms")
         if self.downtime_s:
             parts.append(f"downtime {self.downtime_s:.2f}s")
+        if self.migration_bytes:
+            parts.append(f"migrate {self.migration_bytes / 1e6:.0f}MB")
         if self.sim_memo_hits or self.sim_memo_misses:
             parts.append(f"sim-cache {self.sim_memo_hits}h"
                          f"/{self.sim_memo_misses}m")
@@ -354,15 +369,15 @@ class ElasticController:
             return self._commit(decision, new_cluster, adopted=None)
 
         action = "incremental" if (plan_hit or profile_hits > 0) else "full"
-        mig_s = self._migration_seconds(cand, new_cluster)
+        mig_s, mig_bytes = self._migration_cost(cand, new_cluster)
 
         if not feasible:
             decision = ReplanDecision(
                 step=step, action=action, reason=f"{why}; forced (plan broken)",
                 event=why, step_time_before=t_before,
                 step_time_after=cand.est_step_time, search_time_s=search_s,
-                migration_s=mig_s, plan_cache_hit=plan_hit,
-                profile_cache_hits=profile_hits)
+                migration_s=mig_s, migration_bytes=mig_bytes,
+                plan_cache_hit=plan_hit, profile_cache_hits=profile_hits)
             return self._commit(decision, new_cluster, adopted=cand)
 
         # amortization: expected gain over the remaining horizon vs. the
@@ -386,8 +401,8 @@ class ElasticController:
             if self.cfg.amortize else f"{why}; amortization off",
             event=why, step_time_before=t_before,
             step_time_after=cand.est_step_time, search_time_s=search_s,
-            migration_s=mig_s, plan_cache_hit=plan_hit,
-            profile_cache_hits=profile_hits)
+            migration_s=mig_s, migration_bytes=mig_bytes,
+            plan_cache_hit=plan_hit, profile_cache_hits=profile_hits)
         return self._commit(decision, new_cluster, adopted=cand)
 
     def _commit(self, decision: ReplanDecision, new_cluster: HeteroCluster,
@@ -449,10 +464,37 @@ class ElasticController:
         # plans belong there — caching the retuned plan under the new fleet's
         # key would short-circuit rung 2's re-search with our own retune
 
+    def _migration_cost(self, cand: ParallelStrategy,
+                        new_cluster: HeteroCluster) -> Tuple[float, float]:
+        """(seconds, bytes) of moving live state from the current plan to
+        ``cand``.  The priced path diffs the two plans' exact per-device
+        byte layouts (``repro.migrate``) — only *moved* bytes, sourced from
+        the nearest surviving replica or the checkpoint — and prices the
+        transfer set through the comm topology's tiered links, overlapped
+        with the old plan's drain.  Bytes = live + checkpoint-restored
+        (the differ's bound an executor cannot beat)."""
+        if self.cfg.migration_pricing == "legacy":
+            return self._migration_seconds(cand, new_cluster), 0.0
+        old_lay = layout_from_strategy(
+            self.strategy, self.plan_cluster, self.layers,
+            opt_bytes_per_param=self.cfg.opt_bytes_per_param)
+        new_lay = layout_from_strategy(
+            cand, new_cluster, self.layers,
+            opt_bytes_per_param=self.cfg.opt_bytes_per_param)
+        lost = lost_devices(self.plan_cluster, new_cluster)
+        mplan = diff_layouts(old_lay, new_lay, lost=lost)
+        cost = price_migration(
+            mplan, old_lay, new_cluster,
+            old_strategy=self.strategy, old_cluster=self.plan_cluster,
+            layers=self.layers, restore_bw=self.cfg.restore_bw,
+            overlap=self.cfg.overlap_migration)
+        return cost.downtime_s, float(mplan.moved_bytes + mplan.ckpt_bytes)
+
     def _migration_seconds(self, cand: ParallelStrategy,
                            new_cluster: HeteroCluster) -> float:
-        """Parameter bytes whose owning sub-cluster changes, over the cross
-        link (optimizer state is re-sharded locally, not shipped)."""
+        """Legacy guess (``migration_pricing="legacy"``): parameter bytes
+        whose owning sub-cluster changes, over the cross link (optimizer
+        state assumed re-sharded locally, not shipped)."""
         def owners(strategy: ParallelStrategy, cluster: HeteroCluster
                    ) -> Dict[int, str]:
             out: Dict[int, str] = {}

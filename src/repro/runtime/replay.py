@@ -192,6 +192,22 @@ class ReplayResult:
                    if getattr(d, "sim_memo_hits", 0) > 0
                    and getattr(d, "sim_memo_misses", 0) == 0)
 
+    @property
+    def migration_s(self) -> float:
+        """Total priced migration downtime charged across all decisions."""
+        return sum(getattr(d, "migration_s", 0.0) for d in self.decisions)
+
+    @property
+    def search_s(self) -> float:
+        """Total plan-search downtime charged across all decisions."""
+        return sum(getattr(d, "search_time_s", 0.0) for d in self.decisions)
+
+    @property
+    def migration_bytes(self) -> float:
+        """Total bytes the adopted plans had to ship (the differ's
+        live + checkpoint-restore bound, summed over adoptions)."""
+        return sum(getattr(d, "migration_bytes", 0.0) for d in self.decisions)
+
     def throughput(self) -> float:
         return self.tokens_total / self.wall_total_s if self.wall_total_s else 0.0
 

@@ -34,6 +34,8 @@ class TrainerConfig:
     keep_ckpts: int = 3
     replan_threshold: float = 1.5   # step time vs EWMA ratio
     ewma_alpha: float = 0.1
+    async_ckpt: bool = False        # hand writes to a background thread
+    incremental_ckpt: bool = False  # write only leaves changed since last save
 
 
 class Trainer:
@@ -61,6 +63,12 @@ class Trainer:
         self.clock = clock
         self._stop = False
         self._ewma = None
+        self._ckptr: Optional[ckpt_lib.AsyncCheckpointer] = None
+        if cfg.async_ckpt or cfg.incremental_ckpt:
+            self._ckptr = ckpt_lib.AsyncCheckpointer(
+                cfg.ckpt_dir, keep=cfg.keep_ckpts,
+                incremental=cfg.incremental_ckpt,
+                background=cfg.async_ckpt)
 
     def _install_sigterm(self):
         def handler(signum, frame):
@@ -81,9 +89,12 @@ class Trainer:
 
     def checkpoint(self, step: int):
         host_state = jax.tree.map(np.asarray, self.state)
-        ckpt_lib.save(self.cfg.ckpt_dir, step, host_state,
-                      extra={"data_seed": self.data_cfg.seed},
-                      keep=self.cfg.keep_ckpts)
+        extra = {"data_seed": self.data_cfg.seed}
+        if self._ckptr is not None:
+            self._ckptr.save(step, host_state, extra=extra)
+        else:
+            ckpt_lib.save(self.cfg.ckpt_dir, step, host_state,
+                          extra=extra, keep=self.cfg.keep_ckpts)
 
     def run(self, start_step: Optional[int] = None) -> Dict[str, Any]:
         self._install_sigterm()
@@ -127,4 +138,6 @@ class Trainer:
         if self._stop:
             self.log("[trainer] SIGTERM — checkpointing and exiting")
             self.checkpoint(step)
+        if self._ckptr is not None:
+            self._ckptr.close()      # all queued writes durable before exit
         return {"final_step": step, "history": history, "state": self.state}

@@ -1,0 +1,233 @@
+"""Checkpoint subsystem: atomic full saves round-trip bit-identically,
+crashes mid-write never corrupt the newest checkpoint, the GC keep-window
+honors incremental manifests, restore errors are loud, and the async /
+incremental checkpointer writes only deltas while every step stays fully
+restorable."""
+import os
+
+import numpy as np
+import pytest
+
+import repro.checkpoint.ckpt as ckpt
+
+
+def tree():
+    return {
+        "params": {
+            "dense": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                      "b": np.zeros(4, dtype=np.float32)},
+            "scale": np.float32(2.5),
+        },
+        "opt": [np.ones(5, dtype=np.float32),
+                np.full(5, 7, dtype=np.int32)],
+    }
+
+
+def trees_equal(a, b) -> bool:
+    la = [np.asarray(x) for x in
+          __import__("jax").tree_util.tree_leaves(a)]
+    lb = [np.asarray(x) for x in
+          __import__("jax").tree_util.tree_leaves(b)]
+    return len(la) == len(lb) and all(
+        x.shape == y.shape and x.dtype == y.dtype and np.array_equal(x, y)
+        for x, y in zip(la, lb))
+
+
+# --- full save / restore ----------------------------------------------------
+
+
+def test_save_restore_bit_identity(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 7, t, extra={"loss": 0.5})
+    step, restored, extra = ckpt.restore(str(tmp_path), tree())
+    assert step == 7
+    assert extra == {"loss": 0.5}
+    assert trees_equal(restored, t)
+
+
+def test_restore_empty_dir_returns_none(tmp_path):
+    assert ckpt.restore(str(tmp_path), tree()) is None
+    assert ckpt.list_steps(str(tmp_path)) == []
+
+
+def test_restore_specific_step(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t, keep=0)
+    t2 = tree()
+    t2["params"]["scale"] = np.float32(9.0)
+    ckpt.save(str(tmp_path), 2, t2, keep=0)
+    step, restored, _ = ckpt.restore(str(tmp_path), tree(), step=1)
+    assert step == 1
+    assert trees_equal(restored, t)
+    step, restored, _ = ckpt.restore(str(tmp_path), tree())
+    assert step == 2 and float(restored["params"]["scale"]) == 9.0
+
+
+def test_crash_mid_write_leaves_previous_intact(tmp_path, monkeypatch):
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t)
+
+    def boom(src, dst):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(ckpt.os, "replace", boom)
+    with pytest.raises(OSError):
+        ckpt.save(str(tmp_path), 2, tree())
+    monkeypatch.undo()
+    # the failed write left no partial checkpoint and no temp litter
+    assert ckpt.list_steps(str(tmp_path)) == [1]
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+    step, restored, _ = ckpt.restore(str(tmp_path), tree())
+    assert step == 1 and trees_equal(restored, t)
+
+
+def test_stray_files_ignored(tmp_path):
+    ckpt.save(str(tmp_path), 3, tree())
+    (tmp_path / "ckpt_0000000009.npz.tmp").write_bytes(b"garbage")
+    (tmp_path / "notes.txt").write_text("hi")
+    assert ckpt.list_steps(str(tmp_path)) == [3]
+    assert ckpt.restore(str(tmp_path), tree())[0] == 3
+
+
+def test_gc_keep_window(tmp_path):
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, tree(), keep=3)
+    assert ckpt.list_steps(str(tmp_path)) == [2, 3, 4]
+
+
+def test_gc_keep_zero_keeps_everything(tmp_path):
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, tree(), keep=0)
+    assert ckpt.list_steps(str(tmp_path)) == [0, 1, 2, 3, 4]
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": np.zeros(3)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        ckpt.restore(str(tmp_path), {"a": np.zeros(3), "b": np.zeros(2)})
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": np.zeros(3)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), {"a": np.zeros((2, 2))})
+
+
+def test_leaf_key_separator_rejected(tmp_path):
+    # regression: a "|" inside a pytree key would silently corrupt the
+    # flat namespace ("a|b" indistinguishable from nested a -> b)
+    with pytest.raises(ValueError, match="separator"):
+        ckpt.save(str(tmp_path), 1, {"a|b": np.zeros(2)})
+    assert ckpt.list_steps(str(tmp_path)) == []
+
+
+def test_leaf_key_meta_collision_rejected(tmp_path):
+    with pytest.raises(ValueError, match="metadata"):
+        ckpt.save(str(tmp_path), 1, {ckpt.META_KEY: np.zeros(2)})
+
+
+def test_reshard_places_on_new_shardings():
+    import jax
+
+    t = tree()
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev), t)
+    placed = ckpt.reshard(t, shardings)
+    assert trees_equal(placed, t)
+    for leaf in jax.tree_util.tree_leaves(placed):
+        assert isinstance(leaf, jax.Array)
+
+
+# --- async / incremental ----------------------------------------------------
+
+
+def test_incremental_writes_only_changed_leaves(tmp_path):
+    t = {"a": np.arange(4, dtype=np.float32),
+         "b": np.ones(3, dtype=np.float32)}
+    with ckpt.AsyncCheckpointer(str(tmp_path), keep=0,
+                                background=False) as cp:
+        cp.save(1, t)
+        t2 = {"a": t["a"] + 1, "b": t["b"]}    # only a changes
+        cp.save(2, t2)
+    with np.load(str(tmp_path / "ckpt_0000000002.npz")) as z:
+        assert set(z.files) == {ckpt.META_KEY, "a"}
+    step, restored, _ = ckpt.restore(str(tmp_path), t)
+    assert step == 2
+    assert trees_equal(restored, t2)           # b resolved from step 1's file
+
+
+def test_background_write_is_durable_after_wait(tmp_path):
+    t = tree()
+    cp = ckpt.AsyncCheckpointer(str(tmp_path), background=True)
+    cp.save(5, t)
+    cp.wait()
+    step, restored, _ = ckpt.restore(str(tmp_path), tree())
+    assert step == 5 and trees_equal(restored, t)
+    cp.close()
+
+
+def test_snapshot_is_the_consistency_point(tmp_path):
+    t = {"a": np.arange(4, dtype=np.float32)}
+    want = t["a"].copy()
+    cp = ckpt.AsyncCheckpointer(str(tmp_path), background=True)
+    cp.save(1, t)
+    t["a"][:] = -1                 # mutation after save must not leak to disk
+    cp.close()
+    _, restored, _ = ckpt.restore(str(tmp_path), {"a": np.zeros(4)})
+    assert np.array_equal(restored["a"], want)
+
+
+def test_gc_never_drops_a_referenced_donor(tmp_path):
+    a = np.arange(3, dtype=np.float32)
+    b = np.ones(2, dtype=np.float32)
+    with ckpt.AsyncCheckpointer(str(tmp_path), keep=2,
+                                background=False) as cp:
+        cp.save(10, {"a": a, "b": b})
+        cp.save(20, {"a": a + 1, "b": b})      # b unchanged: owner stays 10
+        cp.save(30, {"a": a + 2, "b": b})
+        cp.save(40, {"a": a + 3, "b": b})
+    # keep=2 leaves {30, 40}; the plain window would also drop 10 and 20,
+    # but 10 owns b's newest bytes for both kept manifests — only 20 goes
+    assert ckpt.list_steps(str(tmp_path)) == [10, 30, 40]
+    for step in (30, 40):
+        got = ckpt.restore(str(tmp_path),
+                           {"a": np.zeros(3), "b": np.zeros(2)}, step=step)
+        assert np.array_equal(got[1]["b"], b)
+    assert np.array_equal(
+        ckpt.restore(str(tmp_path), {"a": np.zeros(3), "b": np.zeros(2)}
+                     )[1]["a"], a + 3)
+
+
+def test_vanished_leaf_drops_out_of_manifest(tmp_path):
+    with ckpt.AsyncCheckpointer(str(tmp_path), keep=0,
+                                background=False) as cp:
+        cp.save(1, {"a": np.zeros(2), "b": np.ones(2)})
+        cp.save(2, {"a": np.full(2, 3.0)})
+    meta = ckpt._read_meta(str(tmp_path), 2)
+    assert set(meta["leaves"]) == {"a"}
+    _, restored, _ = ckpt.restore(str(tmp_path), {"a": np.zeros(2)}, step=2)
+    assert np.array_equal(restored["a"], np.full(2, 3.0))
+
+
+def test_background_error_surfaces_on_close(tmp_path, monkeypatch):
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt, "_write_atomic", boom)
+    cp = ckpt.AsyncCheckpointer(str(tmp_path), background=True)
+    cp.save(1, {"a": np.zeros(2)})
+    with pytest.raises(RuntimeError, match="background checkpoint"):
+        cp.close()
+
+
+def test_shape_change_rewrites_leaf(tmp_path):
+    with ckpt.AsyncCheckpointer(str(tmp_path), keep=0,
+                                background=False) as cp:
+        cp.save(1, {"a": np.zeros(2, dtype=np.float32)})
+        cp.save(2, {"a": np.zeros(3, dtype=np.float32)})
+    with np.load(str(tmp_path / "ckpt_0000000002.npz")) as z:
+        assert z["a"].shape == (3,)
+    _, restored, _ = ckpt.restore(str(tmp_path),
+                                  {"a": np.zeros(3)}, step=2)
+    assert restored["a"].shape == (3,)

@@ -1,0 +1,425 @@
+"""Live state migration: interval arithmetic, layout invariants, the
+differ's nearest-replica / checkpoint-fallback source selection,
+diff -> apply bit-identity against direct initialization (property-based),
+exact pricing through the tiered links, the controller's priced decisions,
+and the ``migrate_to`` facade + schema-v5 artifact + CLI round trip."""
+import dataclasses
+import json
+import types
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import api
+from repro.comm.topology import CROSS_LINK, build_topology
+from repro.core.cluster import (
+    GB, GBPS, DeviceProfile, HeteroCluster, SubCluster, remove_nodes,
+)
+from repro.core.planner import PlannerConfig
+from repro.core.strategy import IntraOpPlan, ParallelStrategy, StageAssignment
+from repro.migrate import (
+    DEFAULT_RESTORE_BW, MigrationPlan, Transfer, apply_migration,
+    classify_link, diff_layouts, gather_leaf, layout_from_strategy,
+    lost_devices, price_migration, shard_state, stage_devices, states_equal,
+)
+from repro.migrate.layout import (
+    LeafSpec, PlanLayout, intersect, length, normalize, subtract,
+)
+from repro.runtime import (
+    ControllerConfig, ElasticController, EventTrace, Preemption, run_replay,
+)
+
+# --- fixtures ---------------------------------------------------------------
+
+
+def duo(n_a=2, n_b=1, dpn=2, cross_gbps=10.0):
+    """Two sub-clusters, ``dpn`` devices per node."""
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A", n_a, dpn,
+                       DeviceProfile("fast", 300e12, 40 * GB, 1.5e12),
+                       300e9, 25e9),
+            SubCluster("B", n_b, dpn,
+                       DeviceProfile("slow", 120e12, 32 * GB, 0.9e12),
+                       150e9, 25e9),
+        ),
+        cross_bw=cross_gbps * GBPS)
+
+
+def fake_layers(*sizes):
+    """Layout construction only reads ``param_bytes``."""
+    return [types.SimpleNamespace(param_bytes=int(s)) for s in sizes]
+
+
+def mk_strategy(specs, mb=4):
+    """``specs``: (cluster_idx, layer_start, layer_end, tp, dp, ratios)."""
+    stages = []
+    for ci, ls, le, tp, dp, ratios in specs:
+        stages.append(StageAssignment(
+            layer_start=ls, layer_end=le, cluster_idx=ci,
+            mesh_n=1, mesh_m=tp * dp, tp=tp, dp=dp,
+            t_f=0.01, t_b=0.02, mem_p=0, mem_a=0,
+            intra_op=IntraOpPlan(axis="data", tp=tp, dp=dp,
+                                 shard_ratios=tuple(ratios),
+                                 comm_bytes=0.0, comm_time_f=0.0,
+                                 comm_time_b=0.0)))
+    return ParallelStrategy(
+        stages=stages, c_links=[0.001] * (len(stages) - 1),
+        warmup_counts=list(range(len(stages), 0, -1)), t_max=0.03,
+        n_microbatches=mb, mb_tokens=128, est_step_time=mb * 0.03)
+
+
+def one_leaf_layout(per_dev, nbytes, dpn=2, name="w"):
+    lay = PlanLayout(devices_per_node={"A": dpn, "B": dpn})
+    lay.add(LeafSpec(name, nbytes, "param", 0), 0, per_dev)
+    return lay
+
+
+# --- interval arithmetic ----------------------------------------------------
+
+
+def test_interval_helpers():
+    assert normalize([(5, 9), (0, 3), (3, 5), (7, 7)]) == [(0, 9)]
+    assert normalize([(0, 2), (4, 6)]) == [(0, 2), (4, 6)]
+    assert intersect([(0, 10)], [(3, 5), (8, 12)]) == [(3, 5), (8, 10)]
+    assert intersect([(0, 2)], [(2, 4)]) == []
+    assert subtract([(0, 10)], [(3, 5), (8, 12)]) == [(0, 3), (5, 8)]
+    assert subtract([(0, 4)], []) == [(0, 4)]
+    assert subtract([(0, 4)], [(0, 4)]) == []
+    assert length([(0, 3), (10, 14)]) == 7
+
+
+# --- layouts ----------------------------------------------------------------
+
+
+def test_layout_tiles_every_leaf_and_replicates_params():
+    cl = duo(n_a=2, n_b=1)
+    strat = mk_strategy([(0, 0, 2, 2, 2, (0.7, 0.3)),
+                         (1, 2, 3, 1, 2, (0.5, 0.5))])
+    layers = fake_layers(1000, 777, 500)
+    lay = layout_from_strategy(strat, cl, layers)
+    assert set(lay.leaves) == {f"layer{i:04d}.{k}" for i in range(3)
+                               for k in ("param", "opt")}
+    for name, spec in lay.leaves.items():
+        union = normalize([iv for ivs in lay.holdings[name].values()
+                           for iv in ivs])
+        assert union == [(0, spec.nbytes)], name   # fully tiled
+        held = sum(length(ivs) for ivs in lay.holdings[name].values())
+        if spec.kind == "param":                   # replicated across dp
+            dp = strat.stages[lay.leaf_stage[name]].dp
+            assert held == dp * spec.nbytes
+        else:                                      # ZeRO-1: exact partition
+            assert held == spec.nbytes
+    # optimizer state is opt_bytes_per_param x the params
+    assert lay.leaves["layer0000.opt"].nbytes == 2000
+
+
+def test_stage_devices_pack_consecutively():
+    cl = duo(n_a=2, n_b=1)
+    strat = mk_strategy([(0, 0, 1, 1, 2, (0.5, 0.5)),
+                         (0, 1, 2, 1, 2, (0.5, 0.5)),
+                         (1, 2, 3, 1, 2, (0.5, 0.5))])
+    devs = stage_devices(strat, cl)
+    assert devs[0] == [("A", 0), ("A", 1)]
+    assert devs[1] == [("A", 2), ("A", 3)]        # same pool, next range
+    assert devs[2] == [("B", 0), ("B", 1)]
+
+
+def test_lost_devices_are_the_tail_range():
+    old = duo(n_a=2, n_b=1)
+    assert lost_devices(old, remove_nodes(old, "A", 1)) == \
+        {("A", 2), ("A", 3)}
+    assert lost_devices(old, remove_nodes(old, "B", 1)) == \
+        {("B", 0), ("B", 1)}
+    assert lost_devices(old, old) == set()
+
+
+# --- differ -----------------------------------------------------------------
+
+
+def test_identity_diff_moves_nothing():
+    cl = duo()
+    strat = mk_strategy([(0, 0, 2, 1, 4, (0.4, 0.3, 0.2, 0.1))])
+    lay = layout_from_strategy(strat, cl, fake_layers(999, 1000))
+    mplan = diff_layouts(lay, lay)
+    assert mplan.transfers == []
+    assert mplan.moved_bytes == mplan.ckpt_bytes == 0
+    assert mplan.local_bytes == mplan.total_bytes == lay.total_bytes
+
+
+def test_differ_prefers_same_node_then_same_subcluster():
+    old = one_leaf_layout({("A", 1): [(0, 100)], ("A", 2): [(0, 100)],
+                           ("B", 0): [(0, 100)]}, 100)
+    new = one_leaf_layout({("A", 0): [(0, 100)]}, 100)
+    mplan = diff_layouts(old, new)
+    assert [t.src for t in mplan.transfers] == [("A", 1)]   # same node (dpn=2)
+    lost_node_mate = diff_layouts(old, new, lost={("A", 1)})
+    assert [t.src for t in lost_node_mate.transfers] == [("A", 2)]  # same sub
+    lost_sub = diff_layouts(old, new, lost={("A", 1), ("A", 2)})
+    assert [t.src for t in lost_sub.transfers] == [("B", 0)]        # cross
+
+
+def test_differ_falls_back_to_checkpoint_when_no_replica_survives():
+    old = one_leaf_layout({("A", 1): [(0, 100)]}, 100)
+    new = one_leaf_layout({("A", 0): [(0, 100)]}, 100)
+    mplan = diff_layouts(old, new, lost={("A", 1)})
+    assert [t.src for t in mplan.transfers] == [None]
+    assert mplan.ckpt_bytes == 100 and mplan.moved_bytes == 0
+
+
+def test_differ_covers_fragments_from_multiple_sources():
+    old = one_leaf_layout({("A", 1): [(0, 50)], ("B", 0): [(25, 100)]}, 100)
+    new = one_leaf_layout({("A", 0): [(0, 100)]}, 100)
+    mplan = diff_layouts(old, new)
+    got = sorted((t.start, t.end, t.src) for t in mplan.transfers)
+    assert got == [(0, 50, ("A", 1)), (50, 100, ("B", 0))]
+    assert mplan.moved_bytes == 100
+    assert mplan.moved_bytes + mplan.ckpt_bytes + mplan.local_bytes \
+        == mplan.total_bytes
+
+
+def test_differ_counts_bytes_already_in_place():
+    old = one_leaf_layout({("A", 0): [(0, 40)], ("A", 1): [(0, 100)]}, 100)
+    new = one_leaf_layout({("A", 0): [(0, 100)]}, 100)
+    mplan = diff_layouts(old, new)
+    assert mplan.local_bytes == 40 and mplan.moved_bytes == 60
+    assert all(t.start >= 40 for t in mplan.transfers)
+
+
+# --- diff -> apply bit-identity (property) ----------------------------------
+
+
+_TPDP_A = [(1, 4), (2, 2), (4, 1), (1, 2), (2, 1)]
+_TPDP_B = [(1, 2), (2, 1), (1, 1)]
+
+
+def _random_case(seed: int):
+    """Random layer sizes + random old/new strategies over a shrink of the
+    duo fleet: old on A(4 devices)+B(2), new on A(2)+B(2)."""
+    rng = np.random.default_rng(seed)
+    layers = fake_layers(*rng.integers(1, 300, size=3))
+
+    def ratios(dp):
+        r = rng.random(dp) + 0.1
+        return tuple(float(x) for x in r / r.sum())
+
+    def pick(pool):
+        tp, dp = pool[rng.integers(len(pool))]
+        return tp, dp, ratios(dp)
+
+    old_cl, new_cl = duo(n_a=2, n_b=1), duo(n_a=1, n_b=1)
+    cut = int(rng.integers(1, 3))
+    old = mk_strategy([(0, 0, cut) + pick(_TPDP_A),
+                       (1, cut, 3) + pick(_TPDP_B)])
+    new = mk_strategy([(0, 0, cut) + pick(_TPDP_B),
+                       (1, cut, 3) + pick(_TPDP_B)])
+    old_lay = layout_from_strategy(old, old_cl, layers)
+    new_lay = layout_from_strategy(new, new_cl, layers)
+    lost = lost_devices(old_cl, new_cl)
+    full = {name: rng.integers(0, 256, size=spec.nbytes).astype(np.uint8)
+            for name, spec in old_lay.leaves.items()}
+    return old_lay, new_lay, lost, full
+
+
+def _assert_roundtrip(seed: int):
+    old_lay, new_lay, lost, full = _random_case(seed)
+    mplan = diff_layouts(old_lay, new_lay, lost=lost)
+    assert mplan.moved_bytes + mplan.ckpt_bytes + mplan.local_bytes \
+        == mplan.total_bytes
+    st_old = shard_state(old_lay, full)
+    st_new, stats = apply_migration(st_old, mplan, new_lay, lost=lost,
+                                    ckpt_image=full)
+    # bit-identity vs initializing directly in the new layout
+    assert states_equal(st_new, shard_state(new_lay, full))
+    # the executor shipped exactly what the differ priced — no more
+    assert stats.live_bytes == mplan.moved_bytes
+    assert stats.ckpt_bytes == mplan.ckpt_bytes
+    assert stats.n_transfers == mplan.n_transfers
+    for name in new_lay.leaves:
+        assert np.array_equal(gather_leaf(st_new, name), full[name])
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_diff_apply_bit_identity_seeded(seed):
+    _assert_roundtrip(seed)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=40, deadline=None)
+def test_diff_apply_bit_identity_property(seed):
+    _assert_roundtrip(seed)
+
+
+def test_apply_rejects_lost_source():
+    old = one_leaf_layout({("A", 1): [(0, 10)]}, 10)
+    new = one_leaf_layout({("A", 0): [(0, 10)]}, 10)
+    full = {"w": np.zeros(10, dtype=np.uint8)}
+    bogus = MigrationPlan(transfers=[Transfer("w", 0, 10, ("A", 0),
+                                              src=("A", 1))])
+    with pytest.raises(ValueError, match="lost device"):
+        apply_migration(shard_state(old, full), bogus, new,
+                        lost={("A", 1)}, ckpt_image=full)
+
+
+# --- pricing ----------------------------------------------------------------
+
+
+def test_classify_link_tiers():
+    lay = one_leaf_layout({}, 10, dpn=2)
+    topo = build_topology(duo(n_a=2, n_b=1))
+    assert classify_link(lay, ("A", 0), ("A", 1), topo) == "intra:A"
+    assert classify_link(lay, ("A", 0), ("A", 2), topo) == "ib:A"
+    assert classify_link(lay, ("A", 0), ("B", 0), topo) == CROSS_LINK
+
+
+def test_price_empty_plan_is_free():
+    lay = one_leaf_layout({}, 10)
+    cost = price_migration(MigrationPlan(), lay, duo())
+    assert cost.serial_s == cost.downtime_s == 0.0 and cost.n_flows == 0
+
+
+def test_price_checkpoint_restore_rides_restore_path():
+    nb = 4_000_000_000
+    lay = one_leaf_layout({}, nb)
+    mplan = MigrationPlan(transfers=[Transfer("w", 0, nb, ("A", 0),
+                                              src=None)], ckpt_bytes=nb,
+                          total_bytes=nb)
+    cost = price_migration(mplan, lay, duo(), overlap=False)
+    assert not cost.overlapped
+    assert cost.downtime_s == pytest.approx(nb / DEFAULT_RESTORE_BW)
+    assert cost.link_bytes == {"__restore__": nb}
+    half = price_migration(mplan, lay, duo(), restore_bw=1e9, overlap=False)
+    assert half.downtime_s == pytest.approx(nb / 1e9)
+
+
+def test_price_live_transfer_matches_link_bandwidth():
+    nb = 1_000_000_000
+    lay = one_leaf_layout({}, nb)
+    topo = build_topology(duo())
+    for src, dst in [(("A", 0), ("A", 1)), (("A", 0), ("A", 2)),
+                     (("A", 0), ("B", 0))]:
+        mplan = MigrationPlan(transfers=[Transfer("w", 0, nb, dst, src=src)],
+                              moved_bytes=nb, total_bytes=nb)
+        link = classify_link(lay, src, dst, topo)
+        l = topo.link(link)
+        cost = price_migration(mplan, lay, duo(), overlap=False)
+        assert cost.link_bytes == {link: nb}
+        assert cost.serial_s == pytest.approx(l.latency + nb / l.bandwidth)
+
+
+# --- controller + replay acceptance -----------------------------------------
+
+
+def _controller(cl, pricing, n_steps=30):
+    pcfg = PlannerConfig(granularity=8, n_microbatches=8,
+                         min_submesh_devices=2)
+    pcfg.search.require_all_devices = True
+    return ElasticController(
+        cl, "gpt-2b", planner_cfg=pcfg,
+        cfg=ControllerConfig(total_steps=n_steps, seq_len=256,
+                             global_batch=32, migration_pricing=pricing))
+
+
+def test_replay_charge_matches_priced_migration():
+    """Preemption acceptance: the wall clock the replay charges beyond
+    productive steps equals the decisions' priced downtime (±5%), the
+    differ engaged on every adoption, and the priced and legacy guesses
+    genuinely differ."""
+    cl = duo(n_a=2, n_b=2, dpn=2)
+    trace = EventTrace([Preemption(step=5, subcluster="B", n_nodes=1,
+                                   duration_steps=12)])
+    ctrl = _controller(cl, "priced")
+    ctrl.bootstrap()
+    res = run_replay(trace, 30, controller=ctrl)
+    adoptions = [d for d in res.decisions if d.migration_s > 0]
+    assert adoptions, "forced replan must have adopted a new plan"
+    assert all(d.migration_bytes > 0 for d in adoptions)
+    charged = res.wall_total_s - sum(s.step_time_s for s in res.samples)
+    priced = res.migration_s + res.search_s
+    assert charged == pytest.approx(priced, rel=0.05)
+
+    ctrl_l = _controller(cl, "legacy")
+    ctrl_l.bootstrap()
+    res_l = run_replay(trace, 30, controller=ctrl_l)
+    assert res_l.migration_s != pytest.approx(res.migration_s, rel=1e-3)
+    assert res_l.migration_bytes == 0.0        # the guess prices no layout
+
+
+# --- facade / artifact / CLI ------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def exe_pair():
+    cfg = api.HarpConfig(
+        seq_len=256, global_batch=32,
+        planner=PlannerConfig(granularity=8, n_microbatches=8,
+                              min_submesh_devices=2))
+    exe = api.compile("gpt-2b", duo(n_a=2, n_b=1), cfg)
+    new_exe = exe.migrate_to(remove_nodes(duo(n_a=2, n_b=1), "A", 1))
+    return exe, new_exe
+
+
+def test_migrate_to_prices_and_stamps_v5(exe_pair):
+    exe, new_exe = exe_pair
+    m = new_exe.plan.migration
+    assert m is not None and new_exe.plan.version == 5
+    assert m["from_fingerprint"] == exe.plan.cluster_fingerprint
+    assert m["to_fingerprint"] == new_exe.plan.cluster_fingerprint
+    assert m["moved_bytes"] + m["ckpt_bytes"] + m["local_bytes"] \
+        == m["total_bytes"] > 0
+    assert sum(m["link_bytes"].values()) \
+        == m["moved_bytes"] + m["ckpt_bytes"]
+    assert m["n_transfers"] > 0
+    assert 0 <= m["downtime_s"] <= m["serial_s"] + 1e-9
+    # live migration undercuts restoring the full state from the store
+    assert m["downtime_s"] < m["total_bytes"] / DEFAULT_RESTORE_BW
+
+
+def test_migration_section_round_trips(exe_pair):
+    _, new_exe = exe_pair
+    back = api.Plan.from_json(new_exe.plan.to_json())
+    assert back.migration == new_exe.plan.migration
+    assert "migrated" in back.describe()
+
+
+def test_pre_v5_artifacts_still_load(exe_pair):
+    exe, _ = exe_pair
+    d = json.loads(exe.plan.to_json())
+    assert "migration" in d
+    del d["migration"]                 # a v4 artifact never wrote the key
+    d["version"] = 4
+    old = api.Plan.from_dict(d)
+    assert old.migration is None
+    assert api.compile(plan_artifact=old).plan.arch == "gpt-2b"
+
+
+def test_migrate_to_validates_target(exe_pair):
+    exe, _ = exe_pair
+    with pytest.raises(TypeError, match="migrate_to"):
+        exe.migrate_to(42)
+    with pytest.raises(ValueError, match="state onto"):
+        exe.migrate_to(dataclasses.replace(exe.plan, arch="llama-7b"))
+    bad_cfg = dataclasses.replace(exe.plan.config, seq_len=512)
+    with pytest.raises(ValueError, match="seq_len"):
+        exe.migrate_to(dataclasses.replace(exe.plan, config=bad_cfg))
+
+
+def test_cli_migrate_round_trip(exe_pair, tmp_path, capsys):
+    from repro.api.cli import main as cli_main
+
+    exe, _ = exe_pair
+    plan_path = tmp_path / "plan.json"
+    plan_path.write_text(exe.plan.to_json())
+    cl_path = tmp_path / "cluster.json"
+    cl_path.write_text(json.dumps(
+        api.cluster_to_dict(remove_nodes(duo(n_a=2, n_b=1), "A", 1))))
+    out = tmp_path / "migrated.json"
+    rc = cli_main(["migrate", "--plan", str(plan_path),
+                   "--cluster-file", str(cl_path), "-o", str(out)])
+    assert rc == 0
+    assert "downtime" in capsys.readouterr().out
+    migrated = api.Plan.from_json(out.read_text())
+    assert migrated.migration is not None
+    assert migrated.migration["downtime_s"] >= 0.0
