@@ -1,0 +1,279 @@
+"""kbench-subsystem trajectory benchmark -> ``BENCH_kbench.json`` at repo root.
+
+One entry per run (same append-style as ``BENCH_comm.json``), recording what
+measured-kernel pricing buys and that its invariants hold:
+
+- **autotune**: block-size sweeps over every op in the harness registry —
+  winner-vs-default speedup per op (>= 1.0 by construction: the default
+  config is a sweep member and the winner is the argmin over the same
+  measurements);
+- **price_error**: the table's nearest-bucket + FLOP-ratio interpolation
+  priced against a *fresh* measurement at a shape the table never saw —
+  the honest "how wrong is the measured cost model off-grid" number;
+- **planner**: a synthetic hardware table (plausible A100/V100 achieved
+  throughputs) changes the DP search's stage prices vs. the analytic model,
+  while an EMPTY table prices bit-identically to ``kbench=None`` (fallback
+  invariant) without erroring.
+
+``--tiny`` keeps collection interpret-mode/CI-sized (it already is; the flag
+also shrinks trials).  ``--fail-on-regression`` exits 1 when any autotune
+speedup dips below 1.0, the empty-table fallback diverges from analytic, or
+the synthetic table fails to move prices — CI runs this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit_csv                        # noqa: E402
+
+from repro import api                                         # noqa: E402
+from repro.core.cluster import (                              # noqa: E402
+    DEVICE_PROFILES, paper_case_study_cluster,
+)
+from repro.core.planner import PlannerConfig                  # noqa: E402
+from repro.kbench.bridge import KBenchConfig                  # noqa: E402
+from repro.kbench.table import (                              # noqa: E402
+    KernelMeasurement, LatencyTable,
+)
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kbench.json")
+
+ARCH = "gpt-2b"
+
+# off-bucket query shapes for the interpolation-error case (dims chosen so
+# the power-of-two bucket differs from the collected tiny shapes)
+PERTURBED = {
+    "flash_attention": (1, 192, 192, 2, 2, 32),
+    "rmsnorm": (384, 128),
+    "ssd_intra": (1, 3, 96, 2, 32, 32),
+}
+
+# plausible achieved FLOP/s for the synthetic hardware table (order of the
+# published MFU sweet spots; the point is "changes prices", not accuracy)
+SYNTH_ACHIEVED = {"A100-40G": 140e12, "V100-32G": 45e12}
+
+
+def _harp_cfg(kbench: Optional[KBenchConfig]) -> api.HarpConfig:
+    return api.HarpConfig(
+        seq_len=512, global_batch=16,
+        planner=PlannerConfig(granularity=16, n_microbatches=16,
+                              kbench=kbench))
+
+
+def synthetic_table() -> LatencyTable:
+    """Hardware-shaped cells keyed directly by DeviceProfile names."""
+    from repro.kbench import harness
+
+    table = LatencyTable()
+    for dev, achieved in SYNTH_ACHIEVED.items():
+        for op, spec in harness.OPS.items():
+            shape = spec.default_shape
+            flops = spec.flops(shape)
+            table.add(KernelMeasurement(
+                device=dev, op=op, shape=shape,
+                median_s=flops / achieved, trials=5, flops=flops,
+                blocks=spec.default_blocks, collected_at=1.7e9,
+                host="synthetic"))
+    return table
+
+
+def run(tiny: bool = False, label: Optional[str] = None) -> Dict:
+    from repro.kbench import autotune, harness
+
+    trials, warmup = (2, 1) if tiny else (5, 2)
+
+    # -- autotune: sweep every op's block grid at the tiny shapes ----------
+    t0 = time.perf_counter()
+    table, sweeps = autotune.collect_autotuned(
+        None, shapes="tiny", trials=trials, warmup=warmup)
+    collect_s = time.perf_counter() - t0
+    device = harness.device_fingerprint()
+    autotune_case = {
+        "device": device,
+        "cells": len(table),
+        "collect_seconds": round(collect_s, 3),
+        "ops": {sw.op: {
+            "shape": list(sw.shape),
+            "best_blocks": None if sw.best_blocks is None
+            else list(sw.best_blocks),
+            "best_s": sw.best_s, "default_s": sw.default_s,
+            "speedup": round(sw.speedup, 4),
+        } for sw in sweeps},
+        "all_speedups_ok": all(
+            sw.speedup >= 1.0 and sw.speedup == sw.speedup for sw in sweeps),
+    }
+
+    # -- price_error: interpolated estimate vs. fresh off-bucket truth -----
+    errors = {}
+    for op, shape in PERTURBED.items():
+        spec = harness.OPS[op]
+        est = table.estimate_s(device, op, shape, flops=spec.flops(shape))
+        res = harness.bench_op(op, shape, blocks=None, trials=trials,
+                               warmup=warmup)
+        errors[op] = {
+            "shape": list(shape),
+            "estimate_s": est, "measured_s": res.median_s,
+            "rel_error": (None if not est
+                          else round(abs(est - res.median_s) / res.median_s,
+                                     4)),
+        }
+    finite = [e["rel_error"] for e in errors.values()
+              if e["rel_error"] is not None]
+    price_case = {
+        "per_op": errors,
+        "mean_rel_error": (round(sum(finite) / len(finite), 4)
+                           if finite else None),
+        "all_covered": all(e["rel_error"] is not None
+                           for e in errors.values()),
+    }
+
+    # -- planner: measured pricing moves the search, empty table doesn't --
+    cluster = paper_case_study_cluster()
+    analytic = api.compile(ARCH, cluster, _harp_cfg(None))
+    synth_cfg = KBenchConfig(table=synthetic_table().to_dict())
+    measured = api.compile(ARCH, cluster, _harp_cfg(synth_cfg))
+    empty = api.compile(ARCH, cluster,
+                        _harp_cfg(KBenchConfig(table=LatencyTable().to_dict())))
+    # a table covering NO fleet device must also fall through cleanly
+    alien = LatencyTable([KernelMeasurement(
+        device="tpu:uncovered", op="rmsnorm", shape=(256, 128),
+        median_s=1e-4, trials=1, flops=4.0 * 256 * 128, blocks=None,
+        collected_at=1.7e9, host="synthetic")])
+    uncovering = api.compile(ARCH, cluster,
+                             _harp_cfg(KBenchConfig(table=alien.to_dict())))
+
+    def stage_times(exe):
+        return [s.t for s in exe.strategy.stages]
+
+    planner_case = {
+        "analytic_step_s": analytic.strategy.est_step_time,
+        "measured_step_s": measured.strategy.est_step_time,
+        "measured_vs_analytic": round(
+            measured.strategy.est_step_time
+            / analytic.strategy.est_step_time, 4),
+        "synthetic_mfu": {
+            dev: round(SYNTH_ACHIEVED[dev] / DEVICE_PROFILES[dev].peak_flops,
+                       4)
+            for dev in SYNTH_ACHIEVED},
+        "measured_changes_prices":
+            stage_times(measured) != stage_times(analytic),
+        "empty_matches_analytic":
+            stage_times(empty) == stage_times(analytic)
+            and empty.strategy.est_step_time
+            == analytic.strategy.est_step_time,
+        "uncovering_matches_analytic":
+            stage_times(uncovering) == stage_times(analytic),
+    }
+
+    return {"label": label or "HEAD",
+            "mode": "tiny" if tiny else "full",
+            "cases": {"autotune": autotune_case,
+                      "price_error": price_case,
+                      "planner": planner_case}}
+
+
+def extend_trajectory(entry: Dict, path: str = BENCH_PATH) -> Dict:
+    """Append one run to the kbench trajectory (creates the file on first
+    use)."""
+    doc = {"schema": 1,
+           "description": "kbench-subsystem trajectory; one entry per "
+                          "benchmarks/kbench_bench.py run — see "
+                          "docs/kbench.md.",
+           "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["runs"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def rows_from_entry(entry: Dict) -> List[Dict]:
+    c = entry["cases"]
+    rows = []
+    for op, r in c["autotune"]["ops"].items():
+        rows.append({
+            "label": f"autotune.{op}",
+            "step_time_s": r["best_s"],
+            "derived": f"default={r['default_s']:.2e}s;"
+                       f"speedup={r['speedup']}x;"
+                       f"blocks={r['best_blocks']}"})
+    rows.append({
+        "label": "price_error",
+        "step_time_s": 0.0,
+        "derived": f"mean_rel_error={c['price_error']['mean_rel_error']};"
+                   f"covered={c['price_error']['all_covered']}"})
+    rows.append({
+        "label": "planner.measured",
+        "step_time_s": c["planner"]["measured_step_s"],
+        "derived": f"analytic={c['planner']['analytic_step_s']:.3f}s;"
+                   f"ratio={c['planner']['measured_vs_analytic']};"
+                   f"fallback_ok={c['planner']['empty_matches_analytic']}"})
+    return rows
+
+
+def gates(entry: Dict) -> List[str]:
+    """Names of the invariants this entry violates (empty = healthy)."""
+    c = entry["cases"]
+    bad = []
+    if not c["autotune"]["all_speedups_ok"]:
+        bad.append("autotune_speedup_below_1")
+    if not c["planner"]["empty_matches_analytic"]:
+        bad.append("empty_table_diverges_from_analytic")
+    if not c["planner"]["uncovering_matches_analytic"]:
+        bad.append("uncovering_table_diverges_from_analytic")
+    if not c["planner"]["measured_changes_prices"]:
+        bad.append("synthetic_table_did_not_move_prices")
+    if not c["price_error"]["all_covered"]:
+        bad.append("interpolation_missed_a_recorded_op")
+    return bad
+
+
+def main() -> None:
+    """benchmarks/run.py contract: full measurement, CSV on stdout, one
+    trajectory entry appended to BENCH_kbench.json."""
+    entry = run(tiny=False)
+    extend_trajectory(entry)
+    emit_csv(rows_from_entry(entry))
+
+
+def cli(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized trial counts (interpret mode is automatic "
+                         "off-TPU)")
+    ap.add_argument("--label", default=None,
+                    help="trajectory entry label (default HEAD)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="trajectory JSON path (default repo root)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 when a kbench invariant breaks (speedup "
+                         "< 1, fallback divergence, prices unmoved)")
+    args = ap.parse_args(argv)
+
+    entry = run(tiny=args.tiny, label=args.label)
+    extend_trajectory(entry, args.out)
+    emit_csv(rows_from_entry(entry))
+    print(f"# trajectory entry appended to {os.path.abspath(args.out)}",
+          file=sys.stderr)
+
+    bad = gates(entry)
+    if bad:
+        print(f"# kbench invariants violated: {bad}", file=sys.stderr)
+        if args.fail_on_regression:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

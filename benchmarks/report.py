@@ -14,8 +14,8 @@ from typing import Dict, List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.roofline import CHIPS, HBM_BW, LINK_BW, PEAK, analyze, model_flops  # noqa: E402
-from repro.configs import get_config, list_archs                                    # noqa: E402
+from benchmarks.roofline import CHIPS, analyze, model_flops  # noqa: E402
+from repro.configs import get_config, list_archs             # noqa: E402
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 MARK = "## §Dry-run"
@@ -96,7 +96,7 @@ def roofline_section() -> str:
                 f"| {a['t_memory_s']*1e3:.0f} | {a['t_collective_s']*1e3:.0f} "
                 f"| {a['dominant']} | {a['useful_flops_ratio']:.2f} "
                 f"| {a['mfu_bound']:.3f} | {a['peak_mem_gib']:.1f}"
-                f"{'' if a['fits_16g'] else ' (!)'} |")
+                f"{'' if a['fits_mem'] else ' (!)'} |")
     return "\n".join(lines)
 
 

@@ -1,9 +1,13 @@
 """Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
 
 Terms (seconds, per step, from per-device compiled analyses):
-  t_compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16, v5e)
-  t_memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
-  t_collective = collective_bytes_per_device / link_bw      (~50 GB/s ICI)
+  t_compute    = HLO_FLOPs_per_device / peak_FLOPs
+  t_memory     = HLO_bytes_per_device / HBM_bw
+  t_collective = collective_bytes_per_device / link_bw
+
+Peak/HBM/link numbers come from the named ``DeviceProfile`` registry in
+``repro.core.cluster`` (``--device``, default TPUv5e) rather than hardcoded
+constants, so the same analysis reprices for any canonical fleet device.
 
 Also reports MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active
 params, the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips), and the
@@ -11,6 +15,7 @@ roofline fraction = t_compute / max(terms) (attainable MFU bound under the
 dominant resource)."""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -18,11 +23,23 @@ from typing import Dict, List, Optional
 
 from benchmarks.common import RESULTS_DIR, emit_csv
 from repro.configs import get_config, get_shape
+from repro.core.cluster import DEVICE_LINK_BW, DEVICE_PROFILES, DeviceProfile
 
-PEAK = 197e12        # bf16 FLOP/s per v5e chip
-HBM_BW = 819e9       # bytes/s
-LINK_BW = 50e9       # bytes/s per ICI link
+DEFAULT_DEVICE = "TPUv5e"
 CHIPS = {"single": 256, "multi": 512}
+
+# ICI is 4 links/chip on the TPUs; the registry records the aggregate, the
+# per-link roofline divides back out.  GPUs use the NVLink aggregate as-is.
+_LINKS_PER_CHIP = {"TPUv5e": 4, "TPUv4": 4}
+
+
+def link_bw(device: DeviceProfile, override_gbps: Optional[float] = None
+            ) -> float:
+    """Per-link bytes/s for the collective roofline term."""
+    if override_gbps is not None:
+        return override_gbps * 1e9
+    agg = DEVICE_LINK_BW.get(device.name, 50e9)
+    return agg / _LINKS_PER_CHIP.get(device.name, 1)
 
 
 def model_flops(arch: str, shape_name: str) -> float:
@@ -45,40 +62,44 @@ def load_cells(out_dir: Optional[str] = None) -> List[Dict]:
     return cells
 
 
-def analyze(rec: Dict) -> Optional[Dict]:
+def analyze(rec: Dict, device: Optional[DeviceProfile] = None,
+            link_gbps: Optional[float] = None) -> Optional[Dict]:
     if not rec.get("ok") or "flops_per_device" not in rec:
         return None
+    device = device or DEVICE_PROFILES[DEFAULT_DEVICE]
     chips = CHIPS[rec["mesh"]]
-    t_comp = rec["flops_per_device"] / PEAK
-    t_mem = rec["bytes_per_device"] / HBM_BW
-    t_coll = rec["collective_bytes_per_device"] / LINK_BW
+    t_comp = rec["flops_per_device"] / device.peak_flops
+    t_mem = rec["bytes_per_device"] / device.hbm_bw
+    t_coll = rec["collective_bytes_per_device"] / link_bw(device, link_gbps)
     terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
     dominant = max(terms, key=terms.get)
     mf = model_flops(rec["arch"], rec["shape"])
     useful = mf / max(rec["flops_per_device"] * chips, 1.0)
     frac = t_comp / max(max(terms.values()), 1e-30)
     # attainable MFU: useful fraction of peak while bound by dominant term
-    mfu_bound = (mf / chips / PEAK) / max(terms.values())
+    mfu_bound = (mf / chips / device.peak_flops) / max(terms.values())
     return {
         "label": f'{rec["arch"]}/{rec["shape"]}/{rec["mesh"]}',
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "device": device.name,
         "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
         "dominant": dominant,
         "useful_flops_ratio": useful,
         "roofline_fraction": frac,
         "mfu_bound": mfu_bound,
         "peak_mem_gib": rec["memory"]["peak_per_device"] / 2 ** 30,
-        "fits_16g": rec["memory"]["peak_per_device"] <= 16 * 2 ** 30,
+        "fits_mem": rec["memory"]["peak_per_device"] <= device.mem_bytes,
         "step_time_s": max(terms.values()),
     }
 
 
-def run() -> List[Dict]:
+def run(device: Optional[DeviceProfile] = None,
+        link_gbps: Optional[float] = None) -> List[Dict]:
     rows = []
     for rec in load_cells():
         if rec.get("mesh") != "single":
             continue  # roofline scope is single-pod (multi = compile proof)
-        a = analyze(rec)
+        a = analyze(rec, device=device, link_gbps=link_gbps)
         if a is None:
             status = ("compile-only" if rec.get("ok")
                       else f"FAIL:{rec.get('error', '?')[:60]}")
@@ -88,17 +109,18 @@ def run() -> List[Dict]:
         a["derived"] = (f"dom={a['dominant']};mfu_bound={a['mfu_bound']:.2f};"
                         f"useful={a['useful_flops_ratio']:.2f};"
                         f"mem={a['peak_mem_gib']:.1f}GiB"
-                        f"{'' if a['fits_16g'] else '(OVER)'}")
+                        f"{'' if a['fits_mem'] else '(OVER)'}")
         rows.append(a)
     return rows
 
 
-def table() -> str:
+def table(device: Optional[DeviceProfile] = None,
+          link_gbps: Optional[float] = None) -> str:
     """Markdown roofline table for EXPERIMENTS.md."""
     lines = ["| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) |"
              " dominant | useful | MFU bound | mem GiB |",
              "|---|---|---|---|---|---|---|---|---|---|"]
-    for r in run():
+    for r in run(device=device, link_gbps=link_gbps):
         if "dominant" not in r:
             lines.append(f"| {r['label']} | | | | | | FAIL | | | |")
             continue
@@ -107,12 +129,21 @@ def table() -> str:
             f"| {r['t_compute_s'] * 1e3:.1f} | {r['t_memory_s'] * 1e3:.1f} "
             f"| {r['t_collective_s'] * 1e3:.1f} | {r['dominant']} "
             f"| {r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.2f} "
-            f"| {r['peak_mem_gib']:.1f}{'' if r['fits_16g'] else ' (!)'} |")
+            f"| {r['peak_mem_gib']:.1f}{'' if r['fits_mem'] else ' (!)'} |")
     return "\n".join(lines)
 
 
-def main():
-    emit_csv(run())
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--device", default=DEFAULT_DEVICE,
+                    choices=sorted(DEVICE_PROFILES),
+                    help="DeviceProfile whose peak/HBM/link specs price the "
+                         "roofline terms")
+    ap.add_argument("--link-gbps", type=float, default=None,
+                    help="override the per-link bandwidth (GB/s)")
+    args = ap.parse_args(argv)
+    emit_csv(run(device=DEVICE_PROFILES[args.device],
+                 link_gbps=args.link_gbps))
 
 
 if __name__ == "__main__":

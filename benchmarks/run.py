@@ -23,6 +23,10 @@ MODULES = [
     "benchmarks.serve_replay",         # serving: disaggregated vs colocated
                                        # replay on the fig10 fleet; appends a
                                        # run to BENCH_serve.json (repo root)
+    "benchmarks.kbench_bench",         # measured-kernel pricing: autotune
+                                       # speedups, interpolation error,
+                                       # planner integration; appends a run
+                                       # to BENCH_kbench.json (repo root)
     "benchmarks.roofline",             # repo-specific: dry-run roofline
 ]
 

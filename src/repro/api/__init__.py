@@ -27,6 +27,7 @@ from repro.api.facade import (
     Executable, compile, fit, generate, lower, plan, warn_deprecated,
 )
 from repro.api import registry
+from repro.kbench import KBenchConfig, KBenchModel, LatencyTable
 from repro.migrate import MigrationCost, MigrationPlan
 from repro.serving.batching import ServeSimResult
 from repro.serving.placement import ServePlan, ServingConfig
@@ -37,6 +38,7 @@ __all__ = [
     "compile", "plan", "lower", "fit", "generate",
     "ServingConfig", "ServePlan", "ServeTrace", "ServeSimResult",
     "MigrationPlan", "MigrationCost",
+    "KBenchConfig", "KBenchModel", "LatencyTable",
     "cluster_to_dict", "cluster_from_dict", "sim_summary",
     "registry", "warn_deprecated",
 ]

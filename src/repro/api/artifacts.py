@@ -31,7 +31,10 @@ from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 5   # v5: migration subsystem — Plan.migration (the priced
+SCHEMA_VERSION = 6   # v6: kbench subsystem — HarpConfig.kbench /
+                     # PlannerConfig.kbench (measured-kernel pricing; None on
+                     # analytic plans, which stay bit-identical to v5)
+                     # (v5: migration subsystem — Plan.migration, the priced
                      # differ summary from Executable.migrate_to / the CLI
                      # `repro migrate`; None on directly-planned artifacts)
                      # (v4: serving subsystem — HarpConfig.serving, Plan.serve;

@@ -12,6 +12,11 @@ Subcommands round-trip the :class:`~repro.api.artifacts.Plan` JSON artifact:
     python -m repro replay --plan plan.json --trace paper --steps 120
     python -m repro migrate --plan plan.json --cluster paper_eval \\
         --cluster-kw n_a100_nodes=3 -o migrated.json
+    python -m repro kbench collect --autotune -o ktable.json
+    python -m repro kbench merge hostA.json hostB.json -o ktable.json
+    python -m repro kbench show ktable.json
+    python -m repro plan --arch gpt-2b --kbench-table ktable.json \\
+        --kbench-device-map A100-40G=gpu:A100 -o plan.json
     python -m repro dryrun --arch minitron-8b --shape train_4k
 
 ``plan`` on a planning box, ``simulate``/``train``/``replay`` anywhere —
@@ -71,11 +76,19 @@ def cmd_plan(args) -> int:
         if args.comm_algorithms:
             kw["algorithms"] = tuple(args.comm_algorithms.split(","))
         comm_cfg = CommConfig(**kw)
+    kbench_cfg = None
+    if args.kbench_table:
+        from repro.kbench.bridge import KBenchConfig
+        dmap = None
+        if args.kbench_device_map:
+            dmap = dict(p.split("=", 1) for p in args.kbench_device_map)
+        kbench_cfg = KBenchConfig(table_path=args.kbench_table,
+                                  device_map=dmap)
     pcfg = PlannerConfig(
         granularity=args.granularity, n_microbatches=args.microbatches,
         min_submesh_devices=args.min_submesh,
         max_submesh_devices=args.max_submesh, intra_op=args.intra_op,
-        comm=comm_cfg)
+        comm=comm_cfg, kbench=kbench_cfg)
     if args.workers:
         pcfg.search = dataclasses.replace(pcfg.search, n_workers=args.workers)
     serving_cfg = None
@@ -99,7 +112,59 @@ def cmd_plan(args) -> int:
         from repro.api import compile as api_compile
         print()
         print(api_compile(plan_artifact=artifact).explain_comm())
+    if args.explain_costs:
+        from repro.api import compile as api_compile
+        print()
+        print(api_compile(plan_artifact=artifact).explain_costs())
     print(f"\nplan written to {args.out}")
+    return 0
+
+
+def cmd_kbench(args) -> int:
+    from repro.kbench.table import LatencyTable
+
+    if args.kcmd == "collect":
+        from repro.kbench import autotune, harness
+        ops_to_run = args.ops.split(",") if args.ops else None
+        kw = dict(shapes=args.shapes, trials=args.trials, warmup=args.warmup,
+                  interpret=True if args.interpret else None, seed=args.seed,
+                  device=args.device)
+        if args.autotune:
+            table, sweeps = autotune.collect_autotuned(ops_to_run, **kw)
+            for sw in sweeps:
+                print(f"{sw.op} {sw.shape}: best={sw.best_blocks} "
+                      f"({sw.best_s * 1e6:.1f}us), default="
+                      f"{sw.default_blocks} ({sw.default_s * 1e6:.1f}us), "
+                      f"speedup {sw.speedup:.2f}x")
+        else:
+            table = harness.collect(ops_to_run, **kw)
+        table.save(args.out)
+        print(f"{len(table)} cells ({harness.device_fingerprint(True if args.interpret else None)}) "
+              f"written to {args.out}")
+        return 0
+
+    if args.kcmd == "merge":
+        table = LatencyTable()
+        for path in args.tables:
+            table = table.merge(LatencyTable.load(path))
+        table.save(args.out)
+        print(f"merged {len(args.tables)} tables -> {len(table)} cells "
+              f"in {args.out}")
+        return 0
+
+    # show
+    table = LatencyTable.load(args.table)
+    entries = table.entries if not args.device \
+        else table.for_device(args.device)
+    print(f"{args.table}: {len(table)} cells, devices: "
+          f"{', '.join(table.devices()) or '(none)'}")
+    for e in entries:
+        blocks = "default" if e.blocks is None else "x".join(map(str, e.blocks))
+        tput = f", {e.flops / e.median_s / 1e12:.3f} TFLOP/s" \
+            if e.flops > 0 and e.median_s > 0 else ""
+        print(f"  [{e.device}] {e.op} {tuple(e.shape)} blocks={blocks}: "
+              f"{e.median_s * 1e6:.1f}us (median of {e.trials}{tput}) "
+              f"@{e.host or '?'}")
     return 0
 
 
@@ -306,6 +371,18 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--explain-comm", action="store_true",
                    help="print the per-stage collective breakdown "
                         "(algorithm, bytes, priced time, contended links)")
+    p.add_argument("--kbench-table", default=None, metavar="TABLE.json",
+                   help="measured-kernel latency table (repro kbench "
+                        "collect): the DP search prices stages from "
+                        "measurements where covered, analytic elsewhere")
+    p.add_argument("--kbench-device-map", action="append", default=[],
+                   metavar="NAME=FINGERPRINT",
+                   help="map a DeviceProfile name to a table device "
+                        "fingerprint, repeatable (e.g. "
+                        "A100-40G=gpu:NVIDIA_A100)")
+    p.add_argument("--explain-costs", action="store_true",
+                   help="print the per-stage pricing breakdown (measured vs "
+                        "analytic source, MFU anchors)")
     p.add_argument("--scheduler", default="h1f1b")
     p.add_argument("--workers", type=int, default=0)
     p.add_argument("--serving", action="store_true",
@@ -390,6 +467,36 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("-o", "--out", default="migrated_plan.json")
     p.add_argument("--verbose", action="store_true")
 
+    p = sub.add_parser("kbench", help="measured-kernel latency tables "
+                       "(collect / merge / show)")
+    ksub = p.add_subparsers(dest="kcmd", required=True)
+
+    k = ksub.add_parser("collect", help="microbenchmark the fused ops on "
+                        "this host -> table JSON")
+    k.add_argument("--ops", default=None, metavar="A,B,...",
+                   help="subset of the op registry (default: all)")
+    k.add_argument("--shapes", default="tiny", choices=["tiny", "default"],
+                   help="canonical shape set (tiny = CI/interpret-sized)")
+    k.add_argument("--autotune", action="store_true",
+                   help="sweep each op's block grid and record the winner")
+    k.add_argument("--trials", type=int, default=5)
+    k.add_argument("--warmup", type=int, default=2)
+    k.add_argument("--seed", type=int, default=0)
+    k.add_argument("--interpret", action="store_true",
+                   help="force Pallas interpret mode (default: auto off-TPU)")
+    k.add_argument("--device", default=None,
+                   help="override the recorded device fingerprint")
+    k.add_argument("-o", "--out", default="ktable.json")
+
+    k = ksub.add_parser("merge", help="deterministic cross-host merge")
+    k.add_argument("tables", nargs="+", metavar="TABLE.json")
+    k.add_argument("-o", "--out", default="ktable.json")
+
+    k = ksub.add_parser("show", help="dump a table's cells")
+    k.add_argument("table", metavar="TABLE.json")
+    k.add_argument("--device", default=None,
+                   help="only cells for this device fingerprint")
+
     sub.add_parser("dryrun", add_help=False,
                    help="forward to repro.launch.dryrun (own flags)")
     return ap
@@ -402,7 +509,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
     return {"plan": cmd_plan, "simulate": cmd_simulate,
             "train": cmd_train, "replay": cmd_replay,
-            "migrate": cmd_migrate}[args.cmd](args)
+            "migrate": cmd_migrate, "kbench": cmd_kbench}[args.cmd](args)
 
 
 if __name__ == "__main__":

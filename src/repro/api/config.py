@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional
 
 from repro.comm.selector import CommConfig
 from repro.core.costmodel import CostModelConfig
+from repro.kbench.bridge import KBenchConfig
 from repro.core.dp_search import SearchConfig
 from repro.core.planner import PlannerConfig
 from repro.data.pipeline import DataConfig
@@ -50,8 +51,16 @@ class HarpConfig:
     serving: Optional[ServingConfig] = None  # None -> training-only plan
     # (the off-state invariant: serving=None leaves every training artifact
     # bit-identical to the pre-serving schema — see DESIGN.md §7)
+    kbench: Optional[KBenchConfig] = None  # None -> analytic pricing
+    # (convenience alias for planner.kbench; same off-state invariant —
+    # kbench=None plans are bit-identical to pre-kbench plans, DESIGN.md §9)
 
     def __post_init__(self):
+        # the top-level kbench knob materializes into the planner config;
+        # disagreement between the two is caught by validate()
+        if self.kbench is not None and self.planner.kbench is None:
+            self.planner = dataclasses.replace(self.planner,
+                                               kbench=self.kbench)
         # the named cost model materializes into the planner config unless
         # the caller already customized it away from the default; unknown
         # names are left for validate() to report (uniform ValueError path)
@@ -108,6 +117,10 @@ class HarpConfig:
             if name not in registry.available(kind):
                 errs.append(f"unknown {kind} {name!r}; available: "
                             f"{registry.available(kind)}")
+        if self.kbench is not None and self.planner.kbench is not None \
+                and self.kbench != self.planner.kbench:
+            errs.append("kbench and planner.kbench disagree — set one "
+                        "(the top-level knob materializes into the planner)")
         if self.data is not None and self.data.seq_len != self.seq_len:
             errs.append(f"data.seq_len ({self.data.seq_len}) disagrees with "
                         f"seq_len ({self.seq_len})")
@@ -148,20 +161,25 @@ class HarpConfig:
         pd = dict(d.pop("planner"))
         pd.pop("measure_fn", None)
         comm = pd.pop("comm", None)
+        # absent key: a pre-v6 artifact — still loads
+        pkb = pd.pop("kbench", None)
         planner = PlannerConfig(
             cost=CostModelConfig(**pd.pop("cost")),
             search=SearchConfig(**pd.pop("search")),
-            comm=None if comm is None else CommConfig(**comm), **pd)
+            comm=None if comm is None else CommConfig(**comm),
+            kbench=None if pkb is None else KBenchConfig.from_dict(pkb), **pd)
         trainer = TrainerConfig(**d.pop("trainer"))
         data = d.pop("data", None)
         elastic = d.pop("elastic", None)
         # absent key: a pre-v4 (training-only) artifact — still loads
         serving = d.pop("serving", None)
+        kbench = d.pop("kbench", None)
         return HarpConfig(
             planner=planner, trainer=trainer,
             data=None if data is None else DataConfig(**data),
             elastic=None if elastic is None else ControllerConfig(**elastic),
             serving=None if serving is None else ServingConfig(**serving),
+            kbench=None if kbench is None else KBenchConfig.from_dict(kbench),
             **d)
 
     @staticmethod

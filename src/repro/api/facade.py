@@ -258,6 +258,50 @@ class Executable:
                      + (", ".join(bd["contended_links"]) or "none"))
         return "\n".join(lines)
 
+    def explain_costs(self) -> str:
+        """Per-stage price provenance: measured (kbench table) vs analytic.
+
+        Re-prices every stage at its chosen tp both ways; stages on devices
+        the table covers show the measured anchor MFU next to the spec-sheet
+        ``base_mfu`` and the analytic price they displaced.  Without
+        ``config.kbench`` (or with an empty/uncovering table) every stage is
+        analytic — the fallback never errors."""
+        from repro.comm.selector import CommModel
+        from repro.core.costmodel import Submesh, intra_op_candidates
+        from repro.kbench.bridge import KBenchModel
+
+        pcfg = self.config.planner
+        kb = KBenchModel(pcfg.kbench) if pcfg.kbench is not None else None
+        comm = CommModel(self.cluster, pcfg.comm) \
+            if pcfg.comm is not None and pcfg.comm.enabled else None
+        mb = self.strategy.mb_tokens
+        lines = ["stage price provenance (per microbatch, f+b):"]
+        for i, s in enumerate(self.strategy.stages):
+            sub = self.cluster.subclusters[s.cluster_idx]
+            mesh = Submesh(s.cluster_idx, s.mesh_n, s.mesh_m)
+            joint = s.intra_op is not None
+            stage_layers = self.layers[s.layer_start:s.layer_end]
+            kw = dict(uneven=joint,
+                      amortize_microbatches=pcfg.n_microbatches if joint else 0,
+                      comm=comm)
+            analytic = next(
+                (c for c in intra_op_candidates(stage_layers, sub, mesh, mb,
+                                                pcfg.cost, **kw)
+                 if c.tp == s.tp), None)
+            mfu = kb.measured_mfu(sub) if kb is not None else None
+            tag = f"measured (mfu={mfu:.3f} vs base {sub.device.base_mfu:.3f})" \
+                if mfu is not None else "analytic"
+            line = (f"  stage{i} [{sub.name}] tp={s.tp} dp={s.dp}: "
+                    f"t={(s.t_f + s.t_b) * 1e3:.2f}ms  source={tag}")
+            if mfu is not None and analytic is not None:
+                line += f"  (analytic would be {analytic.t * 1e3:.2f}ms)"
+            lines.append(line)
+        if kb is not None:
+            lines.append("  " + kb.describe().replace("\n", "\n  "))
+        else:
+            lines.append("  kbench: off (analytic pricing everywhere)")
+        return "\n".join(lines)
+
     # -- simulation ----------------------------------------------------------
 
     def sim_cache_stats(self) -> Dict[str, int]:

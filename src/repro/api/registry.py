@@ -27,6 +27,9 @@ Registered kinds and their contracts (all times seconds):
 - ``serve_trace``: ``fn(serving_cfg, **kw) -> ServeTrace`` (request-arrival
   generators for the serving simulator; the CLI's ``simulate --trace``
   resolves here).
+- ``device``: a :class:`repro.core.cluster.DeviceProfile` instance (the
+  canonical fleet archetypes; ``benchmarks/roofline.py`` and the
+  ``repro kbench`` CLI resolve devices by name here).
 """
 from __future__ import annotations
 
@@ -42,7 +45,7 @@ from repro.runtime.events import EventTrace, paper_trace, random_trace
 from repro.serving.workload import poisson_trace, scripted_trace
 
 KINDS = ("scheduler", "cost_model", "event_source", "cluster", "collective",
-         "serve_trace")
+         "serve_trace", "device")
 
 _REGISTRY: Dict[str, Dict[str, Any]] = {k: {} for k in KINDS}
 
@@ -137,3 +140,6 @@ def _scripted_serve_trace(scfg, *, qps=None, n_requests=None,
 
 register("serve_trace", "poisson", _poisson_serve_trace)
 register("serve_trace", "scripted", _scripted_serve_trace)
+
+for _name, _profile in _cluster_lib.DEVICE_PROFILES.items():
+    register("device", _name, _profile)

@@ -36,6 +36,22 @@ V100_32G = DeviceProfile("V100-32G", 125e12, 32 * GB, 900e9, base_mfu=0.45)
 TPU_V5E = DeviceProfile("TPUv5e", 197e12, 16 * GB, 819e9, base_mfu=0.55)
 TPU_V4 = DeviceProfile("TPUv4", 275e12, 32 * GB, 1228e9, base_mfu=0.55)
 
+# Named registry of the canonical profiles (also exposed through
+# repro.api.registry under kind "device") — benchmarks/roofline.py and the
+# kbench CLI resolve fleet devices by name here instead of hardcoding specs.
+DEVICE_PROFILES: Dict[str, DeviceProfile] = {
+    p.name: p for p in (A100_40G, V100_32G, TPU_V5E, TPU_V4)
+}
+
+# Typical per-device interconnect bandwidth (bytes/s per direction) for
+# roofline-style comm bounds: NVLink-gen for the GPUs, ICI for the TPUs.
+DEVICE_LINK_BW: Dict[str, float] = {
+    "A100-40G": 300e9,
+    "V100-32G": 150e9,
+    "TPUv5e": 4 * 50e9,
+    "TPUv4": 4 * 50e9,
+}
+
 
 @dataclass(frozen=True)
 class SubCluster:

@@ -72,10 +72,18 @@ class CostModelConfig:
     dp_eff_decay: float = 0.99
 
 
-def _mfu(sub: SubCluster, tp: int, dp: int, cfgm: CostModelConfig) -> float:
+def _mfu(sub: SubCluster, tp: int, dp: int, cfgm: CostModelConfig,
+         kbench=None) -> float:
     # device.efficiency is the runtime-calibration scale (telemetry EWMA);
     # a straggling sub-cluster shows up here and shifts the whole plan
     eff = sub.device.base_mfu * sub.device.efficiency
+    if kbench is not None:
+        # measured-kernel anchor (repro.kbench): a latency table covering
+        # this device replaces the spec-sheet base_mfu with the achieved
+        # MFU; uncovered devices keep the analytic anchor untouched
+        measured = kbench.measured_mfu(sub)
+        if measured is not None:
+            eff = measured * sub.device.efficiency
     eff *= cfgm.tp_eff_decay ** max(0, math.log2(max(tp, 1)))
     eff *= cfgm.dp_eff_decay ** max(0, math.log2(max(dp, 1)))
     return eff
@@ -100,7 +108,7 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
                         uneven: bool = True,
                         amortize_microbatches: int = 0,
                         max_degree: int = 0,
-                        comm=None) -> List[StageCost]:
+                        comm=None, kbench=None) -> List[StageCost]:
     """All candidate intra-op shardings of this stage on this submesh, one
     per tensor-parallel width tp (powers of two dividing ``mesh.m``, capped
     by ``max_degree`` when > 0).  Each result carries its IntraOpPlan; the
@@ -113,7 +121,13 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
     whichever is cheapest on this submesh's link tiers) instead of the
     implicit flat ring; the chosen algorithm names ride on the
     ``IntraOpPlan``.  ``comm=None`` is the legacy scalar pricing,
-    bit-identical to before the comm subsystem existed."""
+    bit-identical to before the comm subsystem existed.
+
+    ``kbench`` (optional :class:`repro.kbench.bridge.KBenchModel`): anchor
+    the compute MFU at the device's *measured* kernel throughput instead of
+    the spec-sheet ``base_mfu`` (see :func:`_mfu`).  ``kbench=None`` — and a
+    model whose table doesn't cover this device — leaves the analytic
+    pricing bit-identical."""
     flops = sum(l.flops_per_token for l in layers) * mb_tokens
     params = sum(l.param_bytes for l in layers)
     ar_bytes = sum(l.ar_bytes_per_token for l in layers) * mb_tokens
@@ -133,7 +147,7 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
             # together (throughput = mean node scale); even shards wait for
             # the slowest node (throughput = min node scale)
             scale = (sum(scales) / len(scales)) if uneven else min(scales)
-            eff = _mfu(sub, tp, dp, cfgm) * scale
+            eff = _mfu(sub, tp, dp, cfgm, kbench) * scale
             t_comp_f = flops / (mesh.n_devices * dev.peak_flops * eff)
             # Megatron TP: all-reduce row-parallel outputs over NVLink/ICI.
             # ring all-reduce moves 2(tp-1)/tp of payload; fwd once, bwd once.
@@ -194,14 +208,14 @@ def intra_op_candidates(layers: Sequence[Layer], sub: SubCluster,
 def stage_cost(layers: Sequence[Layer], sub: SubCluster, mesh: Submesh,
                mb_tokens: int, cfgm: CostModelConfig = CostModelConfig(),
                measure_fn: Optional[Callable] = None,
-               comm=None) -> StageCost:
+               comm=None, kbench=None) -> StageCost:
     """Cheapest feasible intra-op strategy for this stage-mesh pair — the
     inter-op-only (greedy) contract: even shards, fastest ``t = t_f + t_b``.
     The joint search uses :func:`intra_op_candidates` instead."""
     if measure_fn is not None:
         return measure_fn(layers, sub, mesh, mb_tokens)
     cands = intra_op_candidates(layers, sub, mesh, mb_tokens, cfgm,
-                                uneven=False, comm=comm)
+                                uneven=False, comm=comm, kbench=kbench)
     assert cands, "no intra-op factorization for mesh"
     return min(cands, key=lambda c: c.t)
 

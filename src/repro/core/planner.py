@@ -26,6 +26,7 @@ from repro.core.layering import Layer, build_layers
 from repro.core.opgraph import Op, build_op_sequence
 from repro.core.profiler import ZeroRedundantProfiler
 from repro.core.strategy import ParallelStrategy
+from repro.kbench.bridge import KBenchConfig, KBenchModel
 
 
 @dataclass
@@ -46,6 +47,11 @@ class PlannerConfig:
     ring / halving-doubling / two-level hierarchical) and WAN-latency-aware
     cut pricing.  ``None`` (default) keeps the legacy scalar pricing
     bit-identical.
+    ``kbench``: a :class:`repro.kbench.bridge.KBenchConfig` turns on
+    measured-kernel pricing — the DP search anchors each device's compute
+    MFU at the achieved throughput recorded in the latency table (collected
+    by ``repro kbench collect``), falling back to the analytic estimate for
+    uncovered devices.  ``None`` (default) keeps plans bit-identical.
     """
     granularity: int = 128            # target #layers (fine-grained)
     n_microbatches: int = 128
@@ -57,6 +63,7 @@ class PlannerConfig:
     intra_op: bool = False
     intra_op_max_degree: int = 0   # 0 = unrestricted
     comm: Optional[CommConfig] = None
+    kbench: Optional["KBenchConfig"] = None
     cost: CostModelConfig = field(default_factory=CostModelConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
     measure_fn: Optional[Callable] = None   # on-hardware profiling hook
@@ -114,6 +121,9 @@ class HAPTPlanner:
         comm_model = None
         if cfg.comm is not None and cfg.comm.enabled:
             comm_model = CommModel(self.cluster, cfg.comm)
+        kbench_model = None
+        if cfg.kbench is not None:
+            kbench_model = KBenchModel(cfg.kbench)
 
         profiler = ZeroRedundantProfiler(
             self.cluster, layers, mb_tokens, cost_cfg=cfg.cost, rho=cfg.rho,
@@ -121,7 +131,8 @@ class HAPTPlanner:
             max_submesh_devices=cfg.max_submesh_devices,
             measure_fn=cfg.measure_fn, cost_cache=profile_cache,
             intra_op=joint, intra_op_max_degree=cfg.intra_op_max_degree,
-            amortize_microbatches=B if joint else 0, comm=comm_model)
+            amortize_microbatches=B if joint else 0, comm=comm_model,
+            kbench=kbench_model)
         tables = profiler.profile()
         t_prof = time.time()
 
@@ -147,6 +158,14 @@ class HAPTPlanner:
             # path's strategy JSON stays bit-identical to the pre-comm
             # pipeline (the DESIGN.md off-state equivalence guarantee)
             strategy.planner_meta["comm"] = dataclasses.asdict(cfg.comm)
+        if kbench_model is not None:
+            # same off-state rule as comm: only measured-priced runs stamp
+            # their provenance (table fingerprint + per-device coverage)
+            strategy.planner_meta["kbench"] = {
+                "fingerprint": kbench_model.fingerprint(),
+                "cells": len(kbench_model.table),
+                "covered_devices": sorted(kbench_model.covered_devices()),
+            }
         if verbose:
             print(strategy.describe())
         return strategy

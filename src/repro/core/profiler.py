@@ -107,7 +107,7 @@ class ZeroRedundantProfiler:
                  intra_op: bool = False,
                  intra_op_max_degree: int = 0,
                  amortize_microbatches: int = 0,
-                 comm=None):
+                 comm=None, kbench=None):
         """``cost_cache``: a caller-owned stage-cost cache shared ACROSS
         profiler invocations (the elastic runtime's table-reuse API).  Keys
         fingerprint everything the cost model reads — layer-class sequence,
@@ -124,7 +124,10 @@ class ZeroRedundantProfiler:
         sync into the per-microbatch data-axis cost (0 = don't price it).
         ``comm``: optional :class:`repro.comm.selector.CommModel` — price
         collectives under the selected algorithm (cache keys carry its
-        fingerprint so comm-aware and legacy entries never collide)."""
+        fingerprint so comm-aware and legacy entries never collide).
+        ``kbench``: optional :class:`repro.kbench.bridge.KBenchModel` —
+        anchor compute MFU at measured kernel throughput (cache keys carry
+        its fingerprint too; analytic fallback for uncovered devices)."""
         self.cluster = cluster
         self.layers = list(layers)
         self.mb_tokens = mb_tokens
@@ -139,6 +142,7 @@ class ZeroRedundantProfiler:
         self.intra_op_max_degree = intra_op_max_degree
         self.amortize_microbatches = amortize_microbatches
         self.comm = comm
+        self.kbench = kbench
 
     def meshes(self) -> List[Submesh]:
         out = []
@@ -181,7 +185,10 @@ class ZeroRedundantProfiler:
                     # sub-scoped comm identity: a fleet change elsewhere must
                     # not evict this sub-cluster's comm-aware entries
                     None if self.comm is None
-                    else self.comm.sub_fingerprint(mesh.cluster_idx))
+                    else self.comm.sub_fingerprint(mesh.cluster_idx),
+                    # measured-pricing identity: entries priced off a kbench
+                    # table must never collide with analytic ones
+                    None if self.kbench is None else self.kbench.fingerprint())
         out: Dict[Optional[int], StageCost] = {}
         missing = [tp for tp in tps if (*base_key, tp) not in cache]
         for tp in tps:
@@ -196,7 +203,8 @@ class ZeroRedundantProfiler:
             cands = {c.tp: c for c in intra_op_candidates(
                 self.layers[i:j], sub, mesh, self.mb_tokens, self.cost_cfg,
                 uneven=True, amortize_microbatches=self.amortize_microbatches,
-                max_degree=self.intra_op_max_degree, comm=self.comm)}
+                max_degree=self.intra_op_max_degree, comm=self.comm,
+                kbench=self.kbench)}
             for tp in missing:
                 if tp not in cands:
                     continue
@@ -205,7 +213,8 @@ class ZeroRedundantProfiler:
                 stats.n_unique_profiled += 1
         else:
             cost = stage_cost(self.layers[i:j], sub, mesh, self.mb_tokens,
-                              self.cost_cfg, self.measure_fn, comm=self.comm)
+                              self.cost_cfg, self.measure_fn, comm=self.comm,
+                              kbench=self.kbench)
             cache[(*base_key, None)] = cost
             out[None] = cost
             stats.n_unique_profiled += 1

@@ -1,0 +1,33 @@
+"""repro.kbench — measured-kernel cost model.
+
+Closes the loop from the Pallas kernel zoo to the planner (ROADMAP item 5):
+
+  - ``harness``  — deterministic microbenchmark runner for the fused ops in
+    ``kernels/ops.py`` (seeded inputs, warmup + block_until_ready,
+    median-of-k trials, interpret-mode path so it runs off-GPU in CI);
+  - ``autotune`` — block-size autotuner sweeping the (block_q, block_k)-style
+    tiling grids per (device, op, shape), installing winners into the kernel
+    entry points' tuned-block registry;
+  - ``table``    — JSON-persisted per-(device_fingerprint, op, shape-bucket)
+    measured-latency table with nearest-bucket interpolation, staleness
+    stamps, and a deterministic cross-host merge policy;
+  - ``bridge``   — adapts the table into ``ZeroRedundantProfiler.measure_fn``
+    and the cost model so ``PlannerConfig.kbench=KBenchConfig(...)`` prices
+    DP-search stages from measurements, falling back to the analytic
+    estimate for uncovered cells.  ``kbench=None`` is bit-identical to the
+    analytic-only planner (off-state invariant, pinned in tests).
+
+Layering: ``table``/``bridge`` are pure Python (safe for the numpy-only
+planner); ``harness``/``autotune`` import jax and are only pulled in when
+actually measuring.
+"""
+from repro.kbench.table import KernelMeasurement, LatencyTable, shape_bucket
+from repro.kbench.bridge import KBenchConfig, KBenchModel
+
+__all__ = [
+    "KernelMeasurement",
+    "LatencyTable",
+    "shape_bucket",
+    "KBenchConfig",
+    "KBenchModel",
+]

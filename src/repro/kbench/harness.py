@@ -1,0 +1,231 @@
+"""Deterministic microbenchmark harness for the fused Pallas ops.
+
+Measures the public entry points in ``kernels/ops.py`` (flash attention,
+SSD intra-chunk, rmsnorm) — seeded inputs, jit + warmup, ``block_until_ready``
+around every timed call, median of k trials.  ``interpret=None`` resolves the
+same way the ops do (Python interpretation of the kernel body off-TPU), so
+the harness runs anywhere CI does; the resulting fingerprints are tagged
+``:interpret`` so tables collected that way are never mistaken for hardware
+measurements.
+
+Shape-key conventions (shared with the tuned-block registry in ops.py):
+
+  - ``flash_attention``: (B, T, S, H, KV, D)
+  - ``rmsnorm``:         (rows, D)
+  - ``ssd_intra``:       (B, nc, Q, H, P, N)
+
+This module imports jax — keep it out of the planner path (``table``/
+``bridge`` stay pure).
+"""
+from __future__ import annotations
+
+import socket
+import statistics
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kbench.table import KernelMeasurement, LatencyTable
+
+
+# ---------------------------------------------------------------------------
+# Op registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    name: str
+    make_inputs: "callable"          # (shape, seed) -> tuple of arrays
+    call: "callable"                 # (args, blocks, interpret) -> array
+    flops: "callable"                # (shape,) -> float
+    default_blocks: Optional[Tuple[int, ...]]
+    block_grid: "callable"           # (shape,) -> list of block tuples
+    tiny_shape: Tuple[int, ...]
+    default_shape: Tuple[int, ...]
+
+
+def _rng(seed: int):
+    return np.random.default_rng(seed)
+
+
+def _flash_inputs(shape, seed):
+    B, T, S, H, KV, D = shape
+    r = _rng(seed)
+    q = jnp.asarray(r.standard_normal((B, T, H, D)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, S, KV, D)), jnp.float32)
+    return (q, k, v)
+
+
+def _flash_call(args, blocks, interpret):
+    bq, bk = blocks if blocks else (None, None)
+    return ops.flash_attention(*args, causal=True, block_q=bq, block_k=bk,
+                               interpret=interpret)
+
+
+def _flash_flops(shape):
+    B, T, S, H, KV, D = shape
+    # two (T, S) x D matmuls per head, causal halves the live scores
+    return 4.0 * B * H * T * S * D * 0.5
+
+
+def _flash_grid(shape):
+    _, T, S, _, _, _ = shape
+    cand = (64, 128, 256)
+    return [(bq, bk) for bq in cand for bk in cand]
+
+
+def _rmsnorm_inputs(shape, seed):
+    rows, D = shape
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((rows, D)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((D,)), jnp.float32)
+    return (x, w)
+
+
+def _rmsnorm_call(args, blocks, interpret):
+    br = blocks[0] if blocks else None
+    return ops.rmsnorm(*args, block_rows=br, interpret=interpret)
+
+
+def _rmsnorm_flops(shape):
+    rows, D = shape
+    return 4.0 * rows * D
+
+
+def _rmsnorm_grid(shape):
+    rows, _ = shape
+    return [(b,) for b in (32, 64, 128, 256) if b <= max(32, rows)]
+
+
+def _ssd_inputs(shape, seed):
+    B, nc, Q, H, P, N = shape
+    r = _rng(seed)
+    xc = jnp.asarray(r.standard_normal((B, nc, Q, H, P)), jnp.float32)
+    dtc = jnp.asarray(r.uniform(0.1, 1.0, (B, nc, Q, H)), jnp.float32)
+    cum = jnp.asarray(np.cumsum(
+        r.uniform(-0.1, 0.0, (B, nc, Q, H)), axis=2), jnp.float32)
+    Bc = jnp.asarray(r.standard_normal((B, nc, Q, N)), jnp.float32)
+    Cc = jnp.asarray(r.standard_normal((B, nc, Q, N)), jnp.float32)
+    return (xc, dtc, cum, Bc, Cc)
+
+
+def _ssd_call(args, blocks, interpret):
+    return ops.ssd_intra(*args, interpret=interpret)
+
+
+def _ssd_flops(shape):
+    B, nc, Q, H, P, N = shape
+    return 2.0 * B * nc * H * Q * Q * (N + P)
+
+
+OPS: Dict[str, OpSpec] = {
+    "flash_attention": OpSpec(
+        name="flash_attention", make_inputs=_flash_inputs, call=_flash_call,
+        flops=_flash_flops, default_blocks=(128, 128), block_grid=_flash_grid,
+        tiny_shape=(1, 128, 128, 2, 2, 32),
+        default_shape=(2, 512, 512, 16, 16, 64)),
+    "rmsnorm": OpSpec(
+        name="rmsnorm", make_inputs=_rmsnorm_inputs, call=_rmsnorm_call,
+        flops=_rmsnorm_flops, default_blocks=(128,), block_grid=_rmsnorm_grid,
+        tiny_shape=(256, 128), default_shape=(4096, 2048)),
+    "ssd_intra": OpSpec(
+        name="ssd_intra", make_inputs=_ssd_inputs, call=_ssd_call,
+        flops=_ssd_flops, default_blocks=None, block_grid=lambda shape: [None],
+        tiny_shape=(1, 2, 64, 2, 32, 32),
+        default_shape=(2, 4, 256, 8, 64, 128)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BenchResult:
+    op: str
+    shape: Tuple[int, ...]
+    blocks: Optional[Tuple[int, ...]]
+    median_s: float
+    trials_s: Tuple[float, ...]
+    flops: float
+    device: str
+
+
+def device_fingerprint(interpret: Optional[bool] = None) -> str:
+    """Stable identity of what a measurement actually ran on.
+
+    ``backend:device_kind``, suffixed ``:interpret`` when the kernel body
+    runs under the Pallas Python interpreter rather than compiled Mosaic."""
+    kind = jax.devices()[0].device_kind
+    fp = f"{jax.default_backend()}:{kind}"
+    if ops._auto_interpret(interpret):
+        fp += ":interpret"
+    return fp
+
+
+def bench_op(op: str, shape: Sequence[int], *,
+             blocks: Optional[Tuple[int, ...]] = None,
+             trials: int = 5, warmup: int = 2,
+             interpret: Optional[bool] = None,
+             seed: int = 0) -> BenchResult:
+    """Median-of-``trials`` latency of one (op, shape, blocks) cell."""
+    spec = OPS[op]
+    shape = tuple(int(d) for d in shape)
+    args = spec.make_inputs(shape, seed)
+    interp = ops._auto_interpret(interpret)
+
+    fn = jax.jit(lambda *a: spec.call(a, blocks, interp))
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples: List[float] = []
+    for _ in range(max(1, trials)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return BenchResult(op=op, shape=shape, blocks=blocks,
+                       median_s=float(statistics.median(samples)),
+                       trials_s=tuple(samples), flops=spec.flops(shape),
+                       device=device_fingerprint(interpret))
+
+
+def measurement(res: BenchResult, *, device: Optional[str] = None,
+                collected_at: Optional[float] = None,
+                host: Optional[str] = None) -> KernelMeasurement:
+    """Convert a BenchResult into a table row (stamping time + host)."""
+    return KernelMeasurement(
+        device=device or res.device, op=res.op, shape=res.shape,
+        median_s=res.median_s, trials=len(res.trials_s), flops=res.flops,
+        blocks=res.blocks,
+        collected_at=time.time() if collected_at is None else collected_at,
+        host=host or socket.gethostname())
+
+
+def collect(ops_to_run: Optional[Sequence[str]] = None, *,
+            shapes: str = "tiny", trials: int = 5, warmup: int = 2,
+            interpret: Optional[bool] = None, seed: int = 0,
+            device: Optional[str] = None,
+            collected_at: Optional[float] = None,
+            host: Optional[str] = None) -> LatencyTable:
+    """Measure every requested op at its canonical shape (default blocks).
+
+    ``shapes`` picks the canonical set: "tiny" (CI/interpret-sized) or
+    "default" (hardware-sized).  For the block-sweeping variant see
+    ``repro.kbench.autotune.collect_autotuned``."""
+    table = LatencyTable()
+    for name in ops_to_run or sorted(OPS):
+        spec = OPS[name]
+        shape = spec.tiny_shape if shapes == "tiny" else spec.default_shape
+        res = bench_op(name, shape, blocks=spec.default_blocks,
+                       trials=trials, warmup=warmup, interpret=interpret,
+                       seed=seed)
+        table.add(measurement(res, device=device, collected_at=collected_at,
+                              host=host))
+    return table

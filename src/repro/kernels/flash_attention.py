@@ -91,13 +91,20 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """q: (B, H, Tq, D); k, v: (B, KV, Tk, D). Returns (out, lse).
 
-    Tq/Tk may be non-multiples of the block sizes (masked internally after
-    padding by the caller in ops.py; here we only require divisibility)."""
+    Tq/Tk may be non-multiples of the block sizes: inputs are zero-padded
+    to block multiples here and the padded tail is excluded by the
+    q_len/kv_len masks, so arbitrary shapes work."""
     B, H, Tq, D = q.shape
     KV, Tk = k.shape[1], k.shape[2]
     rep = H // KV
-    assert Tq % block_q == 0 and Tk % block_k == 0
-    nq, nk = Tq // block_q, Tk // block_k
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq, nk = (Tq + pad_q) // block_q, (Tk + pad_k) // block_k
     scale = D ** -0.5
 
     kernel = functools.partial(
@@ -118,7 +125,7 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         ],
         out_shape=[
             jax.ShapeDtypeStruct(q.shape, q.dtype),
-            jax.ShapeDtypeStruct((B, H, Tq), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Tq + pad_q), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),   # running max
@@ -130,6 +137,8 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                  "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    if pad_q:
+        out, lse = out[:, :, :Tq], lse[:, :, :Tq]
     return out, lse
 
 

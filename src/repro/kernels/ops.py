@@ -36,6 +36,53 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Tuned-block registry
+#
+# ``repro.kbench.autotune`` sweeps tiling grids per (device, op, shape) and
+# installs the winners here; entry points called with block sizes of ``None``
+# resolve through this table (exact shape, else nearest same-rank shape by
+# log-distance) and fall back to the defaults when nothing is installed.
+# Shape keys per op: flash_attention (B, T, S, H, KV, D); rmsnorm (rows, D).
+# ---------------------------------------------------------------------------
+
+_TUNED_BLOCKS: dict = {}
+
+
+def set_tuned_blocks(op: str, shape, blocks) -> None:
+    _TUNED_BLOCKS.setdefault(op, {})[tuple(int(d) for d in shape)] = tuple(
+        int(b) for b in blocks)
+
+
+def clear_tuned_blocks(op: Optional[str] = None) -> None:
+    if op is None:
+        _TUNED_BLOCKS.clear()
+    else:
+        _TUNED_BLOCKS.pop(op, None)
+
+
+def tuned_blocks(op: str, shape):
+    """Best-known block config for ``op`` at ``shape`` (None if untuned)."""
+    entries = _TUNED_BLOCKS.get(op)
+    if not entries:
+        return None
+    shape = tuple(int(d) for d in shape)
+    hit = entries.get(shape)
+    if hit is not None:
+        return hit
+    import math
+    same_rank = [s for s in entries if len(s) == len(shape)]
+    if not same_rank:
+        return None
+
+    def dist(s):
+        return sum(abs(math.log2(max(a, 1)) - math.log2(max(b, 1)))
+                   for a, b in zip(s, shape))
+
+    best = min(same_rank, key=lambda s: (dist(s), s))
+    return entries[best]
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (custom_vjp)
 # ---------------------------------------------------------------------------
 
@@ -123,9 +170,20 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: Optional[bool] = None):
-    """Flash attention in model layout. q: (B, T, H, D); k, v: (B, S, KV, D)."""
+    """Flash attention in model layout. q: (B, T, H, D); k, v: (B, S, KV, D).
+
+    ``block_q``/``block_k`` of None resolve through the tuned-block registry
+    (see ``set_tuned_blocks``) and default to 128 when untuned."""
+    if block_q is None or block_k is None:
+        B, T, H, D = q.shape
+        S, KV = k.shape[1], k.shape[2]
+        tuned = tuned_blocks("flash_attention", (B, T, S, H, KV, D))
+        tq, tk = tuned if tuned else (128, 128)
+        block_q = tq if block_q is None else block_q
+        block_k = tk if block_k is None else block_k
     return _flash(q, k, v, causal, window, block_q, block_k,
                   _auto_interpret(interpret))
 
@@ -161,15 +219,25 @@ def ssd_intra(xc, dtc, cum, Bc, Cc, *, interpret: Optional[bool] = None):
 # ---------------------------------------------------------------------------
 
 
-def rmsnorm(x, w, *, eps: float = 1e-6, interpret: Optional[bool] = None):
-    """x: (..., D) any leading dims; w: (D,)."""
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: Optional[int] = None,
+            interpret: Optional[bool] = None):
+    """x: (..., D) any leading dims; w: (D,).
+
+    ``block_rows`` of None resolves through the tuned-block registry; either
+    way the block is halved until it divides the row count (the kernel
+    requires exact tiling over rows)."""
     interpret = _auto_interpret(interpret)
     shape = x.shape
     rows = 1
     for s in shape[:-1]:
         rows *= s
     x2 = x.reshape(rows, shape[-1])
-    block = 128
+    if block_rows is None:
+        tuned = tuned_blocks("rmsnorm", (rows, shape[-1]))
+        block = tuned[0] if tuned else 128
+    else:
+        block = block_rows
+    block = max(1, min(block, rows))
     while rows % block and block > 1:
         block //= 2
     out = _rn.rmsnorm(x2, w, eps=eps, block_rows=block, interpret=interpret)

@@ -63,6 +63,39 @@ class TelemetryCalibrator:
         prev = self._eff.get(name, current_eff)
         self._eff[name] = (1 - self.alpha) * prev + self.alpha * est
 
+    def seed_from_kbench(self, cluster: HeteroCluster,
+                         kbench) -> Dict[str, float]:
+        """Seed the EWMA efficiency anchors from a measured kernel table.
+
+        The first ``observe()`` normally anchors each sub-cluster at its
+        modeled efficiency (effectively 1.0 on an uncalibrated fleet); with
+        a :class:`repro.kbench.bridge.KBenchModel` (or ``KBenchConfig``)
+        covering a device, the anchor becomes the *implied* efficiency —
+        measured achieved MFU over the analytic ``base_mfu`` — so the first
+        EWMA fold starts from measurement instead of optimism.  Uncovered
+        sub-clusters and already-seeded names are left alone.  Returns the
+        seeds applied.
+
+        Intended for fleets whose plan was priced *analytically*: when the
+        plan itself already used kbench pricing, predicted stage times
+        include the measured anchor and seeding here would double-count the
+        same correction."""
+        from repro.kbench.bridge import KBenchConfig, KBenchModel
+
+        if isinstance(kbench, KBenchConfig):
+            kbench = KBenchModel(kbench)
+        seeded: Dict[str, float] = {}
+        for sub in cluster.subclusters:
+            if sub.name in self._eff:
+                continue
+            measured = kbench.measured_mfu(sub)
+            if measured is None:
+                continue
+            est = max(self.min_efficiency, measured / sub.device.base_mfu)
+            self._eff[sub.name] = est
+            seeded[sub.name] = est
+        return seeded
+
     def observe(self, cluster: HeteroCluster, strategy: ParallelStrategy,
                 obs: StepObservation):
         """Fold one step's measurement.  ``cluster`` must be the cluster the

@@ -1,0 +1,477 @@
+"""repro.kbench: measured-kernel cost model (ISSUE 8 acceptance).
+
+Covers the off-state invariant (``kbench=None`` plans bit-identical to the
+pre-kbench golden pin), measured pricing + analytic fallback, the latency
+table's round-trip / interpolation / merge determinism, kernel numerics
+across autotuned block configs (incl. non-multiple shapes), the tuned-block
+registry, telemetry anchor seeding, and the config/CLI surface.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.cluster import paper_case_study_cluster
+from repro.core.planner import PlannerConfig
+from repro.kbench import (
+    KBenchConfig, KBenchModel, KernelMeasurement, LatencyTable, shape_bucket,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "kbench_offstate_strategy.json")
+
+
+def small_cfg(**planner_kw):
+    return api.HarpConfig(
+        seq_len=512, global_batch=16,
+        planner=PlannerConfig(granularity=16, n_microbatches=16,
+                              **planner_kw))
+
+
+def strip_times(strategy_json: str):
+    d = json.loads(strategy_json)
+    d["planner_meta"] = {k: v for k, v in d["planner_meta"].items()
+                         if not k.startswith("time_")}
+    return d
+
+
+def meas(device="A100-40G", op="flash_attention", shape=(2, 512, 512, 16, 16, 64),
+         median_s=0.001, flops=None, blocks=(128, 128), collected_at=1000.0,
+         host="h1", trials=5):
+    if flops is None:
+        flops = 0.45 * median_s * 312e12        # 45% of A100 peak
+    return KernelMeasurement(device=device, op=op, shape=tuple(shape),
+                             median_s=median_s, trials=trials, flops=flops,
+                             blocks=blocks, collected_at=collected_at,
+                             host=host)
+
+
+# ---------------------------------------------------------------------------
+# Latency table: round-trip, interpolation, merge determinism
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bucket_rounds_up_to_pow2():
+    assert shape_bucket((200, 130)) == (256, 256)
+    assert shape_bucket((256, 128)) == (256, 128)
+    assert shape_bucket((1, 3)) == (1, 4)
+
+
+def test_table_json_round_trip_bit_identical(tmp_path):
+    t = LatencyTable([meas(), meas(op="rmsnorm", shape=(256, 128),
+                                   blocks=(128,), median_s=2e-5)])
+    path = str(tmp_path / "t.json")
+    t.save(path)
+    t2 = LatencyTable.load(path)
+    assert t2.to_dict() == t.to_dict()
+    assert t2.fingerprint() == t.fingerprint()
+
+
+def test_table_rejects_newer_schema():
+    with pytest.raises(ValueError, match="newer"):
+        LatencyTable.from_dict({"schema": 99, "entries": []})
+
+
+def test_lookup_prefers_exact_then_nearest_bucket():
+    near = meas(op="rmsnorm", shape=(256, 128), blocks=None, median_s=1e-5)
+    far = meas(op="rmsnorm", shape=(4096, 2048), blocks=None, median_s=9e-4)
+    t = LatencyTable([near, far])
+    assert t.lookup("A100-40G", "rmsnorm", (256, 128)) == near
+    # (300, 160) buckets to (512, 256) — still nearer the small cell
+    assert t.lookup("A100-40G", "rmsnorm", (300, 160)) == near
+    assert t.lookup("A100-40G", "rmsnorm", (3000, 1500)) == far
+    assert t.lookup("A100-40G", "rmsnorm", (256,)) is None      # rank mismatch
+    assert t.lookup("V100-32G", "rmsnorm", (256, 128)) is None  # wrong device
+
+
+def test_estimate_scales_by_flop_ratio():
+    e = meas(op="rmsnorm", shape=(256, 128), blocks=None, median_s=1e-5,
+             flops=4.0 * 256 * 128)
+    t = LatencyTable([e])
+    # double the FLOPs -> double the estimate
+    got = t.estimate_s("A100-40G", "rmsnorm", (512, 128),
+                       flops=2 * 4.0 * 256 * 128)
+    assert got == pytest.approx(2e-5)
+    assert t.estimate_s("A100-40G", "flash_attention", (1, 1)) is None
+
+
+def test_merge_newer_stamp_wins_and_is_commutative():
+    old = meas(median_s=5e-4, collected_at=100.0)
+    new = meas(median_s=1e-3, collected_at=200.0)
+    a, b = LatencyTable([old]), LatencyTable([new])
+    ab, ba = a.merge(b), b.merge(a)
+    assert ab.to_dict() == ba.to_dict()          # deterministic merge
+    assert len(ab) == 1
+    assert ab.entries[0].median_s == 1e-3        # newer stamp won
+    # equal stamps: the lower latency (better-conditioned run) wins
+    tie = LatencyTable([meas(median_s=2e-3, collected_at=200.0)])
+    assert b.merge(tie).entries[0].median_s == 1e-3
+    assert tie.merge(b).entries[0].median_s == 1e-3
+
+
+def test_merge_distinct_keys_accumulate():
+    a = LatencyTable([meas()])
+    b = LatencyTable([meas(blocks=(64, 64)),
+                      meas(device="V100-32G")])
+    assert len(a.merge(b)) == 3
+
+
+def test_best_blocks_reads_back_the_winner():
+    t = LatencyTable([
+        meas(op="rmsnorm", shape=(256, 128), blocks=(128,), median_s=3e-5),
+        meas(op="rmsnorm", shape=(256, 128), blocks=(256,), median_s=1e-5),
+    ])
+    assert t.best_blocks("A100-40G", "rmsnorm", (256, 128)) == (256,)
+    assert t.best_blocks("A100-40G", "rmsnorm", (250, 100)) == (256,)
+    assert t.best_blocks("A100-40G", "rmsnorm", (256,)) is None
+
+
+def test_fresh_filters_stale_entries():
+    t = LatencyTable([meas(collected_at=100.0),
+                      meas(blocks=(64, 64), collected_at=1000.0)])
+    assert len(t.fresh(0.0)) == 2                # 0 = never stale
+    fresh = t.fresh(500.0)                       # "now" = newest stamp (1000)
+    assert [e.blocks for e in fresh.entries] == [(64, 64)]
+
+
+# ---------------------------------------------------------------------------
+# Off-state invariant: kbench=None plans bit-identical to the pre-PR pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_offstate_inter_plan_matches_golden(golden):
+    p = api.plan("gpt-2b", paper_case_study_cluster(), small_cfg())
+    assert strip_times(p.strategy.to_json()) == golden["inter"], (
+        "kbench=None inter-op plan drifted from tests/golden/"
+        "kbench_offstate_strategy.json — the off-state invariant "
+        "(kbench=None bit-identical to pre-kbench pricing) is broken.")
+
+
+def test_offstate_joint_plan_matches_golden(golden):
+    p = api.plan("gpt-2b", paper_case_study_cluster(),
+                 small_cfg(intra_op=True))
+    assert strip_times(p.strategy.to_json()) == golden["joint"]
+
+
+def test_empty_table_falls_back_to_analytic_exactly(golden):
+    """An *enabled* but uncovering kbench prices exactly like analytic —
+    only the provenance stamp differs."""
+    p = api.plan("gpt-2b", paper_case_study_cluster(),
+                 small_cfg(kbench=KBenchConfig()))
+    d = strip_times(p.strategy.to_json())
+    stamp = d["planner_meta"].pop("kbench")
+    assert d == golden["inter"]
+    assert stamp["cells"] == 0
+
+
+def test_missing_table_file_never_errors(golden):
+    """Fallback-never-errors invariant: a dangling table_path is an empty
+    table, not an exception."""
+    cfg = KBenchConfig(table_path="/nonexistent/ktable.json")
+    p = api.plan("gpt-2b", paper_case_study_cluster(), small_cfg(kbench=cfg))
+    d = strip_times(p.strategy.to_json())
+    d["planner_meta"].pop("kbench")
+    assert d == golden["inter"]
+
+
+# ---------------------------------------------------------------------------
+# Measured pricing
+# ---------------------------------------------------------------------------
+
+
+def test_measured_table_changes_stage_prices(golden):
+    t = LatencyTable([meas()])                   # A100 at 45% achieved MFU
+    p = api.plan("gpt-2b", paper_case_study_cluster(),
+                 small_cfg(kbench=KBenchConfig(table=t.to_dict())))
+    assert p.strategy.est_step_time != golden["inter"]["est_step_time"]
+    stamp = p.strategy.planner_meta["kbench"]
+    assert stamp["cells"] == 1
+    assert "A100-40G" in stamp["covered_devices"]
+
+
+def test_measured_mfu_is_flop_weighted_and_clamped():
+    cl = paper_case_study_cluster()
+    a100 = next(s for s in cl.subclusters if s.device.name == "A100-40G")
+    v100 = next(s for s in cl.subclusters if s.device.name == "V100-32G")
+    t = LatencyTable([meas()])
+    m = KBenchModel(KBenchConfig(table=t.to_dict()))
+    assert m.measured_mfu(a100) == pytest.approx(0.45, rel=1e-6)
+    assert m.measured_mfu(v100) is None          # uncovered -> analytic
+    # a corrupt cell claiming >peak throughput clamps to 1.0
+    hot = LatencyTable([meas(flops=10 * 0.001 * 312e12)])
+    mh = KBenchModel(KBenchConfig(table=hot.to_dict()))
+    assert mh.measured_mfu(a100) == 1.0
+
+
+def test_device_map_routes_profile_names_to_fingerprints():
+    cl = paper_case_study_cluster()
+    a100 = next(s for s in cl.subclusters if s.device.name == "A100-40G")
+    t = LatencyTable([meas(device="gpu:NVIDIA A100-SXM4-40GB")])
+    unmapped = KBenchModel(KBenchConfig(table=t.to_dict()))
+    assert unmapped.measured_mfu(a100) is None
+    mapped = KBenchModel(KBenchConfig(
+        table=t.to_dict(),
+        device_map={"A100-40G": "gpu:NVIDIA A100-SXM4-40GB"}))
+    assert mapped.measured_mfu(a100) == pytest.approx(0.45, rel=1e-6)
+
+
+def test_kbench_fingerprint_tracks_table_content():
+    m1 = KBenchModel(KBenchConfig(table=LatencyTable([meas()]).to_dict()))
+    m2 = KBenchModel(KBenchConfig(
+        table=LatencyTable([meas(median_s=0.002)]).to_dict()))
+    m3 = KBenchModel(KBenchConfig(table=LatencyTable([meas()]).to_dict()))
+    assert m1.fingerprint() != m2.fingerprint()  # cost-cache key must split
+    assert m1.fingerprint() == m3.fingerprint()
+    assert m1.fingerprint().startswith("kbench:")
+
+
+def test_measure_fn_adapter_prices_with_the_anchor():
+    from repro.api.facade import _build_layers
+    from repro.core.costmodel import CostModelConfig, Submesh, stage_cost
+    from repro.configs import get_config
+
+    cl = paper_case_study_cluster()
+    a100 = next(s for s in cl.subclusters if s.device.name == "A100-40G")
+    layers = _build_layers(get_config("gpt-2b"), small_cfg())
+    mesh = Submesh(0, 1, 2)
+    kb = KBenchModel(KBenchConfig(
+        table=LatencyTable([meas()]).to_dict()))
+    fn = kb.as_measure_fn()
+    got = fn(layers[:4], a100, mesh, 512)
+    want = stage_cost(layers[:4], a100, mesh, 512, CostModelConfig(),
+                      kbench=kb)
+    assert got.t == want.t
+    analytic = stage_cost(layers[:4], a100, mesh, 512, CostModelConfig())
+    assert got.t != analytic.t
+
+
+# ---------------------------------------------------------------------------
+# Kernel numerics across block configs (autotuned blocks stay correct)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (64, 128), (128, 64),
+                                    (256, 256)])
+@pytest.mark.parametrize("T", [128, 200])        # incl. non-multiple length
+def test_flash_attention_correct_for_all_swept_blocks(blocks, T):
+    import jax
+    from repro.kernels import ops
+    from repro.kernels.ref import flash_attention_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, T, 2, 32))
+    k = jax.random.normal(ks[1], (1, T, 2, 32))
+    v = jax.random.normal(ks[2], (1, T, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=True,
+                              block_q=blocks[0], block_k=blocks[1])
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("block_rows", [32, 64, 256])
+@pytest.mark.parametrize("rows", [256, 200])     # incl. non-multiple rows
+def test_rmsnorm_correct_for_all_swept_blocks(block_rows, rows):
+    import jax
+    from repro.kernels import ops
+    from repro.kernels.ref import rmsnorm_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    x = jax.random.normal(ks[0], (rows, 128))
+    w = jax.random.normal(ks[1], (128,))
+    out = ops.rmsnorm(x, w, block_rows=block_rows)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rmsnorm_ref(x, w)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_kernel_pads_non_multiple_shapes():
+    """Satellite (a): the fwd kernel itself (not just the ops wrapper)
+    accepts lengths that don't divide the block sizes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.kernels.ref import flash_attention_ref
+
+    B, T, H, D = 1, 130, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    # the kernel layer works in (B, H, T, D) layout (ops.py transposes)
+    to_k = lambda x: jnp.swapaxes(x, 1, 2)
+    out, _ = flash_attention_fwd(to_k(q), to_k(k), to_k(v), causal=True,
+                                 block_q=128, block_k=128, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(to_k(out)), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_tuned_block_registry_round_trip():
+    from repro.kernels import ops
+
+    ops.clear_tuned_blocks()
+    try:
+        ops.set_tuned_blocks("rmsnorm", (256, 128), (256,))
+        assert ops.tuned_blocks("rmsnorm", (256, 128)) == (256,)
+        # nearest same-rank shape resolves to the tuned entry
+        assert ops.tuned_blocks("rmsnorm", (300, 128)) == (256,)
+        assert ops.tuned_blocks("rmsnorm", (256,)) is None
+        assert ops.tuned_blocks("flash_attention", (256, 128)) is None
+        ops.clear_tuned_blocks("rmsnorm")
+        assert ops.tuned_blocks("rmsnorm", (256, 128)) is None
+    finally:
+        ops.clear_tuned_blocks()
+
+
+def test_autotune_install_pushes_winners_into_ops():
+    import jax
+    from repro.kbench import autotune, harness
+    from repro.kernels import ops
+    from repro.kernels.ref import rmsnorm_ref
+
+    ops.clear_tuned_blocks()
+    try:
+        table, sweeps = autotune.collect_autotuned(
+            ["rmsnorm"], trials=1, warmup=1)
+        assert all(sw.speedup >= 1.0 for sw in sweeps)
+        n = autotune.install(table)
+        assert n == 1
+        tuned = ops.tuned_blocks("rmsnorm", harness.OPS["rmsnorm"].tiny_shape)
+        assert tuned == sweeps[0].best_blocks
+        # entry point with default args now uses the tuned blocks — and
+        # still matches the oracle
+        ks = jax.random.split(jax.random.PRNGKey(3), 2)
+        x = jax.random.normal(ks[0], (256, 128))
+        w = jax.random.normal(ks[1], (128,))
+        np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, w)),
+                                   np.asarray(rmsnorm_ref(x, w)),
+                                   atol=2e-5, rtol=2e-5)
+    finally:
+        ops.clear_tuned_blocks()
+
+
+def test_harness_is_deterministic_in_inputs_and_coverage():
+    from repro.kbench import harness
+
+    t = harness.collect(["rmsnorm"], trials=1, warmup=1,
+                        collected_at=123.0, host="h")
+    assert len(t) == 1
+    e = t.entries[0]
+    assert e.op == "rmsnorm" and e.collected_at == 123.0 and e.host == "h"
+    assert e.flops > 0 and e.median_s > 0
+    assert e.device.startswith("cpu:") or ":" in e.device
+
+
+def test_table_and_bridge_import_without_jax():
+    """Layering invariant (DESIGN.md): the planner-side kbench modules must
+    be importable on machines with no accelerator stack."""
+    import subprocess
+    import sys
+
+    code = (
+        "import builtins\n"
+        "real = builtins.__import__\n"
+        "def guard(name, *a, **k):\n"
+        "    if name == 'jax' or name.startswith('jax.'):\n"
+        "        raise ImportError('jax blocked: ' + name)\n"
+        "    return real(name, *a, **k)\n"
+        "builtins.__import__ = guard\n"
+        "import repro.kbench.table, repro.kbench.bridge\n"
+        "import repro.core.planner\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert res.returncode == 0, res.stderr
+
+
+# ---------------------------------------------------------------------------
+# Telemetry seeding
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_seeds_anchor_from_table():
+    from repro.runtime.telemetry import TelemetryCalibrator
+
+    cl = paper_case_study_cluster()
+    kb = KBenchConfig(table=LatencyTable([meas()]).to_dict())
+    cal = TelemetryCalibrator()
+    seeded = cal.seed_from_kbench(cl, kb)
+    # A100 covered at 0.45 achieved MFU over base_mfu 0.50 -> 0.9 anchor
+    assert seeded == {"meshA100": pytest.approx(0.9, rel=1e-6)}
+    assert cal.efficiency("meshA100") == pytest.approx(0.9, rel=1e-6)
+    assert cal.efficiency("meshV100") == 1.0     # uncovered -> untouched
+    # an existing EWMA estimate is never overwritten by a seed
+    again = cal.seed_from_kbench(cl, kb)
+    assert again == {}
+
+
+# ---------------------------------------------------------------------------
+# Config / facade / CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_harp_config_kbench_round_trip():
+    kb = KBenchConfig(table_path="ktable.json", max_age_s=3600.0,
+                      device_map={"A100-40G": "gpu:A100"})
+    cfg = api.HarpConfig(kbench=kb)
+    assert cfg.planner.kbench == kb              # mirrored into the planner
+    d = json.loads(cfg.to_json())
+    cfg2 = api.HarpConfig.from_dict(d)
+    assert cfg2.kbench == kb
+    assert cfg2.planner.kbench == kb
+
+
+def test_harp_config_rejects_kbench_disagreement():
+    kb1 = KBenchConfig(table_path="a.json")
+    kb2 = KBenchConfig(table_path="b.json")
+    with pytest.raises(ValueError, match="kbench"):
+        api.HarpConfig(kbench=kb1,
+                       planner=PlannerConfig(kbench=kb2)).validate()
+
+
+def test_plan_artifact_round_trips_kbench_config():
+    t = LatencyTable([meas()])
+    p = api.plan("gpt-2b", paper_case_study_cluster(),
+                 small_cfg(kbench=KBenchConfig(table=t.to_dict())))
+    p2 = api.Plan.from_json(p.to_json())
+    assert p2.to_json() == p.to_json()
+    exe = api.compile(plan_artifact=p2)
+    assert exe.config.planner.kbench.table == t.to_dict()
+
+
+def test_explain_costs_reports_pricing_source():
+    exe = api.compile("gpt-2b", paper_case_study_cluster(), small_cfg())
+    off = exe.explain_costs()
+    assert "analytic" in off and "kbench: off" in off
+
+    t = LatencyTable([meas()])
+    exe2 = api.compile("gpt-2b", paper_case_study_cluster(),
+                       small_cfg(kbench=KBenchConfig(table=t.to_dict())))
+    on = exe2.explain_costs()
+    assert "measured" in on and "kbench table: 1 cells" in on
+
+
+def test_cli_kbench_collect_merge_show(tmp_path, capsys):
+    from repro.api.cli import main
+
+    pa = str(tmp_path / "a.json")
+    pb = str(tmp_path / "b.json")
+    pm = str(tmp_path / "m.json")
+    assert main(["kbench", "collect", "--ops", "rmsnorm", "--trials", "1",
+                 "--warmup", "1", "-o", pa]) == 0
+    assert main(["kbench", "collect", "--ops", "rmsnorm", "--trials", "1",
+                 "--warmup", "1", "--device", "other:dev", "-o", pb]) == 0
+    assert main(["kbench", "merge", pa, pb, "-o", pm]) == 0
+    assert len(LatencyTable.load(pm)) == 2
+    assert main(["kbench", "show", pm]) == 0
+    out = capsys.readouterr().out
+    assert "rmsnorm" in out and "other:dev" in out

@@ -363,8 +363,10 @@ def exe_pair():
 
 def test_migrate_to_prices_and_stamps_v5(exe_pair):
     exe, new_exe = exe_pair
+    from repro.api.artifacts import SCHEMA_VERSION
+
     m = new_exe.plan.migration
-    assert m is not None and new_exe.plan.version == 5
+    assert m is not None and new_exe.plan.version == SCHEMA_VERSION >= 5
     assert m["from_fingerprint"] == exe.plan.cluster_fingerprint
     assert m["to_fingerprint"] == new_exe.plan.cluster_fingerprint
     assert m["moved_bytes"] + m["ckpt_bytes"] + m["local_bytes"] \
