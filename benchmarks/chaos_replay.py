@@ -1,0 +1,273 @@
+"""Chaos replay benchmark -> ``BENCH_chaos.json`` at repo root.
+
+The same seeded fault storm (``repro.chaos.chaos_storm``: flapping nodes,
+rack failures, preemptions, stragglers, WAN brownouts) plus injected
+planner faults (timeouts / infeasible returns) is folded through two
+controllers on the paper's case-study fleet:
+
+- **hardened**: event debounce + replan hysteresis, the degraded-mode
+  ladder (cached plan -> pool drop -> half batch -> checkpoint-restart),
+  restart retries.  Contract: completes the whole horizon with zero
+  uncaught exceptions and never commits a strategy referencing a removed
+  node.
+- **unhardened**: the PR-8 controller semantics (``degraded_ladder=False``,
+  no debounce) under the *same* storm and fault stream.  A planner fault on
+  a forced replan is an uncaught exception: the job dies and earns zero
+  tokens for the rest of the horizon (the clock keeps running) — the real
+  cost of an unhardened controller in production.
+
+Both runs use the same simplified goodput fold (``project_step`` per step,
+``downtime_s`` charged per decision, stalls at the last step time), so the
+comparison isolates the hardening, not the accounting.
+
+The acceptance axes (gated under ``--fail-on-regression``):
+
+1. **hardened is crash-free**: the full storm replays with zero uncaught
+   exceptions;
+2. **no dead-node commits**: after every decision the committed strategy's
+   mesh footprint fits the live fleet (``feasible_under``);
+3. **hardening pays**: hardened goodput-under-churn strictly exceeds the
+   unhardened baseline's;
+4. **storm control**: committed replans < storm events (flapping and event
+   bursts coalesce instead of each costing a replan).
+
+``--tiny`` shrinks the horizon to CI size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit_csv                        # noqa: E402
+
+from repro.chaos import ChaosConfig, FaultInjector, chaos_storm  # noqa: E402
+from repro.core.cluster import paper_case_study_cluster       # noqa: E402
+from repro.core.planner import PlannerConfig                  # noqa: E402
+from repro.runtime.controller import (                        # noqa: E402
+    ControllerConfig, ElasticController,
+)
+from repro.runtime.events import EventTrace                   # noqa: E402
+from repro.runtime.replay import feasible_under, project_step  # noqa: E402
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_chaos.json")
+
+ARCH = "gpt-2b"
+SEQ_LEN = 256
+GLOBAL_BATCH = 32
+# seed 5 puts plan-breaking node failures inside even the tiny horizon —
+# the storm must actually break the plan for the comparison to mean anything
+STORM_SEED = 5
+STORM_INTENSITY = 2.0
+CHAOS = ChaosConfig(seed=0, p_planner_timeout=0.3,
+                    p_planner_infeasible=0.3, planner_timeout_s=1.0)
+
+
+def _pcfg() -> PlannerConfig:
+    return PlannerConfig(granularity=8, n_microbatches=8,
+                         min_submesh_devices=2)
+
+
+def _controller(n_steps: int, *, hardened: bool) -> ElasticController:
+    cfg = ControllerConfig(
+        total_steps=n_steps, seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH,
+        debounce_steps=3 if hardened else 0,
+        min_steps_between_replans=5 if hardened else 0,
+        replan_deadline_s=2.0 if hardened else 0.0,
+        degraded_ladder=hardened)
+    ctrl = ElasticController(
+        paper_case_study_cluster(), ARCH, planner_cfg=_pcfg(), cfg=cfg)
+    ctrl.bootstrap()
+    # the injector arms AFTER bootstrap: the storm hits a healthy running
+    # job, not the initial planning (which both variants need to survive)
+    ctrl.injector = FaultInjector(CHAOS)
+    return ctrl
+
+
+def storm_fold(trace: EventTrace, n_steps: int,
+               ctrl: ElasticController) -> Dict:
+    """Fold the storm through ``ctrl`` step by step, checking the dead-node
+    invariant after every decision.  An uncaught exception kills the job:
+    zero tokens for the remaining horizon while the clock keeps running."""
+    by_step: Dict[int, List] = {}
+    for e in trace.events:
+        by_step.setdefault(e.step, []).append(e)
+    tokens = 0
+    wall = 0.0
+    stalled = 0
+    violations: List[int] = []
+    decisions = []
+    crash = None
+    last_step = ctrl.strategy.est_step_time
+
+    def check(step: int) -> None:
+        if ctrl.strategy is not None and not feasible_under(
+                ctrl.strategy, ctrl.plan_cluster, ctrl.cluster):
+            violations.append(step)
+
+    for step in range(n_steps):
+        for ev in by_step.get(step, ()):
+            try:
+                d = ctrl.handle(ev, step=step)
+            except Exception as exc:               # noqa: BLE001 — the point
+                crash = {"step": step,
+                         "error": f"{type(exc).__name__}: {exc}"}
+                break
+            decisions.append(d)
+            wall += d.downtime_s
+            check(step)
+        if crash is not None:
+            break
+        d = ctrl.poll(step)
+        if d is not None:
+            decisions.append(d)
+            wall += d.downtime_s
+            check(step)
+        if ctrl.strategy is None:                  # checkpoint-restart stall
+            stalled += 1
+            wall += last_step
+            continue
+        sim = project_step(ctrl.strategy, ctrl.plan_cluster, ctrl.cluster,
+                           ctrl.layers)
+        if sim is not None:
+            last_step = sim.makespan
+        wall += last_step
+        tokens += ctrl.strategy.tokens_per_step()
+    if crash is not None:
+        wall += (n_steps - crash["step"]) * last_step
+    replans = sum(1 for d in decisions
+                  if d.action not in ("none", "deferred", "ignored"))
+    downtime = sum(d.downtime_s for d in decisions)
+    degraded = sum(1 for d in decisions if d.action.startswith("degraded")
+                   or d.action in ("checkpoint_restart", "restart"))
+    return {
+        "tokens": int(tokens),
+        "wall_s": round(wall, 3),
+        "goodput_tokens_per_s": round(tokens / wall, 1) if wall else 0.0,
+        "replans": replans,
+        "degraded_actions": degraded,
+        "recovery_s": round(downtime, 3),
+        "stalled_steps": stalled,
+        "dead_node_commits": len(violations),
+        "crash": crash,
+        "injected_faults": ctrl.injector.stats(),
+    }
+
+
+def run(tiny: bool = False, label: Optional[str] = None) -> Dict:
+    n_steps = 60 if tiny else 240
+    cluster = paper_case_study_cluster()
+    trace = chaos_storm(cluster, n_steps, seed=STORM_SEED,
+                        intensity=STORM_INTENSITY)
+
+    t0 = time.perf_counter()
+    hardened = storm_fold(trace, n_steps, _controller(n_steps, hardened=True))
+    unhardened = storm_fold(trace, n_steps,
+                            _controller(n_steps, hardened=False))
+    wall_s = time.perf_counter() - t0
+
+    case = {
+        "cluster": cluster.describe(),
+        "arch": ARCH,
+        "n_steps": n_steps,
+        "storm_seed": STORM_SEED,
+        "storm_intensity": STORM_INTENSITY,
+        "storm_events": len(trace.events),
+        "chaos": CHAOS.to_dict(),
+        "hardened": hardened,
+        "unhardened": unhardened,
+        "hardened_crash_free": hardened["crash"] is None,
+        "zero_dead_node_commits": hardened["dead_node_commits"] == 0,
+        "hardened_beats_unhardened":
+            hardened["goodput_tokens_per_s"]
+            > unhardened["goodput_tokens_per_s"],
+        "storm_controlled": hardened["replans"] < max(1, len(trace.events)),
+        "bench_seconds": round(wall_s, 3),
+    }
+    return {"label": label or "HEAD",
+            "mode": "tiny" if tiny else "full",
+            "cases": {"chaos_storm": case}}
+
+
+def extend_trajectory(entry: Dict, path: str = BENCH_PATH) -> Dict:
+    """Append one run to the chaos trajectory (creates the file on first
+    use)."""
+    doc = {"schema": 1,
+           "description": "Chaos-replay trajectory; one entry per "
+                          "benchmarks/chaos_replay.py run — see "
+                          "docs/chaos.md.",
+           "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["runs"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def rows_from_entry(entry: Dict) -> List[Dict]:
+    rows = []
+    for name, c in entry["cases"].items():
+        for variant in ("hardened", "unhardened"):
+            v = c[variant]
+            rows.append({
+                "label": f"{name}.{variant}",
+                "step_time_s": v["recovery_s"],
+                "derived": f"goodput={v['goodput_tokens_per_s']};"
+                           f"replans={v['replans']};"
+                           f"stalled={v['stalled_steps']};"
+                           f"crashed={v['crash'] is not None}"})
+    return rows
+
+
+def main() -> None:
+    """benchmarks/run.py contract: full measurement, CSV on stdout, one
+    trajectory entry appended to BENCH_chaos.json."""
+    entry = run(tiny=False)
+    extend_trajectory(entry)
+    emit_csv(rows_from_entry(entry))
+
+
+def cli(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized horizon (seconds, not minutes)")
+    ap.add_argument("--label", default=None,
+                    help="trajectory entry label (default HEAD)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="trajectory JSON path (default repo root)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 unless the hardened replay is crash-free "
+                         "with zero dead-node commits, beats the unhardened "
+                         "baseline on goodput, and coalesces the storm into "
+                         "fewer replans than events")
+    args = ap.parse_args(argv)
+
+    entry = run(tiny=args.tiny, label=args.label)
+    extend_trajectory(entry, args.out)
+    emit_csv(rows_from_entry(entry))
+    print(f"# trajectory entry appended to {os.path.abspath(args.out)}",
+          file=sys.stderr)
+
+    bad = [name for name, c in entry["cases"].items()
+           if not (c["hardened_crash_free"] and c["zero_dead_node_commits"]
+                   and c["hardened_beats_unhardened"]
+                   and c["storm_controlled"])]
+    if bad:
+        print(f"# chaos replay regressed on: {bad}", file=sys.stderr)
+        if args.fail_on_regression:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

@@ -27,6 +27,7 @@ from repro.api.facade import (
     Executable, compile, fit, generate, lower, plan, warn_deprecated,
 )
 from repro.api import registry
+from repro.chaos import ChaosConfig, FaultInjector
 from repro.kbench import KBenchConfig, KBenchModel, LatencyTable
 from repro.migrate import MigrationCost, MigrationPlan
 from repro.serving.batching import ServeSimResult
@@ -39,6 +40,7 @@ __all__ = [
     "ServingConfig", "ServePlan", "ServeTrace", "ServeSimResult",
     "MigrationPlan", "MigrationCost",
     "KBenchConfig", "KBenchModel", "LatencyTable",
+    "ChaosConfig", "FaultInjector",
     "cluster_to_dict", "cluster_from_dict", "sim_summary",
     "registry", "warn_deprecated",
 ]

@@ -25,46 +25,33 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-from repro.core.cluster import DeviceProfile, HeteroCluster, SubCluster
+from repro.core.cluster import (
+    DeviceProfile, HeteroCluster, SubCluster, cluster_from_dict,
+    cluster_to_dict,
+)
 from repro.core.pipesim import SimResult
 from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 6   # v6: kbench subsystem — HarpConfig.kbench /
+SCHEMA_VERSION = 7   # v7: chaos subsystem — HarpConfig.chaos (fault
+                     # injection; None = off, bit-identical to v6) and
+                     # SearchConfig.deadline_s (replan wall-clock budget;
+                     # 0.0 = unlimited, the v6 behavior)
+                     # (v6: kbench subsystem — HarpConfig.kbench /
                      # PlannerConfig.kbench (measured-kernel pricing; None on
                      # analytic plans, which stay bit-identical to v5)
-                     # (v5: migration subsystem — Plan.migration, the priced
+                     # v5: migration subsystem — Plan.migration, the priced
                      # differ summary from Executable.migrate_to / the CLI
-                     # `repro migrate`; None on directly-planned artifacts)
-                     # (v4: serving subsystem — HarpConfig.serving, Plan.serve;
+                     # `repro migrate`; None on directly-planned artifacts;
+                     # v4: serving subsystem — HarpConfig.serving, Plan.serve;
                      # v3: comm subsystem — PlannerConfig.comm, per-stage
                      # collective algorithms, LoweredPlan link occupancy;
                      # v2: SearchConfig gained engine/batch_size knobs)
 
-
-# ---------------------------------------------------------------------------
-# Cluster (de)serialization — planning and execution on different machines
-# ---------------------------------------------------------------------------
-
-
-def cluster_to_dict(cluster: HeteroCluster) -> Dict[str, Any]:
-    """Full fleet spec as plain JSON-native data (everything the cost model
-    reads; tuples normalized to lists so artifact dicts are pure JSON)."""
-    return json.loads(json.dumps(dataclasses.asdict(cluster)))
-
-
-def cluster_from_dict(d: Dict[str, Any]) -> HeteroCluster:
-    subs = []
-    for sd in d["subclusters"]:
-        sd = dict(sd)
-        dev = DeviceProfile(**sd.pop("device"))
-        ne = sd.pop("node_efficiencies", None)
-        subs.append(SubCluster(
-            device=dev,
-            node_efficiencies=None if ne is None else tuple(ne), **sd))
-    return HeteroCluster(subclusters=tuple(subs), cross_bw=d["cross_bw"],
-                         cross_latency=d.get("cross_latency", 1e-3))
+# Cluster (de)serialization lives in repro.core.cluster (the runtime's plan
+# cache and chaos traces need it without importing the api layer); the names
+# stay importable from here for artifact consumers.
 
 
 def sim_summary(res: SimResult, tokens_per_step: int) -> Dict[str, Any]:

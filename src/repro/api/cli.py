@@ -12,6 +12,8 @@ Subcommands round-trip the :class:`~repro.api.artifacts.Plan` JSON artifact:
     python -m repro replay --plan plan.json --trace paper --steps 120
     python -m repro migrate --plan plan.json --cluster paper_eval \\
         --cluster-kw n_a100_nodes=3 -o migrated.json
+    python -m repro chaos replay --plan plan.json --steps 200 --seed 1 \\
+        --debounce 3 --deadline 2.0
     python -m repro kbench collect --autotune -o ktable.json
     python -m repro kbench merge hostA.json hostB.json -o ktable.json
     python -m repro kbench show ktable.json
@@ -320,6 +322,54 @@ def cmd_migrate(args) -> int:
     return 0
 
 
+def cmd_chaos(args) -> int:
+    from repro.api import compile as api_compile
+    from repro.chaos import (
+        ChaosConfig, FaultInjector, chaos_storm, trace_from_json,
+        trace_to_json,
+    )
+    from repro.runtime.controller import ControllerConfig
+    from repro.runtime.replay import run_replay
+
+    exe = api_compile(plan_artifact=_load_plan(args.plan))
+    if args.trace_file:
+        with open(args.trace_file) as f:
+            trace = trace_from_json(f.read())
+    else:
+        trace = chaos_storm(exe.cluster, args.steps, seed=args.seed,
+                            intensity=args.intensity)
+    if args.save_trace:
+        with open(args.save_trace, "w") as f:
+            f.write(trace_to_json(trace))
+        print(f"storm trace written to {args.save_trace}")
+    cfg = exe.config
+    ccfg = ControllerConfig(
+        total_steps=args.steps, seq_len=cfg.seq_len,
+        global_batch=cfg.global_batch,
+        debounce_steps=args.debounce,
+        min_steps_between_replans=args.min_replan_gap,
+        replan_deadline_s=args.deadline,
+        degraded_ladder=not args.no_ladder)
+    ctrl = exe.attach_elastic(ccfg)
+    if args.p_planner_timeout > 0 or args.p_planner_infeasible > 0:
+        ctrl.injector = FaultInjector(ChaosConfig(
+            seed=args.seed,
+            p_planner_timeout=args.p_planner_timeout,
+            p_planner_infeasible=args.p_planner_infeasible))
+    res = run_replay(trace, args.steps, controller=ctrl)
+    print("replan decisions:")
+    for d in ctrl.decisions:
+        print(f"  {d.describe()}")
+    replans = sum(1 for d in ctrl.decisions
+                  if d.action not in ("none", "deferred", "ignored"))
+    print(f"\noverall: {res.throughput():,.0f} tokens/s, "
+          f"{res.stalled_steps} stalled steps, {replans} replans, "
+          f"{len(trace.events)} storm events")
+    if ctrl.injector is not None:
+        print(f"injected faults: {ctrl.injector.stats()}")
+    return 0
+
+
 def cmd_dryrun(args, extra: List[str]) -> int:
     # delegate to the launcher (it owns the XLA device-count env dance)
     from repro.launch import dryrun
@@ -497,6 +547,33 @@ def build_parser() -> argparse.ArgumentParser:
     k.add_argument("--device", default=None,
                    help="only cells for this device fingerprint")
 
+    p = sub.add_parser("chaos", help="chaos-hardening tools (fault-storm "
+                       "replay through the hardened controller)")
+    csub = p.add_subparsers(dest="chaoscmd", required=True)
+    c = csub.add_parser("replay", help="replay a seeded fault storm (or a "
+                        "saved trace) against a Plan's elastic controller")
+    c.add_argument("--plan", required=True)
+    c.add_argument("--steps", type=int, default=200)
+    c.add_argument("--seed", type=int, default=0)
+    c.add_argument("--intensity", type=float, default=1.0,
+                   help="scales every storm hazard rate")
+    c.add_argument("--trace-file", default=None,
+                   help="replay a saved storm trace JSON instead of "
+                        "generating one")
+    c.add_argument("--save-trace", default=None, metavar="TRACE.json",
+                   help="write the generated storm trace (fixture-ready)")
+    c.add_argument("--debounce", type=int, default=3,
+                   help="event-coalescing window (steps); 0 disables")
+    c.add_argument("--min-replan-gap", type=int, default=5,
+                   help="hysteresis: min steps between voluntary replans")
+    c.add_argument("--deadline", type=float, default=0.0,
+                   help="replan wall-clock deadline (s); 0 = unbounded")
+    c.add_argument("--no-ladder", action="store_true",
+                   help="disable the degraded-mode ladder (unhardened "
+                        "baseline — planning failures raise)")
+    c.add_argument("--p-planner-timeout", type=float, default=0.0)
+    c.add_argument("--p-planner-infeasible", type=float, default=0.0)
+
     sub.add_parser("dryrun", add_help=False,
                    help="forward to repro.launch.dryrun (own flags)")
     return ap
@@ -509,7 +586,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
     return {"plan": cmd_plan, "simulate": cmd_simulate,
             "train": cmd_train, "replay": cmd_replay,
-            "migrate": cmd_migrate, "kbench": cmd_kbench}[args.cmd](args)
+            "migrate": cmd_migrate, "kbench": cmd_kbench,
+            "chaos": cmd_chaos}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
+from repro.chaos.inject import ChaosConfig
 from repro.comm.selector import CommConfig
 from repro.core.costmodel import CostModelConfig
 from repro.kbench.bridge import KBenchConfig
@@ -54,6 +55,10 @@ class HarpConfig:
     kbench: Optional[KBenchConfig] = None  # None -> analytic pricing
     # (convenience alias for planner.kbench; same off-state invariant —
     # kbench=None plans are bit-identical to pre-kbench plans, DESIGN.md §9)
+    chaos: Optional[ChaosConfig] = None  # None -> no fault injection
+    # (off-state invariant: chaos=None — and all-zero probabilities — leave
+    # controller decisions and artifacts bit-identical to schema v6,
+    # DESIGN.md §10)
 
     def __post_init__(self):
         # the top-level kbench knob materializes into the planner config;
@@ -174,12 +179,15 @@ class HarpConfig:
         # absent key: a pre-v4 (training-only) artifact — still loads
         serving = d.pop("serving", None)
         kbench = d.pop("kbench", None)
+        # absent key: a pre-v7 artifact — still loads
+        chaos = d.pop("chaos", None)
         return HarpConfig(
             planner=planner, trainer=trainer,
             data=None if data is None else DataConfig(**data),
             elastic=None if elastic is None else ControllerConfig(**elastic),
             serving=None if serving is None else ServingConfig(**serving),
             kbench=None if kbench is None else KBenchConfig.from_dict(kbench),
+            chaos=None if chaos is None else ChaosConfig.from_dict(chaos),
             **d)
 
     @staticmethod

@@ -412,13 +412,28 @@ class Executable:
                     f"with the compiled plan's {fld}={want}")
         if fill:
             ccfg = dataclasses.replace(ccfg, **fill)
+        # chaos wiring (schema v7): a FaultInjector when cfg.chaos is set,
+        # and the serving config so pool-structure changes re-run the
+        # serving placement through the hardened path.  chaos=None and
+        # serving=None leave both hooks off — the off-state invariant.
+        injector = None
+        if cfg.chaos is not None:
+            from repro.chaos.inject import FaultInjector
+            injector = FaultInjector(cfg.chaos)
         ctrl = ElasticController(self.cluster, self.arch,
                                  planner_cfg=cfg.planner, cfg=ccfg,
-                                 telemetry=telemetry)
+                                 telemetry=telemetry, injector=injector,
+                                 serving_cfg=cfg.serving)
+        if self.plan.serve is not None:
+            from repro.serving.placement import ServePlan
+            ctrl.serve_plan = ServePlan.from_dict(self.plan.serve)
         # seed with a copy — the controller retunes its strategy in place,
         # which must not mutate the immutable Plan artifact
         ctrl.strategy = ParallelStrategy.from_json(self.strategy.to_json())
         ctrl.plan_cluster = self.cluster
+        # seeding from a compiled plan IS a successful bootstrap — the
+        # degraded ladder's never-raise guarantee starts here
+        ctrl._bootstrapped = True
         ctrl.decisions.append(ReplanDecision(
             step=0, action="none", reason="seeded from compiled plan",
             step_time_after=ctrl.strategy.est_step_time))

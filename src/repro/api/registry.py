@@ -111,6 +111,15 @@ register("event_source", "paper",
 register("event_source", "random", random_trace)
 register("event_source", "none", lambda cluster, n_steps=0, **kw: EventTrace([]))
 
+
+def _chaos_trace(cluster, n_steps=0, **kw):
+    # lazy: keeps the chaos package off the import path of plain planning
+    from repro.chaos.faults import chaos_storm
+    return chaos_storm(cluster, n_steps, **kw)
+
+
+register("event_source", "chaos", _chaos_trace)
+
 register("cluster", "paper_case_study", _cluster_lib.paper_case_study_cluster)
 register("cluster", "paper_eval", _cluster_lib.paper_eval_cluster)
 register("cluster", "homogeneous", _cluster_lib.homogeneous_cluster)

@@ -85,15 +85,45 @@ def _path(ckpt_dir: str, step: int) -> str:
     return os.path.join(ckpt_dir, f"ckpt_{step:010d}.npz")
 
 
+# chaos seam: fn(step) -> None | "partial" | "fsync".  "partial" dies
+# mid-stream (half the payload written), "fsync" dies after the payload but
+# before the atomic rename.  Either way the destination path is never
+# touched — the previous checkpoint stays readable, which is what the
+# atomic-rename protocol promises and the chaos tests verify.
+_WRITE_FAULT = None
+
+
+def set_write_fault(fn):
+    """Install (or clear, with None) the checkpoint write-fault hook.
+    Returns the previous hook so tests can restore it."""
+    global _WRITE_FAULT
+    prev = _WRITE_FAULT
+    _WRITE_FAULT = fn
+    return prev
+
+
 def _write_atomic(ckpt_dir: str, step: int, meta: Dict,
                   flat: Dict[str, np.ndarray]) -> str:
     path = _path(ckpt_dir, step)
+    fault = _WRITE_FAULT(step) if _WRITE_FAULT is not None else None
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
+            if fault == "partial":
+                # serialize to memory, write only half, then die — the torn
+                # tmp file must never reach ``path``
+                import io
+                buf = io.BytesIO()
+                np.savez(buf, **{META_KEY: json.dumps(meta)}, **flat)
+                payload = buf.getvalue()
+                f.write(payload[:len(payload) // 2])
+                f.flush()
+                raise IOError(f"injected partial write at step {step}")
             np.savez(f, **{META_KEY: json.dumps(meta)}, **flat)
             f.flush()
             os.fsync(f.fileno())
+            if fault == "fsync":
+                raise IOError(f"injected fsync failure at step {step}")
         os.replace(tmp, path)  # atomic
     finally:
         if os.path.exists(tmp):

@@ -310,6 +310,40 @@ def cluster_fingerprint(cluster: HeteroCluster) -> str:
     return "|".join(parts)
 
 
+# ---------------------------------------------------------------------------
+# (De)serialization — plain JSON-native dicts.  Lives here (not in repro.api)
+# so the runtime's plan cache and the chaos trace format can round-trip fleet
+# specs without importing the api layer; ``repro.api.artifacts`` re-exports.
+# ---------------------------------------------------------------------------
+
+
+def subcluster_to_dict(sub: SubCluster) -> Dict:
+    """One sub-cluster spec as JSON-native data (tuples become lists)."""
+    import json as _json
+    return _json.loads(_json.dumps(dataclasses.asdict(sub)))
+
+
+def subcluster_from_dict(d: Dict) -> SubCluster:
+    d = dict(d)
+    dev = DeviceProfile(**d.pop("device"))
+    ne = d.pop("node_efficiencies", None)
+    return SubCluster(device=dev,
+                      node_efficiencies=None if ne is None else tuple(ne), **d)
+
+
+def cluster_to_dict(cluster: HeteroCluster) -> Dict:
+    """Full fleet spec as plain JSON-native data (everything the cost model
+    reads; tuples normalized to lists so artifact dicts are pure JSON)."""
+    import json as _json
+    return _json.loads(_json.dumps(dataclasses.asdict(cluster)))
+
+
+def cluster_from_dict(d: Dict) -> HeteroCluster:
+    subs = tuple(subcluster_from_dict(sd) for sd in d["subclusters"])
+    return HeteroCluster(subclusters=subs, cross_bw=d["cross_bw"],
+                         cross_latency=d.get("cross_latency", 1e-3))
+
+
 def heterogeneous_tpu_cluster(dcn_gbps: float = 100.0) -> HeteroCluster:
     """A mixed-generation TPU fleet (v5e pod + v4 pod) — the TPU analogue of
     the paper's A100+V100 setting."""

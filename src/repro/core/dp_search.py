@@ -72,6 +72,13 @@ from repro.core.strategy import ParallelStrategy, StageAssignment
 INF = np.inf
 
 
+class SearchTimeout(RuntimeError):
+    """The search exceeded ``SearchConfig.deadline_s`` of wall clock.  A
+    RuntimeError subclass so every caller that treats planner failure as
+    "no feasible strategy" (e.g. the elastic controller's degraded ladder)
+    handles timeouts through the same path."""
+
+
 @dataclass
 class SearchConfig:
     n_microbatches: int = 128
@@ -89,6 +96,10 @@ class SearchConfig:
                                       # (vectorized engine; clamped by memory.
                                       # Chunks ascend, so small batches keep
                                       # the low-t_max sparsity window tight)
+    deadline_s: float = 0.0           # wall-clock budget for one search;
+                                      # exceeded -> SearchTimeout (0 = none).
+                                      # Checked between DP solves, so overrun
+                                      # is bounded by one candidate evaluation
 
 
 @dataclass
@@ -682,9 +693,17 @@ def _relaxed_feasible(ctx: _DPContext, tau: float) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _check_deadline(deadline: Optional[float]) -> None:
+    if deadline is not None and time.perf_counter() > deadline:
+        raise SearchTimeout(
+            "search exceeded its wall-clock deadline "
+            "(SearchConfig.deadline_s)")
+
+
 def _run_batches(ctx: _DPContext, keep: np.ndarray, engine: str,
                  stats: SearchStats,
-                 known: Optional[Dict[float, float]] = None
+                 known: Optional[Dict[float, float]] = None,
+                 deadline: Optional[float] = None
                  ) -> List[Tuple[float, float]]:
     """Evaluate the surviving t_max candidates; (t, fill) per candidate.
     ``known`` carries fills already solved during pruning — those
@@ -733,12 +752,14 @@ def _run_batches(ctx: _DPContext, keep: np.ndarray, engine: str,
     if pool is None:
         if engine == "vectorized":
             for batch in batches:
+                _check_deadline(deadline)
                 fills = _dp_eval_batch(ctx, np.asarray(batch))
                 results.extend(
                     (float(t), float(f)) for t, f in zip(batch, fills))
         else:
             for batch in batches:
                 for t in batch:
+                    _check_deadline(deadline)
                     results.append((float(t), _dp_eval(ctx, float(t))[0]))
     # deterministic selection order regardless of worker scheduling
     results.sort(key=lambda r: r[0])
@@ -746,7 +767,8 @@ def _run_batches(ctx: _DPContext, keep: np.ndarray, engine: str,
 
 
 def _search_impl(ctx: _DPContext, mb_tokens: int, engine: str,
-                 stats: SearchStats, verbose: bool) -> ParallelStrategy:
+                 stats: SearchStats, verbose: bool,
+                 deadline: Optional[float] = None) -> ParallelStrategy:
     cfg = ctx.cfg
     cluster, tables = ctx.cluster, ctx.tables
     B = cfg.n_microbatches
@@ -767,6 +789,7 @@ def _search_impl(ctx: _DPContext, mb_tokens: int, engine: str,
 
     def probe(i: int) -> float:
         if i not in fill_cache:
+            _check_deadline(deadline)
             stats.prune_evals += 1
             fill_cache[i] = float(_dp_eval(ctx, float(cands[i]))[0]) \
                 if engine == "oracle" \
@@ -824,7 +847,8 @@ def _search_impl(ctx: _DPContext, mb_tokens: int, engine: str,
     t_ev0 = time.perf_counter()
     results = _run_batches(ctx, keep, engine, stats,
                            known={float(cands[i]): f
-                                  for i, f in fill_cache.items()})
+                                  for i, f in fill_cache.items()},
+                           deadline=deadline)
     stats.eval_seconds = time.perf_counter() - t_ev0
     # fresh solves only: cache-served candidates cost nothing here and
     # their solve time is already accounted under prune_evals
@@ -915,10 +939,13 @@ def instrumented_search(cluster: HeteroCluster, tables: ProfileTables,
     stats = SearchStats(engine=engine, requested_engine=cfg.engine,
                         n_subclusters=ctx.C,
                         n_mesh_rows=len(tables.meshes), n_layers=ctx.L)
+    deadline = t0 + cfg.deadline_s if cfg.deadline_s > 0 else None
     try:
-        strategy = _search_impl(ctx, mb_tokens, engine, stats, verbose)
+        strategy = _search_impl(ctx, mb_tokens, engine, stats, verbose,
+                                deadline)
     except RuntimeError:
-        raise                      # genuine infeasibility, both engines agree
+        raise       # genuine infeasibility (or SearchTimeout) — both engines
+        #             agree, no point re-running on the oracle
     except Exception:
         if engine != "vectorized" or ctx.C > 2:
             raise
@@ -927,7 +954,8 @@ def instrumented_search(cluster: HeteroCluster, tables: ProfileTables,
         # canonical clusters — it means the fast path regressed.
         stats.engine = "oracle"
         stats.oracle_fallbacks += 1
-        strategy = _search_impl(ctx, mb_tokens, "oracle", stats, verbose)
+        strategy = _search_impl(ctx, mb_tokens, "oracle", stats, verbose,
+                                deadline)
     stats.total_seconds = time.perf_counter() - t0
     return strategy, stats
 

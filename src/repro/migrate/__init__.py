@@ -19,8 +19,8 @@ Front door used by the ElasticController and ``Executable.migrate_to``:
     # cost.downtime_s -> amortization rule; mplan.moved_bytes -> decision
 """
 from repro.migrate.apply import (
-    ApplyStats, ShardedState, apply_migration, gather_leaf, shard_state,
-    states_equal,
+    ApplyStats, MigrationAborted, RetryPolicy, ShardedState, apply_migration,
+    gather_leaf, shard_state, states_equal,
 )
 from repro.migrate.differ import MigrationPlan, Transfer, diff_layouts
 from repro.migrate.layout import (
@@ -32,8 +32,9 @@ from repro.migrate.pricing import (
 )
 
 __all__ = [
-    "ApplyStats", "DeviceId", "LeafSpec", "MigrationCost", "MigrationPlan",
-    "PlanLayout", "ShardedState", "Transfer", "apply_migration",
+    "ApplyStats", "DeviceId", "LeafSpec", "MigrationAborted", "MigrationCost",
+    "MigrationPlan", "PlanLayout", "RetryPolicy", "ShardedState", "Transfer",
+    "apply_migration",
     "classify_link", "diff_layouts", "gather_leaf", "layout_from_strategy",
     "lost_devices", "price_migration", "shard_state", "stage_devices",
     "stage_intra", "states_equal", "DEFAULT_RESTORE_BW",

@@ -91,19 +91,58 @@ class ApplyStats:
     live_bytes: int = 0            # shipped device-to-device
     ckpt_bytes: int = 0            # restored from the checkpoint image
     n_transfers: int = 0
+    retries: int = 0               # failed transfer attempts that re-drew
+    backoff_s: float = 0.0         # exponential-backoff wall charged
+    ckpt_fallbacks: int = 0        # transfers served from the checkpoint
+                                   # image after their retry budget drained
+
+
+@dataclass
+class RetryPolicy:
+    """Per-transfer retry shaping: attempt ``1 + max_retries`` times, waiting
+    ``backoff_s * mult**(attempt - 1)`` before retry ``attempt``."""
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    mult: float = 2.0
+
+    def total_backoff(self, n_retries: int) -> float:
+        return sum(self.backoff_s * self.mult ** i for i in range(n_retries))
+
+
+class MigrationAborted(RuntimeError):
+    """A transfer exhausted its retry budget with no checkpoint fallback.
+    ``apply_migration`` never mutates the input ``state``, so the caller's
+    rollback is simply to keep running the old plan on it — the partial
+    ``out`` state is discarded with this exception.  Carries the stats
+    accumulated up to the abort (the wasted work to charge)."""
+
+    def __init__(self, msg: str, stats: "ApplyStats"):
+        super().__init__(msg)
+        self.stats = stats
 
 
 def apply_migration(state: ShardedState, mplan: MigrationPlan,
                     new_layout: PlanLayout, *,
                     lost: Optional[Set[DeviceId]] = None,
-                    ckpt_image: Optional[Dict[str, np.ndarray]] = None
+                    ckpt_image: Optional[Dict[str, np.ndarray]] = None,
+                    fault_fn=None,
+                    retry: Optional[RetryPolicy] = None
                     ) -> Tuple[ShardedState, ApplyStats]:
     """Execute ``mplan`` against ``state`` (the old layout's holdings),
     producing the new layout's state.  Bytes already in place on surviving
     devices are copied locally (not counted as moved); ``src=None``
     restores read ``ckpt_image``; reading from a ``lost`` device raises —
-    the differ must never schedule one as a source."""
+    the differ must never schedule one as a source.
+
+    Fault path: ``fault_fn(transfer, attempt) -> bool`` (True = this attempt
+    fails) injects per-transfer failures.  A failed transfer retries with
+    exponential backoff per ``retry`` (default :class:`RetryPolicy`); when
+    the budget drains it falls back to the checkpoint image for that leaf
+    (counted in ``ckpt_fallbacks`` + ``ckpt_bytes``), and when no image
+    covers it, raises :class:`MigrationAborted` — ``state`` is untouched,
+    so the caller rolls back by keeping the old plan."""
     lost = lost or set()
+    retry = retry or RetryPolicy()
     out = ShardedState(new_layout)
     stats = ApplyStats()
     # bytes that never move: same device holds them under both layouts
@@ -117,18 +156,39 @@ def apply_migration(state: ShardedState, mplan: MigrationPlan,
                     if cs < ce:
                         out.write(leaf, dev, cs, state.read(leaf, dev, cs, ce))
     for t in mplan.transfers:
-        if t.src is None:
-            if ckpt_image is None or t.leaf not in ckpt_image:
-                raise ValueError(
-                    f"transfer of {t.leaf} needs a checkpoint image "
-                    f"(no surviving replica)")
+        if t.src is not None and t.src in lost:
+            raise ValueError(f"differ scheduled lost device {t.src} "
+                             f"as a source for {t.leaf}")
+        if t.src is None and (ckpt_image is None or t.leaf not in ckpt_image):
+            raise ValueError(
+                f"transfer of {t.leaf} needs a checkpoint image "
+                f"(no surviving replica)")
+        # attempt loop: live read, per-attempt fault draw, exponential
+        # backoff, then the checkpoint image as the per-transfer fallback
+        attempt = 0
+        from_ckpt = t.src is None
+        while True:
+            if fault_fn is None or from_ckpt \
+                    or not fault_fn(t, attempt):
+                break
+            stats.retries += 1
+            stats.backoff_s += retry.backoff_s * retry.mult ** attempt
+            attempt += 1
+            if attempt > retry.max_retries:
+                if ckpt_image is not None and t.leaf in ckpt_image:
+                    from_ckpt = True
+                    stats.ckpt_fallbacks += 1
+                    break
+                raise MigrationAborted(
+                    f"transfer {t.leaf}[{t.start}:{t.end}] "
+                    f"{t.src} -> {t.dst} failed {attempt} times with no "
+                    f"checkpoint fallback; rolling back to the old plan",
+                    stats)
+        if from_ckpt:
             payload = np.asarray(ckpt_image[t.leaf],
                                  dtype=np.uint8)[t.start:t.end]
             stats.ckpt_bytes += t.nbytes
         else:
-            if t.src in lost:
-                raise ValueError(f"differ scheduled lost device {t.src} "
-                                 f"as a source for {t.leaf}")
             payload = state.read(t.leaf, t.src, t.start, t.end)
             stats.live_bytes += t.nbytes
         out.write(t.leaf, t.dst, t.start, np.array(payload, copy=True))

@@ -78,10 +78,13 @@ class Straggler(ClusterEvent):
 @dataclass(frozen=True)
 class Preemption(ClusterEvent):
     """Spot-instance reclamation: like a failure, but with advance notice and
-    (optionally) a scheduled return after ``duration_steps``."""
+    (optionally) a scheduled return after ``duration_steps``.  ``template``
+    rides along to the materialized return ``NodeJoin`` so a preemption that
+    drains a sub-cluster entirely can re-create the pool from its spec."""
     subcluster: str = ""
     n_nodes: int = 1
     duration_steps: int = 0     # 0 = not coming back
+    template: Optional["SubCluster"] = None
 
     def describe(self) -> str:
         back = f", back in {self.duration_steps}" if self.duration_steps else ""
@@ -114,18 +117,24 @@ def apply_event(cluster: HeteroCluster, event: ClusterEvent) -> HeteroCluster:
 @dataclass
 class EventTrace:
     """Events sorted by step.  Scheduled returns of ``Preemption`` events are
-    materialized as ``NodeJoin`` entries at construction."""
+    materialized as ``NodeJoin`` entries at construction (``materialized=True``
+    marks an already-expanded event list — e.g. one deserialized from JSON —
+    so re-construction doesn't duplicate the returns)."""
     events: List[ClusterEvent] = field(default_factory=list)
+    materialized: bool = False
 
     def __post_init__(self):
         expanded: List[ClusterEvent] = []
         for e in self.events:
             expanded.append(e)
-            if isinstance(e, Preemption) and e.duration_steps > 0:
+            if not self.materialized and isinstance(e, Preemption) \
+                    and e.duration_steps > 0:
                 expanded.append(NodeJoin(step=e.step + e.duration_steps,
                                          subcluster=e.subcluster,
-                                         n_nodes=e.n_nodes))
+                                         n_nodes=e.n_nodes,
+                                         template=e.template))
         self.events = sorted(expanded, key=lambda e: e.step)
+        self.materialized = True
 
     def at(self, step: int) -> List[ClusterEvent]:
         return [e for e in self.events if e.step == step]

@@ -289,9 +289,25 @@ def run_replay(trace: EventTrace, n_steps: int, *,
             else:
                 true_cluster = apply_event(true_cluster, ev)
 
+        if elastic and hasattr(controller, "poll"):
+            d = controller.poll(step)
+            if d is not None:
+                decisions.append(d)
+                wall += d.downtime_s
+                decision_str = d.action if decision_str is None \
+                    else f"{decision_str},{d.action}"
+
         if elastic:
             strat, pcl = controller.strategy, controller.plan_cluster
             true_cluster = controller.cluster
+            if strat is None:
+                # checkpoint-restart rung: the fleet holds at the last
+                # checkpoint, earning nothing, until planning succeeds
+                stalled_steps += 1
+                wall += last_step_time
+                samples.append(ReplaySample(step, wall, last_step_time, 0,
+                                            ev_names, decision_str))
+                continue
         else:
             strat, pcl = strategy, plan_cluster
 

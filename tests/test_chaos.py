@@ -1,0 +1,612 @@
+"""Chaos-hardened elastic runtime (ISSUE 9).
+
+Covers the storm generators (seeded, JSON-round-tripping, lowering onto the
+existing typed events), the three injection seams (planner / migration
+transfer / checkpoint write), the controller hardening (debounce +
+hysteresis, replan deadline, the degraded-mode ladder, checkpoint-restart
+retries, plan-cache quarantine, drained-pool rejoin), the serving
+follow-on, and the two off-state pins: the PR-8 decision sequence is
+bit-identical with chaos off, and the v7 artifact additions carry exactly
+their off values.
+
+Property suite (acceptance): every seeded storm replays through the
+hardened controller with zero uncaught exceptions, and after every
+decision the committed strategy's mesh footprint fits the live fleet.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.chaos import (
+    ChaosConfig, FaultInjector, chaos_storm, correlated_failure,
+    event_from_dict, event_to_dict, flapping_node, slow_then_dead,
+    trace_from_json, trace_to_json, wan_brownout,
+)
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.core.cluster import (
+    GB, GBPS, DeviceProfile, HeteroCluster, SubCluster, cluster_fingerprint,
+)
+from repro.core.dp_search import SearchTimeout
+from repro.core.planner import HAPTPlanner, PlannerConfig
+from repro.migrate import (
+    MigrationAborted, RetryPolicy, apply_migration, diff_layouts,
+    shard_state, states_equal,
+)
+from repro.migrate.layout import LeafSpec, PlanLayout
+from repro.runtime import (
+    ControllerConfig, ElasticController, EventTrace, NodeFailure, NodeJoin,
+    Preemption, paper_trace, run_replay,
+)
+from repro.runtime.replay import feasible_under
+
+
+def tiny_cluster(a_nodes=1, b_nodes=2, cross_gbps=10.0):
+    return HeteroCluster(
+        subclusters=(
+            SubCluster("A", a_nodes, 2,
+                       DeviceProfile("fast", 300e12, 40 * GB, 1.5e12),
+                       300e9, 25e9),
+            SubCluster("B", b_nodes, 2,
+                       DeviceProfile("slow", 120e12, 32 * GB, 0.9e12),
+                       150e9, 25e9),
+        ),
+        cross_bw=cross_gbps * GBPS)
+
+
+def make_controller(cluster, total_steps=500, plan_cache_dir=None,
+                    require_all=True, **ccfg_kw):
+    pcfg = PlannerConfig(granularity=8, n_microbatches=8,
+                         min_submesh_devices=2)
+    pcfg.search.require_all_devices = require_all
+    ccfg = ControllerConfig(total_steps=total_steps, seq_len=256,
+                            global_batch=32, plan_cache_dir=plan_cache_dir,
+                            **ccfg_kw)
+    return ElasticController(cluster, "gpt-2b", planner_cfg=pcfg, cfg=ccfg)
+
+
+def committed_ok(ctrl):
+    """The never-commit-a-dead-node invariant."""
+    return ctrl.strategy is None or feasible_under(
+        ctrl.strategy, ctrl.plan_cluster, ctrl.cluster)
+
+
+# ---------------------------------------------------------------------------
+# Storm generators
+# ---------------------------------------------------------------------------
+
+
+def test_storm_deterministic_per_seed():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    t1 = chaos_storm(cl, 300, seed=3, intensity=2.0)
+    t2 = chaos_storm(cl, 300, seed=3, intensity=2.0)
+    t3 = chaos_storm(cl, 300, seed=4, intensity=2.0)
+    assert [e.describe() for e in t1.events] \
+        == [e.describe() for e in t2.events]
+    assert t1.events and [e.describe() for e in t1.events] \
+        != [e.describe() for e in t3.events]
+
+
+def test_storm_trace_json_round_trip():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    tr = chaos_storm(cl, 300, seed=5, intensity=2.0)
+    tr2 = trace_from_json(trace_to_json(tr))
+    assert tr2.events == tr.events
+    # materialized traces must NOT re-expand preemptions on load
+    assert tr2.materialized
+    assert len(tr2.events) == len(tr.events)
+
+
+def test_event_dict_round_trip_keeps_template():
+    sub = tiny_cluster().subclusters[0]
+    ev = NodeJoin(step=7, subcluster="A", n_nodes=1, template=sub)
+    ev2 = event_from_dict(event_to_dict(ev))
+    assert ev2 == ev and ev2.template == sub
+
+
+def test_storm_never_drains_fleet():
+    for seed in range(6):
+        cl = tiny_cluster(a_nodes=2, b_nodes=2)
+        tr = chaos_storm(cl, 400, seed=seed, intensity=3.0)
+        cur = cl
+        for ev in tr.events:
+            from repro.runtime.events import apply_event
+            cur = apply_event(cur, ev)          # must never raise
+            assert cur.subclusters, f"seed {seed}: fleet drained at {ev}"
+
+
+def test_correlated_failure_rack_blast_and_outage():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    tr = EventTrace(correlated_failure(cl, step=10, subcluster="B",
+                                       n_nodes=2, outage_steps=20),
+                    materialized=True)
+    mid = tr.cluster_at(cl, 15)
+    assert {s.name for s in mid.subclusters} == {"A"}   # rack gone
+    back = tr.cluster_at(cl, 40)
+    assert cluster_fingerprint(back) == cluster_fingerprint(cl)
+
+
+def test_slow_then_dead_sequence():
+    cl = tiny_cluster(a_nodes=2)
+    evs = slow_then_dead(cl, start=5, subcluster="A", efficiency=0.4,
+                         degrade_steps=10)
+    names = [type(e).__name__ for e in evs]
+    assert names == ["Straggler", "NodeFailure", "Straggler"]
+    tr = EventTrace(evs, materialized=True)
+    assert tr.cluster_at(cl, 7).subclusters[0].device.efficiency \
+        == pytest.approx(0.4)
+    after = tr.cluster_at(cl, 30)
+    assert after.subclusters[0].n_nodes == 1
+    assert after.subclusters[0].device.efficiency == pytest.approx(1.0)
+
+
+def test_wan_brownout_ramps_and_recovers():
+    cl = tiny_cluster(cross_gbps=10.0)
+    evs = wan_brownout(cl, start=10, depth=0.25, duration=20, ramp=3)
+    tr = EventTrace(evs, materialized=True)
+    mid = tr.cluster_at(cl, 15)
+    assert mid.cross_bw < cl.cross_bw
+    assert tr.cluster_at(cl, 14).cross_bw == pytest.approx(2.5 * GBPS)
+    assert tr.cluster_at(cl, 50).cross_bw == pytest.approx(cl.cross_bw)
+    with pytest.raises(ValueError):
+        wan_brownout(cl, start=0, depth=0.5, duration=2, ramp=2)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector determinism
+# ---------------------------------------------------------------------------
+
+
+def test_injector_streams_are_seeded_and_independent():
+    cfg = ChaosConfig(seed=3, p_planner_timeout=0.5, p_transfer_failure=0.5)
+    a, b = FaultInjector(cfg), FaultInjector(cfg)
+    # same seed -> same per-seam streams
+    assert [a.planner_fault() for _ in range(20)] \
+        == [b.planner_fault() for _ in range(20)]
+    # draws on one seam never perturb another: burn the transfer stream on
+    # c, its planner stream must still match a fresh injector's
+    c, fresh = FaultInjector(cfg), FaultInjector(cfg)
+    for _ in range(50):
+        c.transfer_fails()
+    assert [c.planner_fault() for _ in range(20)] \
+        == [fresh.planner_fault() for _ in range(20)]
+    # different seed -> different stream (with 20 draws at p=0.5 a
+    # collision would be astronomically unlikely)
+    other = FaultInjector(dataclasses.replace(cfg, seed=4))
+    d1, d2 = FaultInjector(cfg), other
+    assert [d1.planner_fault() for _ in range(20)] \
+        != [d2.planner_fault() for _ in range(20)]
+
+
+def test_injector_zero_probabilities_never_fire():
+    inj = FaultInjector(ChaosConfig(seed=0))
+    assert all(inj.planner_fault() is None for _ in range(50))
+    assert not any(inj.transfer_fails() for _ in range(50))
+    assert all(inj.ckpt_write_fault() is None for _ in range(50))
+    assert sum(inj.stats().values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Property suite: seeded storms through the hardened controller
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_hardened_controller_survives_storm(seed):
+    """Acceptance: zero uncaught exceptions, zero dead-node commits, for
+    every seeded storm."""
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, require_all=False, debounce_steps=2,
+                           min_steps_between_replans=4,
+                           restart_retry_steps=10)
+    ctrl.bootstrap()
+    ctrl.injector = FaultInjector(ChaosConfig(
+        seed=seed, p_planner_timeout=0.25, p_planner_infeasible=0.25))
+    trace = chaos_storm(cl, 100, seed=seed, intensity=2.5)
+    by_step = {}
+    for e in trace.events:
+        by_step.setdefault(e.step, []).append(e)
+    for step in range(100):
+        for ev in by_step.get(step, ()):
+            d = ctrl.handle(ev, step=step)      # must never raise
+            assert d is not None
+            assert committed_ok(ctrl), \
+                f"seed {seed} step {step}: committed a dead-node plan"
+        d = ctrl.poll(step)
+        if d is not None:
+            assert committed_ok(ctrl)
+    assert any(d.action != "none" for d in ctrl.decisions)
+
+
+def test_unhardened_controller_raises_on_injected_fault():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, degraded_ladder=False)
+    ctrl.bootstrap()
+    ctrl.injector = FaultInjector(ChaosConfig(seed=0, p_planner_timeout=1.0))
+    with pytest.raises(RuntimeError):
+        ctrl.handle(NodeFailure(step=5, subcluster="B"), step=5)
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode ladder
+# ---------------------------------------------------------------------------
+
+
+def test_injected_fault_falls_down_ladder_not_raises():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl)
+    ctrl.bootstrap()
+    ctrl.injector = FaultInjector(ChaosConfig(seed=0, p_planner_timeout=1.0,
+                                              planner_timeout_s=0.5))
+    d = ctrl.handle(NodeFailure(step=5, subcluster="B"), step=5)
+    assert d.action in ("degraded_cached", "degraded_pool_drop",
+                        "degraded_half_batch", "checkpoint_restart")
+    assert committed_ok(ctrl)
+
+
+def test_ladder_exhaustion_reaches_checkpoint_restart_then_recovers():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, restart_retry_steps=5)
+    ctrl.bootstrap()
+    # every planner call fails -> all search rungs die; the cached bootstrap
+    # plan no longer fits the shrunk fleet -> rung 4
+    ctrl.injector = FaultInjector(ChaosConfig(seed=0,
+                                              p_planner_infeasible=1.0))
+    d = ctrl.handle(NodeFailure(step=5, subcluster="B"), step=5)
+    assert d.action == "checkpoint_restart"
+    assert ctrl.strategy is None
+    assert ctrl.poll(6) is None                 # retry window not yet open
+    # heal the planner seam; the next retry brings the job back
+    ctrl.injector = None
+    d2 = ctrl.poll(20)
+    assert d2 is not None and d2.action == "restart"
+    assert ctrl.strategy is not None and committed_ok(ctrl)
+    assert d2.migration_s > 0                   # restore from checkpoint paid
+
+
+def test_controller_deadline_times_out_search_without_raising():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl)
+    ctrl.bootstrap()
+    # impossible deadline AFTER bootstrap: every re-search times out, the
+    # ladder absorbs it (cached plan infeasible on the shrunk fleet)
+    ctrl.cfg = dataclasses.replace(ctrl.cfg, replan_deadline_s=1e-9)
+    d = ctrl.handle(NodeFailure(step=5, subcluster="B"), step=5)
+    assert d.action == "checkpoint_restart"
+    assert "timeout" in d.reason
+
+
+def test_search_deadline_raises_searchtimeout_directly():
+    pcfg = PlannerConfig(granularity=8, n_microbatches=8,
+                         min_submesh_devices=2)
+    pcfg.search = dataclasses.replace(pcfg.search, deadline_s=1e-12)
+    from repro.configs import get_config
+    with pytest.raises(SearchTimeout):
+        HAPTPlanner(tiny_cluster(), pcfg).plan(
+            get_config("gpt-2b"), seq_len=256, global_batch=32)
+
+
+# ---------------------------------------------------------------------------
+# Debounce + hysteresis (replan storm control)
+# ---------------------------------------------------------------------------
+
+
+def test_flapping_node_costs_one_replan():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, require_all=False, debounce_steps=3,
+                           min_steps_between_replans=8)
+    ctrl.bootstrap()
+    flap = flapping_node(cl, start=10, subcluster="B", n_flaps=3,
+                         down_steps=1, up_steps=2)
+    n_researches = 0
+    for ev in flap:
+        d = ctrl.handle(ev, step=ev.step)
+        assert committed_ok(ctrl)
+        if d.action in ("full", "incremental"):
+            n_researches += 1
+    # during the flap itself, at most the first (forced) replan commits —
+    # every voluntary follow-up defers into the window
+    assert n_researches <= 1
+    # flush: walk poll() past the debounce + hysteresis windows; the whole
+    # backlog lands as ONE coalesced recovery replan
+    last = flap[-1].step
+    flushed = []
+    for step in range(last + 1, last + 20):
+        d = ctrl.poll(step)
+        if d is not None:
+            flushed.append(d)
+            assert committed_ok(ctrl)
+    assert len(flushed) == 1
+    assert flushed[0].coalesced == len(flap) - n_researches
+    # net: 6 flap events cost 2 replans (1 forced + 1 coalesced recovery)
+    # where the unhardened controller would pay one per event
+
+
+def test_deferred_bandwidth_retune_still_applied():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, require_all=False, debounce_steps=5)
+    ctrl.bootstrap()
+    from repro.runtime.events import BandwidthShift
+    d = ctrl.handle(BandwidthShift(step=3, cross_bw=2 * GBPS), step=3)
+    assert d.action == "deferred"
+    # the true fleet already carries the new bandwidth while the replan waits
+    assert ctrl.cluster.cross_bw == pytest.approx(2 * GBPS)
+
+
+def test_off_state_windows_never_defer():
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, require_all=False)   # debounce=0, min_steps=0
+    ctrl.bootstrap()
+    d = ctrl.handle(NodeJoin(step=3, subcluster="B"), step=3)
+    assert d.action != "deferred"
+    assert ctrl.poll(4) is None
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache quarantine (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_plan_cache_is_quarantined_not_fatal(tmp_path):
+    cache = str(tmp_path / "plans")
+    ctrl = make_controller(tiny_cluster(), plan_cache_dir=cache)
+    ctrl.bootstrap()
+    files = [f for f in os.listdir(cache) if f.endswith(".json")]
+    assert files
+    path = os.path.join(cache, files[0])
+    with open(path) as f:
+        s = f.read()
+    with open(path, "w") as f:
+        f.write(s[:len(s) // 2])                # torn write
+    ctrl2 = make_controller(tiny_cluster(), plan_cache_dir=cache)
+    ctrl2.bootstrap()                           # must not raise: cache miss
+    assert not ctrl2.decisions[-1].plan_cache_hit
+    assert os.path.exists(path + ".bad")        # quarantined for post-mortem
+    with open(path + ".bad") as f:
+        assert f.read() == s[:len(s) // 2]      # torn bytes preserved
+    with open(path) as f:
+        json.load(f)                            # re-search rewrote it valid
+
+
+def test_stale_schema_plan_cache_is_miss(tmp_path):
+    cache = str(tmp_path / "plans")
+    ctrl = make_controller(tiny_cluster(), plan_cache_dir=cache)
+    ctrl.bootstrap()
+    fn = [f for f in os.listdir(cache) if f.endswith(".json")][0]
+    path = os.path.join(cache, fn)
+    with open(path) as f:
+        doc = json.load(f)
+    doc["schema"] = 99
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    ctrl2 = make_controller(tiny_cluster(), plan_cache_dir=cache)
+    ctrl2.bootstrap()
+    assert not ctrl2.decisions[-1].plan_cache_hit
+
+
+def test_plan_cache_v2_round_trips_cluster():
+    ctrl = make_controller(tiny_cluster())
+    ctrl.bootstrap()
+    entries = list(ctrl._cached_candidates())
+    assert entries
+    strat, cl = entries[0]
+    assert cl is not None
+    assert cluster_fingerprint(cl) == cluster_fingerprint(ctrl.cluster)
+
+
+# ---------------------------------------------------------------------------
+# Drained-pool preemption return (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_of_whole_pool_returns_via_template():
+    cl = tiny_cluster(a_nodes=1, b_nodes=2)
+    tr = EventTrace([Preemption(step=10, subcluster="A", n_nodes=1,
+                                duration_steps=15,
+                                template=cl.subclusters[0])])
+    assert {s.name for s in tr.cluster_at(cl, 12).subclusters} == {"B"}
+    back = tr.cluster_at(cl, 30)
+    # the returned pool is re-appended, so compare pools order-insensitively
+    assert sorted(cluster_fingerprint(back).split("|")) \
+        == sorted(cluster_fingerprint(cl).split("|"))
+
+
+def test_controller_recreates_fully_drained_pool_on_rejoin():
+    """Regression: pool A (1 node) is preempted away entirely; the return
+    NodeJoin carries no template, but the controller remembers the vanished
+    pool's spec and re-creates it."""
+    cl = tiny_cluster(a_nodes=1, b_nodes=2)
+    ctrl = make_controller(cl, require_all=False)
+    ctrl.bootstrap()
+    d1 = ctrl.handle(NodeFailure(step=5, subcluster="A"), step=5)
+    assert {s.name for s in ctrl.cluster.subclusters} == {"B"}
+    assert committed_ok(ctrl)
+    d2 = ctrl.handle(NodeJoin(step=20, subcluster="A"), step=20)  # no template
+    assert {s.name for s in ctrl.cluster.subclusters} == {"A", "B"}
+    restored = next(s for s in ctrl.cluster.subclusters if s.name == "A")
+    assert restored == cl.subclusters[0]
+    assert committed_ok(ctrl)
+    del d1, d2
+
+
+# ---------------------------------------------------------------------------
+# Migration-transfer seam (retry / backoff / fallback / rollback)
+# ---------------------------------------------------------------------------
+
+
+def _one_leaf_case(nbytes=64):
+    old = PlanLayout(devices_per_node={"A": 2})
+    old.add(LeafSpec("w", nbytes, "param", 0), 0, {("A", 1): [(0, nbytes)]})
+    new = PlanLayout(devices_per_node={"A": 2})
+    new.add(LeafSpec("w", nbytes, "param", 0), 0, {("A", 0): [(0, nbytes)]})
+    full = {"w": np.arange(nbytes, dtype=np.uint8)}
+    state = shard_state(old, full)
+    mplan = diff_layouts(old, new)
+    return state, mplan, new, full
+
+
+def test_transfer_retries_with_exponential_backoff_then_succeeds():
+    state, mplan, new, full = _one_leaf_case()
+    fails = {"n": 2}
+
+    def fault(t, attempt):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            return True
+        return False
+
+    out, stats = apply_migration(state, mplan, new, fault_fn=fault,
+                                 retry=RetryPolicy(max_retries=3,
+                                                   backoff_s=0.1, mult=2.0))
+    assert states_equal(out, shard_state(new, full))
+    assert stats.retries == 2
+    assert stats.backoff_s == pytest.approx(0.1 + 0.2)
+    assert stats.ckpt_fallbacks == 0
+
+
+def test_transfer_budget_exhausted_falls_back_to_checkpoint():
+    state, mplan, new, full = _one_leaf_case()
+    out, stats = apply_migration(
+        state, mplan, new, ckpt_image=full,
+        fault_fn=lambda t, a: True,
+        retry=RetryPolicy(max_retries=2, backoff_s=0.01))
+    assert states_equal(out, shard_state(new, full))
+    assert stats.ckpt_fallbacks == 1
+    assert stats.ckpt_bytes == 64 and stats.live_bytes == 0
+    assert stats.retries == 3                   # initial + 2 retries, all drew
+
+
+def test_migration_abort_rolls_back_and_carries_stats():
+    state, mplan, new, full = _one_leaf_case()
+    before = shard_state(state.layout, full)
+    with pytest.raises(MigrationAborted) as ei:
+        apply_migration(state, mplan, new, fault_fn=lambda t, a: True,
+                        retry=RetryPolicy(max_retries=1, backoff_s=0.01))
+    assert ei.value.stats.retries == 2
+    # rollback contract: the input state is untouched — the caller keeps
+    # running the old plan on it
+    assert states_equal(state, before)
+
+
+def test_injector_drives_transfer_seam_deterministically():
+    cfg = ChaosConfig(seed=9, p_transfer_failure=0.5)
+    f1 = FaultInjector(cfg).transfer_fault_fn()
+    f2 = FaultInjector(cfg).transfer_fault_fn()
+    assert [f1(None, 0) for _ in range(30)] == [f2(None, 0) for _ in range(30)]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-write seam (atomic rename protects readers)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["partial", "fsync"])
+def test_ckpt_write_fault_keeps_previous_checkpoint_readable(tmp_path, mode):
+    d = str(tmp_path / "ckpts")
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    ckpt_lib.save(d, 1, tree)
+    prev = ckpt_lib.set_write_fault(lambda step: mode)
+    try:
+        with pytest.raises(IOError):
+            ckpt_lib.save(d, 2, {"w": np.ones(8, dtype=np.float32)})
+    finally:
+        ckpt_lib.set_write_fault(prev)
+    # the torn write never reached a ckpt path; step 1 restores intact
+    assert ckpt_lib.list_steps(d) == [1]
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    step, got, _ = ckpt_lib.restore(d, tree)
+    assert step == 1
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # and a clean retry after the fault clears lands normally
+    ckpt_lib.save(d, 2, {"w": np.ones(8, dtype=np.float32)})
+    assert ckpt_lib.list_steps(d) == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Serving follow-on
+# ---------------------------------------------------------------------------
+
+
+def test_pool_loss_reruns_serving_placement():
+    from repro.serving.placement import ServingConfig
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    ctrl = make_controller(cl, require_all=False)
+    ctrl.serving_cfg = ServingConfig(qps=4.0, duration_s=0.5,
+                                     search_sample=32)
+    ctrl.bootstrap()
+    d = ctrl.handle(NodeFailure(step=5, subcluster="B"), step=5)
+    assert ctrl.serve_replans >= 1
+    assert ctrl.serve_plan is not None
+    assert d.serve_replanned
+
+
+# ---------------------------------------------------------------------------
+# Off-state pins (chaos=None == PR-8, bit for bit)
+# ---------------------------------------------------------------------------
+
+
+def test_off_state_decision_sequence_bit_identical_to_pr8():
+    """The hardening knobs at their defaults (chaos=None, debounce=0,
+    min_steps=0, deadline=0, ladder armed but never triggered) reproduce
+    the pre-chaos controller's decision sequence exactly."""
+    cl = tiny_cluster()
+    ctrl = make_controller(cl)
+    ctrl.bootstrap()
+    res = run_replay(paper_trace(cl), 160, controller=ctrl)
+    got = [(d.step, d.action, round(d.step_time_after, 9))
+           for d in ctrl.decisions]
+    assert got == [
+        (0, "full", 0.277367989),
+        (60, "incremental", 0.364577801),
+        (100, "warmup_only", 0.398132233),
+        (150, "incremental", 0.304570459),
+        (150, "warmup_only", 0.277367989),
+    ]
+    assert res.tokens_total == 1310720
+
+
+def test_off_state_artifact_additions_are_pinned():
+    """Schema v7 adds exactly two knobs to the artifact; with chaos off
+    they carry exactly their off values (the diff vs v6 is pinned)."""
+    from repro import api
+    from repro.api.artifacts import SCHEMA_VERSION
+    assert SCHEMA_VERSION == 7
+    cfg = api.HarpConfig(seq_len=256, global_batch=32,
+                         planner=PlannerConfig(granularity=8,
+                                               n_microbatches=8,
+                                               min_submesh_devices=2))
+    d = cfg.to_dict()
+    assert d["chaos"] is None
+    assert d["planner"]["search"]["deadline_s"] == 0.0
+    e = d["elastic"]
+    assert e is None                 # elastic block unchanged when unset
+    # ControllerConfig's new knobs default to the off state
+    cc = dataclasses.asdict(ControllerConfig())
+    assert cc["debounce_steps"] == 0
+    assert cc["min_steps_between_replans"] == 0
+    assert cc["replan_deadline_s"] == 0.0
+    assert cc["degraded_ladder"] is True    # armed, but a no-op until a
+    #                                         failure PR-8 would have raised on
+
+
+def test_chaos_config_json_round_trip_via_harp_config():
+    from repro import api
+    cfg = api.HarpConfig(chaos=ChaosConfig(seed=4, p_planner_timeout=0.1,
+                                           p_transfer_failure=0.2))
+    cfg2 = api.HarpConfig.from_json(cfg.to_json())
+    assert cfg2.chaos == cfg.chaos
+    # pre-v7 artifacts (no chaos key) still load
+    d = cfg.to_dict()
+    d.pop("chaos")
+    assert api.HarpConfig.from_dict(d).chaos is None
+
+
+def test_chaos_event_source_registered():
+    from repro.api import registry
+    assert "chaos" in registry.available("event_source")
+    cl = tiny_cluster(a_nodes=2, b_nodes=2)
+    tr = registry.resolve("event_source", "chaos")(cl, 200, seed=1,
+                                                   intensity=2.0)
+    assert isinstance(tr, EventTrace)
