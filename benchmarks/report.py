@@ -3,6 +3,12 @@ hillclimb JSON artifacts.
 
   PYTHONPATH=src python -m benchmarks.report          # prints the sections
   PYTHONPATH=src python -m benchmarks.report --write  # splices EXPERIMENTS.md
+  PYTHONPATH=src python -m benchmarks.report --all    # roll up BENCH_*.json
+
+``--all`` aggregates every ``BENCH_*.json`` trajectory at the repo root
+(chaos / comm / kbench / migrate / obs / search / serve) into one summary
+table: latest entry per file, its boolean acceptance gates folded to a
+single pass/FAIL verdict.
 """
 from __future__ import annotations
 
@@ -114,7 +120,46 @@ def perf_rows(tag: str, paths: List[str]) -> List[str]:
     return out
 
 
+def bench_all_section() -> str:
+    """One table over every BENCH_*.json trajectory at the repo root: the
+    latest entry's cases with their boolean acceptance gates rolled up.
+    Returns a note (not an error) when no trajectories exist."""
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    lines = [
+        "## §Benchmarks — trajectory roll-up",
+        "",
+        "| trajectory | runs | latest | mode | case | gates | verdict |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    n_cases = n_pass = 0
+    for path in paths:
+        doc = _load(path)
+        if not doc or not doc.get("runs"):
+            continue
+        run = doc["runs"][-1]
+        fname = os.path.basename(path)
+        for name, case in sorted(run.get("cases", {}).items()):
+            gates = {k: v for k, v in case.items() if isinstance(v, bool)}
+            failed = sorted(k for k, v in gates.items() if not v)
+            verdict = "pass" if not failed else "FAIL: " + ", ".join(failed)
+            n_cases += 1
+            n_pass += not failed
+            lines.append(
+                f"| {fname} | {len(doc['runs'])} | {run.get('label', '?')} "
+                f"| {run.get('mode', '?')} | {name} "
+                f"| {len(gates) - len(failed)}/{len(gates)} | {verdict} |")
+    if n_cases == 0:
+        return ("## §Benchmarks — trajectory roll-up\n\n"
+                "No BENCH_*.json trajectories at the repo root yet "
+                "(run benchmarks/*_replay.py or benchmarks/obs_bench.py).")
+    lines += ["", f"**{n_pass}/{n_cases} cases pass all gates.**"]
+    return "\n".join(lines)
+
+
 def main() -> None:
+    if "--all" in sys.argv:
+        print(bench_all_section())
+        return
     sections = dryrun_section() + "\n\n" + roofline_section()
     if "--write" in sys.argv:
         path = os.path.join(ROOT, "EXPERIMENTS.md")

@@ -30,6 +30,9 @@ from repro.api import registry
 from repro.chaos import ChaosConfig, FaultInjector
 from repro.kbench import KBenchConfig, KBenchModel, LatencyTable
 from repro.migrate import MigrationCost, MigrationPlan
+from repro.obs import (
+    DriftLedger, DriftReport, MetricsRegistry, ObsConfig, RunLog, Trace,
+)
 from repro.serving.batching import ServeSimResult
 from repro.serving.placement import ServePlan, ServingConfig
 from repro.serving.workload import ServeTrace
@@ -41,6 +44,8 @@ __all__ = [
     "MigrationPlan", "MigrationCost",
     "KBenchConfig", "KBenchModel", "LatencyTable",
     "ChaosConfig", "FaultInjector",
+    "ObsConfig", "Trace", "DriftLedger", "DriftReport", "MetricsRegistry",
+    "RunLog",
     "cluster_to_dict", "cluster_from_dict", "sim_summary",
     "registry", "warn_deprecated",
 ]

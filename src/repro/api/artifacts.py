@@ -34,11 +34,14 @@ from repro.core.strategy import ParallelStrategy
 
 from repro.api.config import HarpConfig
 
-SCHEMA_VERSION = 7   # v7: chaos subsystem — HarpConfig.chaos (fault
+SCHEMA_VERSION = 8   # v8: obs subsystem — HarpConfig.obs (tracing /
+                     # metrics / drift accounting; None = off, artifacts
+                     # bit-identical to v7 apart from this null key)
+                     # (v7: chaos subsystem — HarpConfig.chaos (fault
                      # injection; None = off, bit-identical to v6) and
                      # SearchConfig.deadline_s (replan wall-clock budget;
                      # 0.0 = unlimited, the v6 behavior)
-                     # (v6: kbench subsystem — HarpConfig.kbench /
+                     # v6: kbench subsystem — HarpConfig.kbench /
                      # PlannerConfig.kbench (measured-kernel pricing; None on
                      # analytic plans, which stay bit-identical to v5)
                      # v5: migration subsystem — Plan.migration, the priced

@@ -19,6 +19,9 @@ Subcommands round-trip the :class:`~repro.api.artifacts.Plan` JSON artifact:
     python -m repro kbench show ktable.json
     python -m repro plan --arch gpt-2b --kbench-table ktable.json \\
         --kbench-device-map A100-40G=gpu:A100 -o plan.json
+    python -m repro trace --plan plan.json -o trace.json
+    python -m repro trace --plan plan.json --replay chaos --steps 200 \\
+        -o replay_trace.json
     python -m repro dryrun --arch minitron-8b --shape train_4k
 
 ``plan`` on a planning box, ``simulate``/``train``/``replay`` anywhere —
@@ -172,7 +175,6 @@ def cmd_kbench(args) -> int:
 
 def cmd_simulate(args) -> int:
     from repro.api import compile as api_compile, registry
-    from repro.core.pipesim import ascii_timeline
 
     exe = api_compile(plan_artifact=_load_plan(args.plan))
     if args.trace:
@@ -188,11 +190,14 @@ def cmd_simulate(args) -> int:
             kw["seed"] = args.trace_seed
         trace = registry.resolve("serve_trace", args.trace)(
             exe.config.serving, **kw)
-        res = exe.serve_simulate(trace)
+        res = exe.serve_simulate(trace, trace_out=args.trace_out)
         print(res.describe())
+        if args.trace_out:
+            print(f"serving Chrome trace written to {args.trace_out}")
         return 0
     res = exe.simulate(priced=not args.raw, no_overlap=args.no_overlap,
-                       contention=args.contention)
+                       contention=args.contention,
+                       trace_out=args.trace_out)
     tok = exe.strategy.tokens_per_step()
     print(exe.lowered.describe())
     mode = "contended fair-share" if args.contention else \
@@ -205,7 +210,10 @@ def cmd_simulate(args) -> int:
                          for l, t in sorted(res.link_busy.items()))
         print(f"link busy: {busy}")
     if args.timeline:
-        print(ascii_timeline(res, width=96))
+        from repro.obs import render_ascii, trace_from_sim
+        print(render_ascii(trace_from_sim(res), width=96))
+    if args.trace_out:
+        print(f"Chrome trace written to {args.trace_out}")
     return 0
 
 
@@ -276,7 +284,10 @@ def cmd_replay(args) -> int:
     kw: Dict[str, Any] = {}
     if args.trace == "random":
         kw["seed"] = args.seed
-    res = exe.replay(args.trace, args.steps, elastic=not args.static, **kw)
+    res = exe.replay(args.trace, args.steps, elastic=not args.static,
+                     trace_out=args.trace_out, **kw)
+    if args.trace_out:
+        print(f"Chrome trace written to {args.trace_out}")
     if exe.controller is not None:
         print("replan decisions:")
         for d in exe.controller.decisions:
@@ -367,6 +378,43 @@ def cmd_chaos(args) -> int:
           f"{len(trace.events)} storm events")
     if ctrl.injector is not None:
         print(f"injected faults: {ctrl.injector.stats()}")
+    return 0
+
+
+def cmd_trace(args) -> int:
+    from repro.api import compile as api_compile
+
+    exe = api_compile(plan_artifact=_load_plan(args.plan))
+    if args.replay:
+        kw: Dict[str, Any] = {}
+        if args.replay == "random" or args.replay == "chaos":
+            kw["seed"] = args.seed
+        res = exe.replay(args.replay, args.steps, trace_out=args.out, **kw)
+        n_dec = len(res.decisions)
+        print(f"replayed {args.steps} steps ({args.replay}): "
+              f"{res.throughput():,.0f} tokens/s, {n_dec} controller "
+              f"decisions traced")
+        print(f"Chrome trace written to {args.out} "
+              f"(load in Perfetto / chrome://tracing)")
+        return 0
+    if args.serve:
+        if exe.plan.serve is None:
+            raise SystemExit(
+                "trace --serve needs a plan built with plan --serving")
+        res = exe.serve_simulate(trace_out=args.out)
+        print(res.describe())
+        print(f"serving Chrome trace written to {args.out} "
+              f"(load in Perfetto / chrome://tracing)")
+        return 0
+    tr = exe.trace(out=args.out, priced=args.priced,
+                   contention=args.contention)
+    print(f"{len(tr.spans)} spans / {len(tr.counters)} counter samples, "
+          f"makespan {tr.makespan() * 1e3:.2f} ms")
+    if args.timeline:
+        from repro.obs import render_ascii
+        print(render_ascii(tr, width=96))
+    print(f"Chrome trace written to {args.out} "
+          f"(load in Perfetto / chrome://tracing)")
     return 0
 
 
@@ -472,6 +520,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--duration", type=float, default=None,
                    help="override the trace's duration (seconds)")
     p.add_argument("--trace-seed", type=int, default=None)
+    p.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                   help="also write the simulation as Chrome-trace JSON "
+                        "(Perfetto / chrome://tracing)")
 
     p = sub.add_parser("train", help="training loop (plan-driven or ad hoc)")
     p.add_argument("--plan", help="Plan JSON (wires the elastic controller)")
@@ -499,6 +550,32 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--static", action="store_true",
                    help="keep the plan fixed (checkpoint-restart baseline)")
+    p.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                   help="write the replay (pipeline lanes + controller-"
+                        "decision track) as Chrome-trace JSON")
+
+    p = sub.add_parser("trace", help="export a plan's timing as Chrome-"
+                       "trace JSON (repro.obs; Perfetto-loadable)")
+    p.add_argument("--plan", required=True)
+    p.add_argument("-o", "--out", default="trace.json")
+    p.add_argument("--priced", action="store_true",
+                   help="referee-priced accounting (default: the raw "
+                        "lowered schedule — matches describe(timeline))")
+    p.add_argument("--contention", action="store_true",
+                   help="fair-share link-occupancy engine (adds sync lanes "
+                        "+ link-busy counters)")
+    p.add_argument("--timeline", action="store_true",
+                   help="also print the ASCII rendering of the same spans")
+    p.add_argument("--replay", default=None, metavar="SOURCE",
+                   help="trace a fleet-dynamics replay instead (event "
+                        "source name: paper / random / chaos / none) — "
+                        "adds the controller-decision track")
+    p.add_argument("--serve", action="store_true",
+                   help="trace the serving simulator instead (per-pool "
+                        "prefill/decode lanes; needs plan --serving)")
+    p.add_argument("--steps", type=int, default=200,
+                   help="steps for --replay")
+    p.add_argument("--seed", type=int, default=0)
 
     p = sub.add_parser("migrate", help="price moving live state from one "
                        "plan onto another (repro.migrate differ + netsim)")
@@ -587,7 +664,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     return {"plan": cmd_plan, "simulate": cmd_simulate,
             "train": cmd_train, "replay": cmd_replay,
             "migrate": cmd_migrate, "kbench": cmd_kbench,
-            "chaos": cmd_chaos}[args.cmd](args)
+            "chaos": cmd_chaos, "trace": cmd_trace}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ from repro.chaos.inject import ChaosConfig
 from repro.comm.selector import CommConfig
 from repro.core.costmodel import CostModelConfig
 from repro.kbench.bridge import KBenchConfig
+from repro.obs import ObsConfig
 from repro.core.dp_search import SearchConfig
 from repro.core.planner import PlannerConfig
 from repro.data.pipeline import DataConfig
@@ -59,6 +60,11 @@ class HarpConfig:
     # (off-state invariant: chaos=None — and all-zero probabilities — leave
     # controller decisions and artifacts bit-identical to schema v6,
     # DESIGN.md §10)
+    obs: Optional[ObsConfig] = None  # None -> no tracing/drift accounting
+    # (off-state invariant: obs=None leaves every artifact bit-identical to
+    # schema v7 apart from the version bump + this null key, DESIGN.md §11;
+    # even obs=ObsConfig() never changes planning or runtime decisions —
+    # observability only records)
 
     def __post_init__(self):
         # the top-level kbench knob materializes into the planner config;
@@ -181,6 +187,8 @@ class HarpConfig:
         kbench = d.pop("kbench", None)
         # absent key: a pre-v7 artifact — still loads
         chaos = d.pop("chaos", None)
+        # absent key: a pre-v8 artifact — still loads
+        obs = d.pop("obs", None)
         return HarpConfig(
             planner=planner, trainer=trainer,
             data=None if data is None else DataConfig(**data),
@@ -188,6 +196,7 @@ class HarpConfig:
             serving=None if serving is None else ServingConfig(**serving),
             kbench=None if kbench is None else KBenchConfig.from_dict(kbench),
             chaos=None if chaos is None else ChaosConfig.from_dict(chaos),
+            obs=None if obs is None else ObsConfig.from_dict(obs),
             **d)
 
     @staticmethod

@@ -26,7 +26,7 @@ from repro.configs.base import ArchConfig
 from repro.core.cluster import HeteroCluster, cluster_fingerprint
 from repro.core.layering import Layer, build_layers
 from repro.core.opgraph import build_op_sequence
-from repro.core.pipesim import SimResult, ascii_timeline, simulate
+from repro.core.pipesim import SimResult, simulate
 from repro.core.planner import HAPTPlanner
 from repro.core.strategy import IntraOpPlan, ParallelStrategy
 from repro.data.pipeline import DataConfig
@@ -210,6 +210,8 @@ class Executable:
         self.arch = arch
         self.layers = list(layers)
         self.controller: Optional[ElasticController] = None
+        self.drift_ledger = None    # obs.DriftLedger when config.obs is set
+        #                             (wired by attach_elastic / fit)
 
     @property
     def strategy(self) -> ParallelStrategy:
@@ -226,8 +228,39 @@ class Executable:
         if comm:
             lines.append(self.explain_comm())
         if timeline:
-            lines.append(ascii_timeline(self.simulate(priced=False)))
+            # the ASCII timeline renders the same span model the Chrome
+            # exporter serializes (obs.trace) — one source for both views
+            from repro.obs import render_ascii
+            lines.append(render_ascii(self.trace(decisions=False), width=100))
         return "\n".join(lines)
+
+    def trace(self, out: Optional[str] = None, *, priced: bool = False,
+              contention: bool = False, decisions: bool = True):
+        """Lower this executable's one-step simulation into the typed span
+        model (:class:`repro.obs.Trace`) — per-stage compute lanes with
+        warmup/steady/cooldown phases, per-boundary comm lanes, link-busy
+        counters — plus a controller-decision track when an elastic
+        controller with decisions is attached.
+
+        ``out`` additionally writes Chrome-trace JSON (load in Perfetto /
+        ``chrome://tracing``).  Pure lowering of already-computed timing
+        artifacts: nothing is re-simulated beyond the (memoized)
+        ``simulate()`` call itself."""
+        from repro.obs import (trace_from_decisions, trace_from_sim,
+                               trace_to_chrome)
+        res = self.simulate(priced=priced, contention=contention)
+        tr = trace_from_sim(
+            res, name=f"{self.plan.arch}"
+                      f"@{self.plan.cluster_fingerprint[:8]}")
+        tr.meta["arch"] = self.plan.arch
+        tr.meta["priced"] = priced
+        tr.meta["contention"] = contention
+        if decisions and self.controller is not None \
+                and self.controller.decisions:
+            tr.extend(trace_from_decisions(self.controller.decisions))
+        if out is not None:
+            trace_to_chrome(tr, out)
+        return tr
 
     def explain_comm(self) -> str:
         """Per-stage collective breakdown: selected algorithm, payload
@@ -317,7 +350,8 @@ class Executable:
     def simulate(self, *, priced: bool = True,
                  no_overlap: bool = False,
                  contention: bool = False,
-                 share_links: bool = True) -> SimResult:
+                 share_links: bool = True,
+                 trace_out: Optional[str] = None) -> SimResult:
         """One-step discrete-event simulation, served from the pipesim memo
         on repeat signatures (treat the result as immutable).
         ``priced=True`` (default) is the referee accounting
@@ -334,7 +368,10 @@ class Executable:
         comparable to ``priced=True``.  ``share_links=False`` keeps the
         explicit syncs but gives every transfer a private link — the
         uncontended baseline that isolates the *sharing* cost from the
-        injected sync work."""
+        injected sync work.
+
+        ``trace_out`` additionally writes the result as Chrome-trace JSON
+        (``obs.trace_from_sim`` — the returned numbers are unchanged)."""
         if contention:
             if no_overlap:
                 raise ValueError("contention=True is overlap-mode only")
@@ -349,23 +386,29 @@ class Executable:
                     link = e["sync_link"] if share_links \
                         else f"__private_sync{i}"
                     sync_work.append((i, link, e["sync_time_s"]))
-            return simulate(
+            res = simulate(
                 [s.t_f for s in strat.stages], t_b, strat.c_links,
                 strat.n_microbatches, self.lowered.warmup_counts,
                 contention=True,
                 link_ids=bd["link_ids"] if share_links else None,
                 sync_work=sync_work)
-        if priced:
-            return sync_priced_step(
+        elif priced:
+            res = sync_priced_step(
                 self.strategy, self.cluster, self.layers,
                 no_overlap=no_overlap,
                 counts_fn=registry.resolve("scheduler",
                                            self.config.scheduler))
-        strat = self.strategy
-        return simulate([s.t_f for s in strat.stages],
-                        [s.t_b for s in strat.stages],
-                        strat.c_links, strat.n_microbatches,
-                        self.lowered.warmup_counts, no_overlap=no_overlap)
+        else:
+            strat = self.strategy
+            res = simulate([s.t_f for s in strat.stages],
+                           [s.t_b for s in strat.stages],
+                           strat.c_links, strat.n_microbatches,
+                           self.lowered.warmup_counts, no_overlap=no_overlap)
+        if trace_out is not None:
+            from repro.obs import trace_from_sim, trace_to_chrome
+            trace_to_chrome(trace_from_sim(res, name=self.plan.arch),
+                            trace_out)
+        return res
 
     def throughput(self, *, priced: bool = True) -> float:
         res = self.simulate(priced=priced)
@@ -437,24 +480,84 @@ class Executable:
         ctrl.decisions.append(ReplanDecision(
             step=0, action="none", reason="seeded from compiled plan",
             step_time_after=ctrl.strategy.est_step_time))
+        # obs wiring (schema v8): a record-only drift ledger holding the
+        # compiled plan's prediction to account.  obs=None leaves the hook
+        # off — and even when wired it never alters a controller decision.
+        if cfg.obs is not None:
+            ledger = cfg.obs.ledger()
+            ledger.register_plan(self.plan.predicted,
+                                 stage_pools=self._stage_pools())
+            ctrl.drift_ledger = ledger
+            self.drift_ledger = ledger
         self.controller = ctrl
         return ctrl
 
+    def _stage_pools(self) -> Dict[int, str]:
+        """stage index -> sub-cluster (pool) name, for per-pool drift."""
+        return {i: self.cluster.subclusters[s.cluster_idx].name
+                for i, s in enumerate(self.strategy.stages)}
+
+    def drift_report(self):
+        """The attached drift ledger's current :class:`obs.DriftReport`
+        (predicted vs observed step times; needs ``config.obs`` and an
+        ``attach_elastic()``/``fit()`` that observed steps)."""
+        if self.drift_ledger is None:
+            raise ValueError(
+                "no drift ledger — set HarpConfig.obs and attach_elastic() "
+                "or fit() first")
+        return self.drift_ledger.report()
+
     def replay(self, trace: Union[str, EventTrace], n_steps: int, *,
-               elastic: bool = True, **trace_kw) -> ReplayResult:
+               elastic: bool = True, trace_out: Optional[str] = None,
+               **trace_kw) -> ReplayResult:
         """Replay a fleet-dynamics trace against this executable.  ``trace``
         is an :class:`EventTrace` or a registered event-source name
         (``"paper"``, ``"random"``, ...); elastic mode routes events through
         the attached (or newly attached) controller, static mode keeps the
-        compiled plan and stalls through infeasible periods."""
+        compiled plan and stalls through infeasible periods.
+
+        With ``config.obs.run_log`` set, every step and controller decision
+        is appended to the JSONL run-log on the replay's own wall clock.
+        ``trace_out`` writes a Chrome trace: the pipeline lanes of the
+        compiled plan plus a controller-decision track with one span per
+        :class:`ReplanDecision`, placed at its replay wall time."""
         if isinstance(trace, str):
             trace = registry.resolve("event_source", trace)(
                 self.cluster, n_steps, **trace_kw)
-        if elastic:
-            ctrl = self.controller or self.attach_elastic()
-            return run_replay(trace, n_steps, controller=ctrl)
-        return run_replay(trace, n_steps, strategy=self.strategy,
-                          plan_cluster=self.cluster, layers=self.layers)
+        sink = None
+        obs_cfg = self.config.obs
+        if obs_cfg is not None and obs_cfg.run_log:
+            from repro.obs import RunLog
+            sink = RunLog(obs_cfg.run_log)
+        try:
+            if elastic:
+                ctrl = self.controller or self.attach_elastic()
+                result = run_replay(trace, n_steps, controller=ctrl,
+                                    sink=sink)
+            else:
+                result = run_replay(trace, n_steps, strategy=self.strategy,
+                                    plan_cluster=self.cluster,
+                                    layers=self.layers, sink=sink)
+        finally:
+            if sink is not None:
+                sink.close()
+        if trace_out is not None:
+            from repro.obs import (trace_from_decisions, trace_from_sim,
+                                   trace_to_chrome)
+            tr = trace_from_sim(self.simulate(priced=False),
+                                name=f"{self.plan.arch} replay")
+            if result.decisions:
+                # decision spans on the replay wall clock: each decision at
+                # the wall where its step landed (step index when stalled
+                # before the first sample)
+                wall = {s.step: s.wall_s for s in result.samples}
+                tr.extend(trace_from_decisions(result.decisions,
+                                               wall_times=wall))
+            tr.meta["tokens_total"] = result.tokens_total
+            tr.meta["wall_total_s"] = result.wall_total_s
+            tr.meta["stalled_steps"] = result.stalled_steps
+            trace_to_chrome(tr, trace_out)
+        return result
 
     def migrate_to(self, target: Union["Executable", Plan, HeteroCluster], *,
                    opt_bytes_per_param: float = 2.0,
@@ -543,7 +646,8 @@ class Executable:
 
     def serve_simulate(self, trace=None, *, qps: Optional[float] = None,
                        duration_s: Optional[float] = None,
-                       seed: Optional[int] = None):
+                       seed: Optional[int] = None,
+                       trace_out: Optional[str] = None):
         """Replay a request trace through this plan's serving placement
         (the event-driven continuous-batching simulator,
         :func:`repro.serving.batching.simulate_trace`).
@@ -570,18 +674,70 @@ class Executable:
                 prompt_mean=scfg.prompt_mean, output_mean=scfg.output_mean)
         elif qps is not None:
             trace = trace.remapped(qps)
-        return simulate_trace(splan, trace)
+        if trace_out is None:
+            return simulate_trace(splan, trace)
+        # record dispatches and lower them to per-pool Chrome-trace lanes
+        # on the simulator's event-heap clock (timestamps never wall time)
+        from repro.obs import trace_from_serve, trace_to_chrome
+        recorder: List = []
+        res = simulate_trace(splan, trace, recorder=recorder)
+        tr = trace_from_serve(recorder, name=f"{self.plan.arch} serving")
+        tr.meta["n_completed"] = res.n_completed
+        tr.meta["n_rejected"] = res.n_rejected
+        tr.meta["n_handoffs"] = res.n_handoffs
+        trace_to_chrome(tr, trace_out)
+        return res
 
     # -- training ------------------------------------------------------------
 
     def fit(self, **kwargs) -> Dict[str, Any]:
         """Train under this executable's config.  An attached elastic
         controller's telemetry hooks are wired in unless the caller passes
-        explicit hooks."""
+        explicit hooks.
+
+        With ``config.obs`` set, measured step times also feed the drift
+        ledger (unless an attached controller already does) and, when
+        ``obs.run_log`` names a path, a JSONL run-log on the trainer's own
+        clock — record-only, the training loop is unchanged."""
         if self.controller is not None:
             kwargs.setdefault("on_step_time", self.controller.on_step_time)
             kwargs.setdefault("on_straggler", self.controller.on_straggler)
-        return fit(self.arch, self.config, **kwargs)
+        obs_cfg = self.config.obs
+        if obs_cfg is None:
+            return fit(self.arch, self.config, **kwargs)
+        if self.drift_ledger is None:
+            self.drift_ledger = obs_cfg.ledger()
+            self.drift_ledger.register_plan(self.plan.predicted,
+                                            stage_pools=self._stage_pools())
+        ledger = self.drift_ledger
+        # an attached controller feeds the ledger from its own hook;
+        # feeding it here too would double-count every step
+        feed_ledger = self.controller is None \
+            or getattr(self.controller, "drift_ledger", None) is not ledger
+        sink = None
+        if obs_cfg.run_log:
+            from repro.obs import RunLog
+            sink = RunLog(obs_cfg.run_log)
+        inner = kwargs.get("on_step_time")
+        t_acc = [0.0]   # trainer-clock seconds, never time.time()
+
+        def on_step_time(step, step_time, *a, **kw):
+            t_acc[0] += step_time
+            if feed_ledger:
+                ledger.observe_step(step, step_time)
+            if sink is not None:
+                sink.emit("step", t_acc[0], step=step,
+                          step_time_s=step_time)
+            if inner is not None:
+                return inner(step, step_time, *a, **kw)
+            return None
+
+        kwargs["on_step_time"] = on_step_time
+        try:
+            return fit(self.arch, self.config, **kwargs)
+        finally:
+            if sink is not None:
+                sink.close()
 
 
 # ---------------------------------------------------------------------------

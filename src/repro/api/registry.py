@@ -30,6 +30,10 @@ Registered kinds and their contracts (all times seconds):
 - ``device``: a :class:`repro.core.cluster.DeviceProfile` instance (the
   canonical fleet archetypes; ``benchmarks/roofline.py`` and the
   ``repro kbench`` CLI resolve devices by name here).
+- ``trace_adapter``: ``fn(artifact, **kw) -> repro.obs.Trace`` (lowerings
+  of existing timing artifacts into the typed span model; built-ins
+  ``sim`` / ``netsim`` / ``migration`` / ``serve`` / ``decisions`` wrap
+  the :mod:`repro.obs.trace` adapters).
 """
 from __future__ import annotations
 
@@ -45,7 +49,7 @@ from repro.runtime.events import EventTrace, paper_trace, random_trace
 from repro.serving.workload import poisson_trace, scripted_trace
 
 KINDS = ("scheduler", "cost_model", "event_source", "cluster", "collective",
-         "serve_trace", "device")
+         "serve_trace", "device", "trace_adapter")
 
 _REGISTRY: Dict[str, Dict[str, Any]] = {k: {} for k in KINDS}
 
@@ -152,3 +156,21 @@ register("serve_trace", "scripted", _scripted_serve_trace)
 
 for _name, _profile in _cluster_lib.DEVICE_PROFILES.items():
     register("device", _name, _profile)
+
+
+def _lazy_trace_adapter(attr):
+    # lazy: keeps the obs package off the import path of plain planning
+    def _adapter(artifact, **kw):
+        import repro.obs as _obs
+        return getattr(_obs, attr)(artifact, **kw)
+    _adapter.__name__ = attr
+    return _adapter
+
+
+register("trace_adapter", "sim", _lazy_trace_adapter("trace_from_sim"))
+register("trace_adapter", "netsim", _lazy_trace_adapter("trace_from_netsim"))
+register("trace_adapter", "migration",
+         _lazy_trace_adapter("trace_from_migration"))
+register("trace_adapter", "serve", _lazy_trace_adapter("trace_from_serve"))
+register("trace_adapter", "decisions",
+         _lazy_trace_adapter("trace_from_decisions"))

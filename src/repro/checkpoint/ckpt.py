@@ -128,6 +128,11 @@ def _write_atomic(ckpt_dir: str, step: int, meta: Dict,
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+    # observability: every durable save counts its bytes on the default
+    # obs registry (record-only; the write path above is unchanged)
+    from repro.obs.metrics import DEFAULT_REGISTRY
+    DEFAULT_REGISTRY.inc("ckpt.saves")
+    DEFAULT_REGISTRY.inc("ckpt.bytes_written", os.path.getsize(path))
     return path
 
 

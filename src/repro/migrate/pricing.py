@@ -58,6 +58,9 @@ class MigrationCost:
     link_seconds: Dict[str, float] = field(default_factory=dict)
     n_flows: int = 0
     overlapped: bool = True
+    timeline: Optional[Dict] = None    # per-flow/drain start-end schedule
+    # (JSON-safe; populated by price_migration(collect_timeline=True), the
+    # input obs.trace_from_migration lowers into Chrome-trace lanes)
 
     @property
     def downtime_s(self) -> float:
@@ -151,23 +154,64 @@ def _flows(mplan: MigrationPlan, old: PlanLayout, topo: Topology, *,
     return flows, link_bytes
 
 
+def _fmt_dev(d: Optional[DeviceId]) -> Optional[str]:
+    return None if d is None else f"{d[0]}:{d[1]}"
+
+
+def _timeline(flows: List[Tuple], res, drain_nodes: Sequence[SimNode],
+              release: Dict[int, Tuple], overlapped: bool) -> Dict:
+    """JSON-safe flow/drain schedule from a solved netsim run — the exact
+    start/end seconds ``obs.trace_from_migration`` renders as lanes."""
+    flow_entries = []
+    for fid, links, work, stage in flows:
+        if fid not in res.start:
+            continue
+        src, dst = fid[1], fid[2]
+        flow_entries.append({
+            "id": f"{_fmt_dev(src) or 'ckpt'}->{_fmt_dev(dst)}"
+                  + (f"@s{stage}" if stage is not None else ""),
+            "src": _fmt_dev(src), "dst": _fmt_dev(dst), "src_stage": stage,
+            "link": links[0], "work_s": work,
+            "start_s": res.start[fid], "end_s": res.end[fid]})
+    release_ids = set(release.values())
+    drain_entries = []
+    for node in drain_nodes:
+        if node.nid not in res.start:
+            continue
+        kind = node.nid[0]
+        drain_entries.append({
+            "id": f"{kind}{node.nid[1]}", "kind": kind,
+            "stage": node.nid[1],
+            "link": node.links[0] if node.links else None,
+            "is_release": node.nid in release_ids,
+            "start_s": res.start[node.nid], "end_s": res.end[node.nid]})
+    return {"overlapped": overlapped, "flows": flow_entries,
+            "drain": drain_entries}
+
+
 def price_migration(mplan: MigrationPlan, old_layout: PlanLayout,
                     new_cluster: HeteroCluster, *,
                     old_strategy: Optional[ParallelStrategy] = None,
                     old_cluster: Optional[HeteroCluster] = None,
                     layers: Optional[Sequence[Layer]] = None,
                     restore_bw: float = DEFAULT_RESTORE_BW,
-                    overlap: bool = True) -> MigrationCost:
+                    overlap: bool = True,
+                    collect_timeline: bool = False) -> MigrationCost:
     """Price ``mplan`` on ``new_cluster``'s surviving links (module
     docstring).  ``old_strategy``/``old_cluster``/``layers`` enable the
     overlap scheduler; without them (or ``overlap=False``) the cost is the
-    stop-the-world serial time."""
+    stop-the-world serial time.  ``collect_timeline=True`` additionally
+    keeps the solved per-flow/per-drain-node schedule (prices are
+    unchanged — the same runs are solved either way)."""
     topo = build_topology(new_cluster)
     flows, link_bytes = _flows(mplan, old_layout, topo,
                                restore_bw=restore_bw)
     if not flows:
         return MigrationCost(0.0, 0.0, 0.0, {}, {}, 0,
-                             overlapped=overlap)
+                             overlapped=overlap,
+                             timeline={"overlapped": overlap, "flows": [],
+                                       "drain": []}
+                             if collect_timeline else None)
 
     # serial: migration alone, contended only among its own flows
     serial = run([SimNode(fid, work, links=links)
@@ -177,9 +221,11 @@ def price_migration(mplan: MigrationPlan, old_layout: PlanLayout,
     can_overlap = overlap and old_strategy is not None \
         and old_cluster is not None and layers is not None
     if not can_overlap:
+        tl = _timeline(flows, serial, (), {}, False) \
+            if collect_timeline else None
         return MigrationCost(serial.makespan, serial.makespan, 0.0,
                              link_bytes, link_seconds, len(flows),
-                             overlapped=False)
+                             overlapped=False, timeline=tl)
 
     drain_nodes, release = _drain_nodes(old_strategy, old_cluster, layers)
     baseline = run(drain_nodes)
@@ -189,6 +235,8 @@ def price_migration(mplan: MigrationPlan, old_layout: PlanLayout,
         combined.append(SimNode(fid, work, deps=deps, links=links))
     full = run(combined)
     extra = max(0.0, full.makespan - baseline.makespan)
+    tl = _timeline(flows, full, drain_nodes, release, True) \
+        if collect_timeline else None
     return MigrationCost(serial.makespan, extra, baseline.makespan,
                          link_bytes, link_seconds, len(flows),
-                         overlapped=True)
+                         overlapped=True, timeline=tl)

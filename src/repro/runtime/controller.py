@@ -205,6 +205,10 @@ class ElasticController:
         self._last_search_step = -(1 << 30)
         self._last_restart_try = -(1 << 30)
         self._last_plan_error: Optional[str] = None
+        # observability (record-only): a repro.obs.DriftLedger the facade
+        # wires when HarpConfig.obs is set — it observes the same telemetry
+        # this controller acts on but never alters a decision
+        self.drift_ledger = None
 
     # ------------------------------------------------------------------
     # planning (with persistent plan cache + warm profile tables)
@@ -489,6 +493,8 @@ class ElasticController:
             self.plan_cluster, self.strategy,
             StepObservation(step, step_time,
                             list(stage_times) if stage_times else None))
+        if self.drift_ledger is not None:
+            self.drift_ledger.observe_step(step, step_time, stage_times)
         self._last_observed_step = step
         drift = self.telemetry.drift(self.cluster)
         if drift <= self.cfg.drift_threshold:
@@ -849,6 +855,14 @@ class ElasticController:
             self.strategy = adopted
             self.plan_cluster = plan_cluster if plan_cluster is not None \
                 else new_cluster
+            if self.drift_ledger is not None:
+                # the adopted strategy's estimate is the new prediction to
+                # hold to account; old-plan samples don't indict it
+                self.drift_ledger.register_plan(
+                    {"makespan_s": adopted.est_step_time},
+                    stage_pools={
+                        i: self.plan_cluster.subclusters[st.cluster_idx].name
+                        for i, st in enumerate(adopted.stages)})
         if pools_changed:
             self._replan_serving(new_cluster, decision)
         self.decisions.append(decision)

@@ -183,6 +183,9 @@ class ReplayResult:
     stalled_steps: int = 0
     sim_memo_hits: int = 0      # pipesim-memo traffic across all replans:
     sim_memo_misses: int = 0    # hits/misses summed over `decisions`
+    metrics: Dict = field(default_factory=dict)
+    # obs.MetricsRegistry snapshot of this run (counters / gauges /
+    # histograms — tokens, stalls, per-action decision counts, downtime)
 
     @property
     def cache_served_replans(self) -> int:
@@ -246,7 +249,8 @@ def run_replay(trace: EventTrace, n_steps: int, *,
                plan_cluster: Optional[HeteroCluster] = None,
                layers: Optional[Sequence[Layer]] = None,
                no_overlap: bool = False,
-               feed_telemetry: bool = True) -> ReplayResult:
+               feed_telemetry: bool = True,
+               sink=None) -> ReplayResult:
     """Replay ``trace`` over ``n_steps`` training steps.
 
     Elastic mode (``controller`` given): events are routed through
@@ -255,6 +259,11 @@ def run_replay(trace: EventTrace, n_steps: int, *,
     fed back as telemetry.  Static mode (``strategy`` given): the plan never
     changes; steps whose plan does not fit the fleet earn zero tokens and
     burn the last known step time waiting (checkpoint-restart baseline).
+
+    ``sink`` (an ``obs.RunLog`` or anything with ``emit(kind, t, **f)``)
+    receives one ``step`` event per step and one ``decision`` event per
+    controller decision, stamped with the replay's own wall clock — the
+    sim-clock-only invariant of ``repro.obs.sink``.
     """
     elastic = controller is not None
     if elastic:
@@ -275,6 +284,19 @@ def run_replay(trace: EventTrace, n_steps: int, *,
     last_step_time = (controller.strategy if elastic else strategy).est_step_time
     sim_cache: Dict = {}
 
+    def _log_decision(step: int, d) -> None:
+        if sink is not None:
+            sink.emit("decision", wall, step=step, action=d.action,
+                      reason=d.reason, downtime_s=d.downtime_s,
+                      search_time_s=d.search_time_s,
+                      migration_s=d.migration_s, coalesced=d.coalesced)
+
+    def _log_sample(s: ReplaySample) -> None:
+        if sink is not None:
+            sink.emit("step", s.wall_s, step=s.step,
+                      step_time_s=s.step_time_s, tokens=s.tokens,
+                      events=s.events, decision=s.decision)
+
     for step in range(n_steps):
         evs = trace.at(step)
         ev_names = [e.describe() for e in evs]
@@ -284,6 +306,7 @@ def run_replay(trace: EventTrace, n_steps: int, *,
                 d = controller.handle(ev, step=step)
                 decisions.append(d)
                 wall += d.downtime_s
+                _log_decision(step, d)
                 decision_str = d.action if decision_str is None \
                     else f"{decision_str},{d.action}"
             else:
@@ -294,6 +317,7 @@ def run_replay(trace: EventTrace, n_steps: int, *,
             if d is not None:
                 decisions.append(d)
                 wall += d.downtime_s
+                _log_decision(step, d)
                 decision_str = d.action if decision_str is None \
                     else f"{decision_str},{d.action}"
 
@@ -307,6 +331,7 @@ def run_replay(trace: EventTrace, n_steps: int, *,
                 wall += last_step_time
                 samples.append(ReplaySample(step, wall, last_step_time, 0,
                                             ev_names, decision_str))
+                _log_sample(samples[-1])
                 continue
         else:
             strat, pcl = strategy, plan_cluster
@@ -326,6 +351,7 @@ def run_replay(trace: EventTrace, n_steps: int, *,
             wall += last_step_time
             samples.append(ReplaySample(step, wall, last_step_time, 0,
                                         ev_names, decision_str))
+            _log_sample(samples[-1])
             continue
 
         wall += makespan
@@ -334,14 +360,30 @@ def run_replay(trace: EventTrace, n_steps: int, *,
         tokens_total += tok
         samples.append(ReplaySample(step, wall, makespan, tok,
                                     ev_names, decision_str))
+        _log_sample(samples[-1])
         if elastic and feed_telemetry:
             d = controller.on_step_time(step, makespan)
             if d is not None:
                 decisions.append(d)
                 wall += d.downtime_s
+                _log_decision(step, d)
+
+    memo_hits = sum(getattr(d, "sim_memo_hits", 0) for d in decisions)
+    memo_misses = sum(getattr(d, "sim_memo_misses", 0) for d in decisions)
+
+    # deterministic metrics digest of the run (obs.metrics snapshot shape)
+    from repro.obs.metrics import MetricsRegistry, record_decision
+    reg = MetricsRegistry()
+    reg.inc("replay.tokens", tokens_total)
+    reg.inc("replay.stalled_steps", stalled_steps)
+    reg.gauge("replay.steps", n_steps)
+    reg.gauge("replay.wall_s", wall)
+    reg.gauge("replay.sim_memo_hits", memo_hits)
+    reg.gauge("replay.sim_memo_misses", memo_misses)
+    for d in decisions:
+        record_decision(d, reg)
 
     return ReplayResult(
         samples, tokens_total, wall, decisions, stalled_steps,
-        sim_memo_hits=sum(getattr(d, "sim_memo_hits", 0) for d in decisions),
-        sim_memo_misses=sum(getattr(d, "sim_memo_misses", 0)
-                            for d in decisions))
+        sim_memo_hits=memo_hits, sim_memo_misses=memo_misses,
+        metrics=reg.snapshot())

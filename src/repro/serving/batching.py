@@ -165,8 +165,15 @@ def _decode_step_seconds(plan: ServePlan, pool: _Pool) -> float:
     return max(t_mem, t_flops) + plan.step_overhead_s
 
 
-def simulate_trace(plan: ServePlan, trace: ServeTrace) -> ServeSimResult:
-    """Replay ``trace`` against ``plan``; deterministic."""
+def simulate_trace(plan: ServePlan, trace: ServeTrace,
+                   recorder: Optional[List] = None) -> ServeSimResult:
+    """Replay ``trace`` against ``plan``; deterministic.
+
+    ``recorder`` (a list, appended in dispatch order) captures every
+    prefill chunk and decode step as
+    ``(t, dur, pool_idx, pool_name, kind, n)`` tuples — the raw material
+    ``obs.trace_from_serve`` turns into per-pool Chrome-trace lanes.
+    ``recorder=None`` (the default) changes nothing."""
     pools = [_Pool(i, spec) for i, spec in enumerate(plan.pools)]
     prefill_pools = [p for p in pools if p.spec.can_prefill]
     decode_pools = [p for p in pools if p.spec.can_decode]
@@ -259,12 +266,18 @@ def simulate_trace(plan: ServePlan, trace: ServeTrace) -> ServeSimResult:
             pool.busy = True
             pool.last_prefill = True
             pool.busy_prefill_s += dur
+            if recorder is not None:
+                recorder.append((t, dur, pool.idx, pool.spec.name,
+                                 "prefill", chunk))
             push(t + dur, "chunk", (pool.idx, s, chunk))
         elif has_decode:
             dur = _decode_step_seconds(plan, pool)
             pool.busy = True
             pool.last_prefill = False
             pool.busy_decode_s += dur
+            if recorder is not None:
+                recorder.append((t, dur, pool.idx, pool.spec.name,
+                                 "decode", len(pool.active)))
             push(t + dur, "step", (pool.idx, list(pool.active)))
 
     # -- event handlers ------------------------------------------------------

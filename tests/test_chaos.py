@@ -568,17 +568,19 @@ def test_off_state_decision_sequence_bit_identical_to_pr8():
 
 
 def test_off_state_artifact_additions_are_pinned():
-    """Schema v7 adds exactly two knobs to the artifact; with chaos off
-    they carry exactly their off values (the diff vs v6 is pinned)."""
+    """Schema v7 added exactly two knobs to the artifact (v8 adds the null
+    ``obs`` key on top); with chaos and obs off they carry exactly their
+    off values (the diff vs v6 is pinned)."""
     from repro import api
     from repro.api.artifacts import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 7
+    assert SCHEMA_VERSION == 8
     cfg = api.HarpConfig(seq_len=256, global_batch=32,
                          planner=PlannerConfig(granularity=8,
                                                n_microbatches=8,
                                                min_submesh_devices=2))
     d = cfg.to_dict()
     assert d["chaos"] is None
+    assert d["obs"] is None          # the v8 addition, off by default
     assert d["planner"]["search"]["deadline_s"] == 0.0
     e = d["elastic"]
     assert e is None                 # elastic block unchanged when unset
